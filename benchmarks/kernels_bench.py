@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: us/call for the Pallas kernels (interpret mode on
+CPU — wall numbers are NOT TPU perf, they validate dispatch overhead and
+give the jnp-reference ratio) plus the jnp oracle for comparison.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1024, 1024))
+    code = jnp.asarray(1)
+    rows = []
+    rows.append(("qdq_cast_pallas_1M", _time(ops.qdq_cast, x, code),
+                 "interpret-mode"))
+    rows.append(("qdq_cast_ref_1M",
+                 _time(jax.jit(ref.qdq_cast_ref), x, code), "jnp oracle"))
+    rows.append(("grad_stats_pallas_1M", _time(ops.grad_stats, x),
+                 "interpret-mode"))
+    rows.append(("grad_stats_ref_1M",
+                 _time(jax.jit(ref.grad_stats_ref), x), "jnp oracle"))
+    B, S, H, K, D = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    fa = lambda: ops.flash_attention(q, k, v, causal=True)
+    rows.append(("flash_attn_pallas_512", _time(lambda *_: fa()),
+                 "interpret-mode"))
+    fr = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    rows.append(("flash_attn_ref_512", _time(fr, q, k, v), "jnp oracle"))
+    for name, us, derived in rows:
+        print(f"kernels:{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""§Roofline table: reads the dry-run artifacts and emits, per
+(arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and HBM fit.
+
+CSV: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,
+     useful_ratio,hbm_gb,fits
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def rows(mesh: str = None):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(fn))
+        if d.get("status") != "ok":
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        out.append(d)
+    return out
+
+
+def main():
+    print("roofline:arch,shape,mesh,profile,compute_s,memory_s,collective_s,"
+          "dominant,useful_ratio,hbm_gb,fits")
+    for d in rows():
+        print("roofline:" + ",".join([
+            d["arch"], d["shape"], d["mesh"], d.get("profile", "baseline"),
+            f"{d['compute_s']:.4g}", f"{d['memory_s']:.4g}",
+            f"{d['collective_s']:.4g}", d["dominant"],
+            f"{(d.get('useful_flop_ratio') or 0):.3f}",
+            f"{d['hbm_per_device_bytes'] / 1e9:.2f}",
+            str(d["fits_hbm"])]))
+    skipped = [json.load(open(fn)) for fn in
+               sorted(glob.glob(os.path.join(ART, "*.json")))]
+    nsk = sum(1 for d in skipped if d.get("status") == "skipped")
+    print(f"roofline:# {len(rows())} cells ok, {nsk} skipped by rule")
+
+
+if __name__ == "__main__":
+    main()

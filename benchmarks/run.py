@@ -1,0 +1,43 @@
+"""Benchmark harness — one section per paper table/figure plus the roofline
+table derived from the multi-pod dry-run. Prints ``name,value,derived`` CSV
+lines (prefixed per table).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps for CI-speed runs")
+    ap.add_argument("--skip-vision", action="store_true",
+                    help="only kernel + roofline sections")
+    args = ap.parse_args()
+    steps_t1 = 30 if args.quick else 60
+    steps_t2 = 30 if args.quick else 45
+
+    from benchmarks import kernels_bench, roofline_table
+    print("# kernel microbenchmarks (interpret mode on CPU)")
+    kernels_bench.main()
+    sys.stdout.flush()
+
+    print("# roofline table (from dry-run artifacts; run "
+          "`python -m repro.launch.dryrun --all --mesh both` to refresh)")
+    roofline_table.main()
+    sys.stdout.flush()
+
+    if not args.skip_vision:
+        from benchmarks import table1, table2
+        print("# paper Table 1 (FP32 / AMP / Tri-Accel)")
+        table1.main(steps=steps_t1)
+        sys.stdout.flush()
+        print("# paper Table 2 (memory ablation)")
+        table2.main(steps=steps_t2)
+
+
+if __name__ == "__main__":
+    main()

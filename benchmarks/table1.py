@@ -1,0 +1,42 @@
+"""Paper Table 1: Performance/Efficiency across architectures and methods.
+
+CSV: dataset,arch,method,acc,wall_s_per_epoch,model_time,mem_gb,eff_score
+"""
+from __future__ import annotations
+
+from repro.train.paper_harness import run_method
+
+ARCHS = ("resnet18", "efficientnet_b0")
+METHODS = ("fp32", "amp", "triaccel")
+
+
+def run(steps: int = 80, seeds=(0,), archs=ARCHS, num_classes: int = 10):
+    rows = []
+    name = "cifar10-like" if num_classes == 10 else "cifar100-like"
+    for arch in archs:
+        for method in METHODS:
+            accs, walls, mts, mems, effs = [], [], [], [], []
+            for seed in seeds:
+                r = run_method(method, arch=arch, steps=steps, seed=seed,
+                               num_classes=num_classes)
+                accs.append(r.accuracy)
+                walls.append(r.wall_time_s)
+                mts.append(r.model_time_s)
+                mems.append(r.model_mem_gb)
+                effs.append(r.eff_score)
+            n = len(seeds)
+            rows.append((name, arch, method, sum(accs) / n, sum(walls) / n,
+                         sum(mts) / n, sum(mems) / n, sum(effs) / n))
+    return rows
+
+
+def main(steps: int = 80):
+    print("table1:dataset,arch,method,acc,wall_s_per_epoch,model_time,"
+          "mem_gb,eff_score")
+    for row in run(steps=steps):
+        print("table1:" + ",".join(
+            x if isinstance(x, str) else f"{x:.3f}" for x in row))
+
+
+if __name__ == "__main__":
+    main()

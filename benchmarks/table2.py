@@ -1,0 +1,36 @@
+"""Paper Table 2: ablation of memory-optimization components (CIFAR-10).
+
+Rows: standard -> +dynamic batch -> +dynamic precision -> full Tri-Accel,
+reporting modeled peak memory and the reduction vs standard.
+
+CSV: arch,configuration,mem_gb,reduction_pct
+"""
+from __future__ import annotations
+
+from repro.train.paper_harness import run_method
+
+CONFIGS = (("standard", "fp32"), ("dyn_batch", "batch_only"),
+           ("dyn_precision", "prec_only"), ("full_triaccel", "triaccel"))
+
+
+def run(steps: int = 60, archs=("resnet18", "efficientnet_b0"), seed=0):
+    rows = []
+    for arch in archs:
+        base_mem = None
+        for label, method in CONFIGS:
+            r = run_method(method, arch=arch, steps=steps, seed=seed)
+            if base_mem is None:
+                base_mem = r.model_mem_gb
+            red = 100.0 * (1.0 - r.model_mem_gb / base_mem)
+            rows.append((arch, label, r.model_mem_gb, red))
+    return rows
+
+
+def main(steps: int = 60):
+    print("table2:arch,configuration,mem_gb,reduction_pct")
+    for arch, label, mem, red in run(steps=steps):
+        print(f"table2:{arch},{label},{mem:.3f},{red:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving example: prefill + batched greedy decode with a KV cache,
+exercising the same serve_step the decode_32k / long_500k dry-run cells
+lower (ring caches for windowed layers, compressed MLA caches, SSM states).
+
+    PYTHONPATH=src python examples/elastic_serve.py --arch recurrentgemma-2b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecConfig, encdec_init, encdec_init_cache
+from repro.models.lm import lm_init, lm_init_cache
+from repro.models.registry import get_arch_module
+from repro.nn.module import split_params
+from repro.train.serve import make_decode_fn, make_prefill_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch_module(args.arch).reduced_config()
+    key = jax.random.PRNGKey(0)
+    init_fn = encdec_init if isinstance(cfg, EncDecConfig) else lm_init
+    params, _ = split_params(init_fn(key, cfg))
+    params = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+    B, P = args.batch, args.prompt_len
+    total = P + args.gen + 8
+    if isinstance(cfg, EncDecConfig):
+        batch = {"frontend_embeds": jax.random.normal(key, (B, P, cfg.frontend_dim)),
+                 "tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
+        caches = encdec_init_cache(cfg, B, total, enc_len=P)
+        idx0 = P
+    else:
+        batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
+        caches = lm_init_cache(cfg, B, total)
+        idx0 = 0
+
+    prefill = jax.jit(make_prefill_fn(cfg))
+    decode = jax.jit(make_decode_fn(cfg), donate_argnums=(1,))
+
+    tok, _ = prefill(params, batch)
+    # replay prompt through the decode cache, then generate greedily
+    toks = [tok]
+    t0 = time.time()
+    if not isinstance(cfg, EncDecConfig):
+        for i in range(P):
+            tok, caches = decode(params, caches, batch["tokens"][:, i],
+                                 jnp.asarray(i, jnp.int32))
+    for i in range(args.gen):
+        tok, caches = decode(params, caches, tok,
+                             jnp.asarray(idx0 + P + i, jnp.int32)
+                             if isinstance(cfg, EncDecConfig)
+                             else jnp.asarray(P + i, jnp.int32))
+        toks.append(tok)
+    dt = time.time() - t0
+    out = jnp.stack(toks, axis=1)
+    print(f"arch={args.arch} generated {out.shape} tokens "
+          f"({args.gen * B / dt:.1f} tok/s incl. replay)")
+    print("sample:", list(map(int, out[0][:16])))
+
+
+if __name__ == "__main__":
+    main()

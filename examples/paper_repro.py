@@ -1,0 +1,35 @@
+"""Paper reproduction (Table 1 behavior): FP32 vs AMP-static vs Tri-Accel
+on ResNet-18 and EfficientNet-B0, CIFAR-class synthetic data.
+
+    PYTHONPATH=src python examples/paper_repro.py [--steps 60] [--arch resnet18]
+
+Validated claims (see EXPERIMENTS.md §Repro): Tri-Accel accuracy >= AMP >=
+FP32-ish ordering, modeled memory FP32 > AMP > Tri-Accel, efficiency score
+ordering Tri-Accel > AMP > FP32, and adaptive behavior (codes/batch evolve).
+"""
+import argparse
+
+from repro.train.paper_harness import run_method
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet18",
+                    choices=["resnet18", "efficientnet_b0"])
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"{'method':>10} {'acc%':>6} {'wall s/ep':>10} {'model-t':>8} "
+          f"{'mem GB':>7} {'eff':>7} {'B_end':>6} {'lo/hi codes':>12}")
+    for method in ("fp32", "amp", "triaccel"):
+        r = run_method(method, arch=args.arch, steps=args.steps,
+                       seed=args.seed)
+        print(f"{r.method:>10} {r.accuracy:6.1f} {r.wall_time_s:10.1f} "
+              f"{r.model_time_s:8.2f} {r.model_mem_gb:7.3f} "
+              f"{r.eff_score:7.1f} {r.final_batch:6d} "
+              f"{r.frac_low:5.2f}/{r.frac_fp32:4.2f}")
+
+
+if __name__ == "__main__":
+    main()

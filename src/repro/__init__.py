@@ -1,0 +1,4 @@
+"""Tri-Accel on TPU: curvature-aware, precision-adaptive, memory-elastic
+training in JAX. See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,147 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, mesh-agnostic.
+
+Layout (one directory per step):
+
+    <dir>/step_000001230/
+        manifest.json        # keypath -> {file, shape, dtype}
+        000.npy, 001.npy ...
+    <dir>/step_000001230.COMMITTED   # marker written LAST (atomicity)
+
+Leaves are saved as host numpy in a mesh-agnostic layout, so a restart may
+re-shard onto any mesh size (elastic scaling): ``restore_checkpoint`` takes
+optional shardings and device_puts each leaf. Writes go to a temp dir that
+is renamed into place; the COMMITTED marker makes partially-written
+checkpoints invisible to ``latest_step``. ``AsyncCheckpointer`` runs saves
+on a background thread (device->host copy happens synchronously, disk I/O
+async) and is used by the trainer together with a SIGTERM preemption hook.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(directory: str, step: int, state: Any, keep: int = 3):
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:012d}"
+    tmp = os.path.join(directory, f".tmp_{name}")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = jax.tree_util.tree_leaves_with_path(state)
+    manifest = {}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = f"{i:04d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest[_keystr(path)] = {"file": fn, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(final + ".COMMITTED", "w") as f:
+        f.write(str(step))
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(_committed_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        name = f"step_{s:012d}"
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+        try:
+            os.remove(os.path.join(directory, name + ".COMMITTED"))
+        except OSError:
+            pass
+
+
+def _committed_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for fn in os.listdir(directory):
+        if fn.endswith(".COMMITTED"):
+            try:
+                out.append(int(fn[len("step_"):-len(".COMMITTED")]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _committed_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore into ``template``'s tree structure. ``shardings`` (optional,
+    same structure or a single sharding) re-shards each leaf on load —
+    checkpoints written on any mesh restore onto any other (elastic)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    paths_leaves = jax.tree_util.tree_leaves_with_path(template)
+    treedef = jax.tree_util.tree_structure(template)
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+        if len(sh_leaves) == 1:
+            sh_leaves = sh_leaves * len(paths_leaves)
+    out = []
+    for i, (path, leaf) in enumerate(paths_leaves):
+        meta = manifest[_keystr(path)]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if sh_leaves is not None:
+            out.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, state: Any, block: bool = False):
+        self.wait()
+        # device->host copy happens here (synchronously, consistent snapshot)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _run():
+            save_checkpoint(self.directory, step, host_state, self.keep)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None

@@ -1,0 +1,1 @@
+from repro.configs.base import SHAPES, Shape, input_specs_for, skip_reason

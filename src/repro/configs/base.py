@@ -1,0 +1,89 @@
+"""Shared shape definitions + input_specs builders for all architectures.
+
+Every assigned architecture is paired with the same four shapes:
+
+    train_4k     seq=4096   global_batch=256  -> train_step
+    prefill_32k  seq=32768  global_batch=32   -> prefill_step
+    decode_32k   seq=32768  global_batch=128  -> serve_step (1 token, KV=seq)
+    long_500k    seq=524288 global_batch=1    -> serve_step; sub-quadratic only
+
+``input_specs`` return jax.ShapeDtypeStruct stand-ins only — nothing is
+allocated; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LMConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# number of stub frontend positions (vlm patches) prepended for qwen2-vl
+VLM_PATCHES = 256
+VLM_PATCH_DIM = 1176            # qwen2-vl: 14*14*2*3 raw patch dim
+AUDIO_FRAME_DIM = 160           # seamless: fbank-ish frame features
+ENCDEC_CROSS_LEN = 1536         # encoder length cached for decode shapes
+
+
+def lm_input_specs(cfg: LMConfig, shape: Shape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": SDS((B, S), jnp.int32)}
+    else:  # decode: one token against a KV cache of length S
+        specs = {"token": SDS((B,), jnp.int32)}
+    if cfg.mrope and shape.kind != "decode":
+        specs["mrope_positions"] = SDS((3, B, S), jnp.int32)
+    if cfg.frontend_dim and shape.kind != "decode":
+        specs["frontend_embeds"] = SDS((B, VLM_PATCHES, cfg.frontend_dim),
+                                       jnp.bfloat16)
+    return specs
+
+
+def encdec_input_specs(cfg: EncDecConfig, shape: Shape) -> Dict[str, Any]:
+    """enc-dec split: seq_len is divided evenly between encoder frames and
+    decoder tokens for train/prefill; decode shapes use a full-length decoder
+    self-cache and an ENCDEC_CROSS_LEN cross cache (see configs/seamless...)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"frontend_embeds": SDS((B, S // 2, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": SDS((B, S // 2), jnp.int32),
+                "labels": SDS((B, S // 2), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"frontend_embeds": SDS((B, S // 2, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": SDS((B, S // 2), jnp.int32)}
+    return {"token": SDS((B,), jnp.int32)}
+
+
+def input_specs_for(cfg, shape_name: str) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    if isinstance(cfg, EncDecConfig):
+        return encdec_input_specs(cfg, shape)
+    return lm_input_specs(cfg, shape)
+
+
+def skip_reason(cfg, shape_name: str, skip_map: Dict[str, str]) -> Optional[str]:
+    return skip_map.get(shape_name)

@@ -1,0 +1,18 @@
+"""efficientnet_b0 [paper]: the paper's second testbed (CIFAR-10/100).
+
+The paper resizes CIFAR to 224x224 for pretrained-input parity; training
+from scratch on CPU we keep 32x32 with a stride-1 stem (standard CIFAR
+adaptation) — noted in EXPERIMENTS.md.
+"""
+from repro.models.vision import VisionConfig
+
+SKIP_SHAPES = {s: "vision model: LM shapes not applicable"
+               for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")}
+
+
+def config() -> VisionConfig:
+    return VisionConfig(name="efficientnet_b0", num_classes=10, stem_stride=1)
+
+
+def reduced_config() -> VisionConfig:
+    return config()

@@ -1,0 +1,30 @@
+"""minitron-4b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000 — pruned nemotron [arXiv:2407.14679].
+
+Nemotron-family: squared-ReLU, non-gated MLP, untied embeddings.
+"""
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: excluded per "
+                            "assignment rule (quadratic attention)"}
+
+
+def _make(L, d, H, kv, hd, ff, vocab, impl="chunked"):
+    attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
+                      rope_theta=10000.0, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),
+                        d_model=d, d_ff=ff, attn=attn, act="relu2", gated=False)
+    return LMConfig(name="minitron-4b", family="dense", vocab_size=vocab,
+                    stack=stack, tie_embeddings=False)
+
+
+def config() -> LMConfig:
+    return _make(32, 3072, 24, 8, 128, 9216, 256000)
+
+
+def reduced_config() -> LMConfig:
+    return _make(3, 64, 4, 2, 16, 160, 512, impl="naive")
+
+DRYRUN_ACCUM = {"train_4k": 2}

@@ -1,0 +1,36 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+Backbone only per the assignment: the vision frontend is a STUB —
+``input_specs()`` provides precomputed patch embeddings (B, 256, 1176) that
+are linearly projected and spliced into the leading token slots; M-RoPE
+rotates frequency sections (16, 24, 24) by (t, h, w) position streams.
+"""
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: excluded per "
+                            "assignment rule (quadratic attention)"}
+
+MROPE_SECTIONS = (16, 24, 24)
+
+
+def _make(L, d, H, kv, hd, ff, vocab, impl="chunked", sections=MROPE_SECTIONS):
+    attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
+                      rope_theta=1e6, mrope_sections=sections, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),
+                        d_model=d, d_ff=ff, attn=attn, act="silu")
+    return LMConfig(name="qwen2-vl-72b", family="vlm", vocab_size=vocab,
+                    stack=stack, tie_embeddings=False, mrope=True,
+                    frontend_dim=1176)
+
+
+def config() -> LMConfig:
+    return _make(80, 8192, 64, 8, 128, 29568, 152064)
+
+
+def reduced_config() -> LMConfig:
+    return _make(3, 64, 4, 2, 16, 192, 512, impl="naive", sections=(4, 2, 2))
+
+DRYRUN_ACCUM = {"train_4k": 8}

@@ -1,0 +1,41 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attention, pattern (rec, rec, attn)
+[arXiv:2402.19427 Griffin].
+
+head_dim=256, lru_width=2560, sliding window 2048. 26 layers = 8 full
+(rglru, rglru, gqa-local) periods + 2 trailing rglru blocks. long_500k RUNS:
+recurrent state is O(1) and the attention cache is window-bounded.
+"""
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+from repro.nn.rglru import RGLRUConfig
+
+SKIP_SHAPES = {}
+
+WINDOW = 2048
+
+
+def _make(periods, tail, d, H, kv, hd, ff, lru_w, vocab, window,
+          impl="chunked", conv_width=4):
+    attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
+                      rope_theta=10000.0, impl=impl)
+    rg = RGLRUConfig(d_model=d, lru_width=lru_w, conv_width=conv_width)
+    r = BlockDef("rglru", "dense")
+    a = BlockDef("gqa", "dense", window=window)
+    segments = [((r, r, a), periods)]
+    if tail:
+        segments.append(((r,) * tail, 1))
+    stack = StackConfig(segments=tuple(segments), d_model=d, d_ff=ff,
+                        attn=attn, rglru=rg, act="gelu_tanh")
+    return LMConfig(name="recurrentgemma-2b", family="hybrid",
+                    vocab_size=vocab, stack=stack, tie_embeddings=True,
+                    scale_embed=True)
+
+
+def config() -> LMConfig:
+    return _make(8, 2, 2560, 10, 1, 256, 7680, 2560, 256000, WINDOW)
+
+
+def reduced_config() -> LMConfig:
+    return _make(1, 1, 64, 4, 1, 16, 128, 64, 512, window=8, impl="naive")

@@ -1,0 +1,13 @@
+"""resnet18 [paper]: the paper's primary testbed (CIFAR-10/100)."""
+from repro.models.vision import VisionConfig
+
+SKIP_SHAPES = {s: "vision model: LM shapes not applicable"
+               for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")}
+
+
+def config() -> VisionConfig:
+    return VisionConfig(name="resnet18", num_classes=10, stem_stride=1)
+
+
+def reduced_config() -> VisionConfig:
+    return config()  # already CIFAR-scale

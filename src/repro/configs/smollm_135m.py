@@ -1,0 +1,28 @@
+"""smollm-135m [dense]: 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+
+llama-architecture small model [hf:HuggingFaceTB/SmolLM-135M]. This is also
+the ~100M end-to-end training example (examples/train_lm.py).
+"""
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (quadratic prefill, "
+                            "full-length KV): excluded per assignment rule"}
+
+
+def _make(L, d, H, kv, hd, ff, vocab, impl="chunked"):
+    attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
+                      rope_theta=10000.0, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),
+                        d_model=d, d_ff=ff, attn=attn, act="silu")
+    return LMConfig(name="smollm-135m", family="dense", vocab_size=vocab,
+                    stack=stack, tie_embeddings=True)
+
+
+def config() -> LMConfig:
+    return _make(30, 576, 9, 3, 64, 1536, 49152)
+
+
+def reduced_config() -> LMConfig:
+    return _make(4, 64, 4, 2, 16, 128, 512, impl="naive")

@@ -1,0 +1,29 @@
+"""stablelm-1.6b [dense]: 24L d_model=2048 32H (GQA kv=32, i.e. MHA)
+d_ff=5632 vocab=100352 [hf:stabilityai/stablelm-2-1_6b].
+
+Deviation noted in DESIGN.md: RMSNorm instead of LayerNorm-with-bias and
+full (not 25%-partial) rotary, to share the uniform trunk.
+"""
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: excluded per "
+                            "assignment rule (quadratic attention)"}
+
+
+def _make(L, d, H, kv, hd, ff, vocab, impl="chunked"):
+    attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
+                      rope_theta=10000.0, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),
+                        d_model=d, d_ff=ff, attn=attn, act="silu")
+    return LMConfig(name="stablelm-1.6b", family="dense", vocab_size=vocab,
+                    stack=stack, tie_embeddings=False)
+
+
+def config() -> LMConfig:
+    return _make(24, 2048, 32, 32, 64, 5632, 100352)
+
+
+def reduced_config() -> LMConfig:
+    return _make(3, 64, 4, 4, 16, 128, 512, impl="naive")

@@ -1,0 +1,13 @@
+"""Tri-Accel: the paper's primary contribution.
+
+precision.py    — §3.1 precision-adaptive updates (variance EMA -> codes, QDQ)
+curvature.py    — §3.2 sparse second-order signals (power iter / Hutchinson)
+batch_scaler.py — §3.3 memory-elastic batch scaling (memory model + rungs)
+controller.py   — §3.4 unified control loop (ControlState)
+"""
+from repro.core.precision import (LADDERS, TriAccelConfig, codes_from_stats,
+                                  make_qdq_fn, qdq)
+from repro.core.controller import (ControlState, init_control, lr_scales,
+                                   update_control)
+from repro.core.batch_scaler import BatchScaler, MemoryModel
+from repro.core import curvature

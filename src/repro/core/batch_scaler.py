@@ -1,0 +1,117 @@
+"""Tri-Accel §3.3 — Memory-Elastic Batch Scaling, TPU realization.
+
+The paper polls ``cuda.memory_allocated`` and nudges the batch size by
+±delta. On TPU there is no cheap in-step memory query and a new batch shape
+means a new executable, so the controller is re-based on two pieces:
+
+  * ``MemoryModel`` — an analytic per-device HBM estimate
+    (params + optimizer + gradient + activation(tokens, precision codes)),
+    cross-checked/calibrated against ``compiled.memory_analysis()``;
+  * ``BatchScaler`` — the paper's hysteresis law over a discrete rung ladder
+    of per-device microbatch sizes whose step functions are AOT-compiled
+    once, so a rung change is a zero-stall dictionary lookup.
+
+The control law is the paper's:
+    B += delta_up    if mem < rho_low  * cap
+    B -= delta_down  if mem > rho_high * cap
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.precision import TriAccelConfig
+
+# bytes per element of each precision tier (low tier: fp8=1 on tpu, fp16=2 on gpu)
+TIER_BYTES = {"gpu": (2.0, 2.0, 4.0), "tpu": (1.0, 2.0, 4.0)}
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    """Per-device HBM footprint model (bytes)."""
+
+    param_count: float                 # per-device parameters (after sharding)
+    opt_slots: int = 2                 # fp32 master + momentum (SGD-M); 3 for Adam
+    act_bytes_per_token_layer: float = 0.0   # remat-adjusted, tier-1 (bf16)
+    num_layers: int = 1
+    fixed_overhead: float = 256e6
+    calibration: float = 1.0           # fitted against memory_analysis()
+
+    @classmethod
+    def for_transformer(cls, param_count, d_model, num_layers, opt_slots=2,
+                        remat=True):
+        # with block remat only block boundaries are resident:
+        # ~2.5 activations of width d_model per layer per token (bf16 = 2B)
+        act = (2.5 if remat else 14.0) * d_model * 2.0
+        return cls(param_count=param_count, opt_slots=opt_slots,
+                   act_bytes_per_token_layer=act, num_layers=num_layers)
+
+    def param_state_bytes(self) -> float:
+        # bf16 compute copy + fp32 master + opt slots fp32 + bf16 grads
+        return self.param_count * (2.0 + 4.0 + 4.0 * self.opt_slots + 2.0)
+
+    def activation_bytes(self, tokens_per_device: float,
+                         codes=None, ladder: str = "gpu") -> float:
+        scale = 1.0
+        if codes is not None and len(codes) > 0:
+            tiers = TIER_BYTES[ladder]
+            mean_bytes = sum(tiers[int(c)] for c in codes) / len(codes)
+            scale = mean_bytes / 2.0   # relative to bf16 baseline
+        return (self.act_bytes_per_token_layer * self.num_layers *
+                tokens_per_device * scale)
+
+    def total(self, tokens_per_device: float, codes=None,
+              ladder: str = "gpu") -> float:
+        return self.calibration * (
+            self.param_state_bytes()
+            + self.activation_bytes(tokens_per_device, codes, ladder)
+            + self.fixed_overhead)
+
+    def calibrate(self, measured_bytes: float, tokens_per_device: float,
+                  codes=None, ladder: str = "gpu") -> None:
+        est = self.total(tokens_per_device, codes, ladder) / self.calibration
+        if est > 0:
+            self.calibration = measured_bytes / est
+
+
+class BatchScaler:
+    """Discrete-rung realization of the paper's VRAM feedback controller."""
+
+    def __init__(self, rungs: Sequence[int], seq_len: int, model: MemoryModel,
+                 cfg: TriAccelConfig, start_rung: Optional[int] = None):
+        assert list(rungs) == sorted(set(rungs)) and len(rungs) > 0
+        self.rungs = list(rungs)
+        self.seq_len = seq_len
+        self.model = model
+        self.cfg = cfg
+        self.idx = len(rungs) - 1 if start_rung is None else rungs.index(start_rung)
+        # never start on a rung the model says won't fit
+        while self.idx > 0 and self._mem(self.idx) > cfg.rho_high * cfg.mem_cap_bytes:
+            self.idx -= 1
+        self.history: List[Tuple[int, int, float]] = []  # (step, rung, mem)
+
+    @property
+    def microbatch(self) -> int:
+        return self.rungs[self.idx]
+
+    def _mem(self, idx: int, codes=None) -> float:
+        return self.model.total(self.rungs[idx] * self.seq_len, codes,
+                                self.cfg.ladder)
+
+    def observe(self, step: int, codes=None,
+                measured_bytes: Optional[float] = None) -> int:
+        """Apply the paper's hysteresis law; returns the (possibly new) rung."""
+        if not self.cfg.enable_batch:
+            return self.microbatch
+        mem = measured_bytes if measured_bytes is not None \
+            else self._mem(self.idx, codes)
+        cap = self.cfg.mem_cap_bytes
+        if mem < self.cfg.rho_low * cap and self.idx + 1 < len(self.rungs):
+            nxt = min(self.idx + self.cfg.delta_up, len(self.rungs) - 1)
+            # only climb if the model predicts the next rung still fits
+            if self._mem(nxt, codes) <= self.cfg.rho_high * cap:
+                self.idx = nxt
+        elif mem > self.cfg.rho_high * cap and self.idx > 0:
+            self.idx = max(self.idx - self.cfg.delta_down, 0)
+        self.history.append((step, self.microbatch, mem))
+        return self.microbatch

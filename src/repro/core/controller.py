@@ -1,0 +1,86 @@
+"""Tri-Accel §3.4 — the unified control loop.
+
+ControlState is a small replicated pytree (O(L) scalars) carried through
+training. The per-step device-side half (variance EMA, code refresh, loss
+scaling) runs inside the compiled train step; the host-side half (curvature
+refresh every t_curv, batch-rung decisions every t_ctrl) lives in
+repro.train.trainer and only moves O(L) floats across the host boundary.
+
+Closed loop, exactly as the paper wires it:
+  curvature --> precision codes & per-layer lr
+  precision --> modeled memory --> batch rung --> gradient variance --> codes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import (TriAccelConfig, codes_from_stats, ema_update,
+                                  variance_from_moments)
+
+
+class ControlState(NamedTuple):
+    step: jax.Array          # ()
+    var_ema: jax.Array       # (L,) gradient-variance EMA per layer
+    lam: jax.Array           # (L,) curvature estimate per layer
+    codes: jax.Array         # (L,) int32 precision codes (0 low / 1 bf16 / 2 fp32)
+    loss_scale: jax.Array    # () dynamic loss scale (fp16 ladder)
+    good_steps: jax.Array    # () consecutive finite-grad steps
+    ema_init: jax.Array      # () bool-ish: has the EMA been seeded
+
+
+def init_control(num_layers: int, cfg: TriAccelConfig) -> ControlState:
+    return ControlState(
+        step=jnp.zeros((), jnp.int32),
+        var_ema=jnp.zeros((num_layers,), jnp.float32),
+        lam=jnp.zeros((num_layers,), jnp.float32),
+        codes=jnp.ones((num_layers,), jnp.int32),  # start at bf16 tier
+        loss_scale=jnp.asarray(2.0 ** 15 if cfg.ladder == "gpu" else 1.0,
+                               jnp.float32),
+        good_steps=jnp.zeros((), jnp.int32),
+        ema_init=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_control(state: ControlState, moments, cfg: TriAccelConfig,
+                   grads_finite: jax.Array) -> ControlState:
+    """Per-step in-graph update. ``moments`` = (sum, sumsq, count) per layer."""
+    s, ss, cnt = moments
+    var_now = variance_from_moments(s, ss, cnt)
+    seeded = state.ema_init > 0
+    var_ema = jnp.where(seeded,
+                        ema_update(state.var_ema, var_now, cfg.beta), var_now)
+    step = state.step + 1
+    # refresh codes on the control-loop cadence (t_ctrl), as in §3.4
+    new_codes = codes_from_stats(var_ema, state.lam, cfg)
+    codes = jnp.where((step % cfg.t_ctrl) == 0, new_codes, state.codes)
+    # dynamic loss scaling (fp16 ladder only): halve on overflow, double
+    # after 1000 clean steps — standard AMP semantics.
+    if cfg.ladder == "gpu":
+        good = jnp.where(grads_finite, state.good_steps + 1, 0)
+        ls = jnp.where(grads_finite,
+                       jnp.where(good >= 1000, state.loss_scale * 2.0,
+                                 state.loss_scale),
+                       jnp.maximum(state.loss_scale * 0.5, 1.0))
+        ls = jnp.minimum(ls, 2.0 ** 24)
+        good = jnp.where(good >= 1000, 0, good)
+    else:
+        ls, good = state.loss_scale, state.good_steps
+    return ControlState(step=step, var_ema=var_ema, lam=state.lam,
+                        codes=codes, loss_scale=ls, good_steps=good,
+                        ema_init=jnp.ones((), jnp.int32))
+
+
+def with_curvature(state: ControlState, lam: jax.Array) -> ControlState:
+    """Host-side: install a fresh curvature estimate (every t_curv steps)."""
+    return state._replace(lam=lam.astype(jnp.float32))
+
+
+def lr_scales(state: ControlState, cfg: TriAccelConfig) -> jax.Array:
+    """§3.2 step-size scaling: eta_l = eta0 / (1 + alpha * lam_l)."""
+    if not cfg.enable_curvature:
+        return jnp.ones_like(state.lam)
+    return 1.0 / (1.0 + cfg.alpha * jnp.maximum(state.lam, 0.0))

@@ -1,0 +1,175 @@
+"""Per-layer parameter grouping — maps model param trees to the (L,) layer
+vectors the Tri-Accel controller operates on.
+
+For LM stacks, segment parameters are stacked (repeat, ...) so per-layer
+reductions keep the leading axis: the entire segment's statistics come out
+of one vectorized pass (the grad_stats Pallas kernel fuses exactly this).
+
+Layer order for LMs: all stack layers in network order, then one pseudo-layer
+for the embedding group, then one for the head (final norm / unembed).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.blocks import StackConfig
+
+
+def _leaf_sums(tree, layer_axis: bool, square: bool):
+    leaves = [l for l in jax.tree.leaves(tree)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.zeros(()), 0.0
+    def red(l):
+        x = l.astype(jnp.float32)
+        if square:
+            x = jnp.square(x)
+        axes = tuple(range(1, l.ndim)) if layer_axis else None
+        return jnp.sum(x, axis=axes)
+    s = sum(red(l) for l in leaves)
+    cnt = (sum(l.size / l.shape[0] for l in leaves) if layer_axis
+           else float(sum(l.size for l in leaves)))
+    return s, cnt
+
+
+class LayerGrouping:
+    """Maps a params-shaped tree to per-layer (L,) sums / means."""
+
+    def __init__(self, num_layers: int, sums_fn: Callable, counts: jnp.ndarray,
+                 names: List[str], broadcast_fn: Callable = None):
+        self.num_layers = num_layers
+        self._sums_fn = sums_fn
+        self.counts = counts                  # (L,) parameter counts
+        self.names = names
+        self._broadcast_fn = broadcast_fn
+
+    def sums(self, tree, square: bool = False) -> jax.Array:
+        return self._sums_fn(tree, square)
+
+    def broadcast(self, vec: jax.Array, tree):
+        """Expand a per-layer (L,) vector to a per-leaf multiplier tree
+        (Tri-Accel's curvature-scaled learning rates)."""
+        if self._broadcast_fn is None:
+            raise NotImplementedError
+        return self._broadcast_fn(vec, tree)
+
+    def moments(self, tree) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(sum, sum_sq, count) per layer — feeds the variance EMA."""
+        return self.sums(tree, False), self.sums(tree, True), self.counts
+
+    def mean(self, tree, square: bool = False) -> jax.Array:
+        return self.sums(tree, square) / jnp.maximum(self.counts, 1.0)
+
+
+def lm_grouping(params_shape, stack_cfg: StackConfig) -> LayerGrouping:
+    """Grouping for repro.models.lm params: {embed, stack:{segK}, final_norm,..}.
+
+    Works from a params *shape* tree (jax.eval_shape output) so counts are
+    computed without materializing anything.
+    """
+    L = stack_cfg.num_layers
+    total = L + 2
+    names: List[str] = []
+    counts = [0.0] * total
+    offs = []
+    off = 0
+    for si, (defs, n) in enumerate(stack_cfg.segments):
+        offs.append(off)
+        for i, bd in enumerate(defs):
+            names.extend([f"seg{si}.r{r}.b{i}({bd.kind})" for r in range(n)])
+        off += n * len(defs)
+    names_ordered = [""] * L
+    for si, (defs, n) in enumerate(stack_cfg.segments):
+        k = len(defs)
+        for r in range(n):
+            for i in range(k):
+                names_ordered[offs[si] + r * k + i] = f"seg{si}.r{r}.b{i}({defs[i].kind})"
+    names = names_ordered + ["embed", "head"]
+
+    # static per-layer parameter counts
+    shape_stack = params_shape["stack"]
+    for si, (defs, n) in enumerate(stack_cfg.segments):
+        k = len(defs)
+        for i in range(k):
+            leaves = [l for l in jax.tree.leaves(shape_stack[f"seg{si}"][f"b{i}"])]
+            per_layer = sum(int(l.size) / l.shape[0] for l in leaves)
+            for r in range(n):
+                counts[offs[si] + r * k + i] = per_layer
+    embed_keys = [k for k in ("embed", "frontend_proj") if k in params_shape]
+    head_keys = [k for k in ("final_norm", "unembed", "enc_norm") if k in params_shape]
+    counts[L] = sum(int(l.size) for k in embed_keys
+                    for l in jax.tree.leaves(params_shape[k]))
+    counts[L + 1] = sum(int(l.size) for k in head_keys
+                        for l in jax.tree.leaves(params_shape[k]))
+    counts_arr = jnp.asarray(counts, jnp.float32)
+
+    def sums_fn(tree, square: bool) -> jax.Array:
+        out = jnp.zeros((total,), jnp.float32)
+        for si, (defs, n) in enumerate(stack_cfg.segments):
+            k = len(defs)
+            for i in range(k):
+                s, _ = _leaf_sums(tree["stack"][f"seg{si}"][f"b{i}"], True, square)
+                idx = offs[si] + jnp.arange(n) * k + i
+                out = out.at[idx].add(s)
+        se, _ = _leaf_sums({k: tree[k] for k in embed_keys if k in tree}, False, square)
+        sh, _ = _leaf_sums({k: tree[k] for k in head_keys if k in tree}, False, square)
+        out = out.at[L].add(se)
+        out = out.at[L + 1].add(sh)
+        return out
+
+    def broadcast_fn(vec, tree):
+        out = {}
+        for key in tree:
+            if key == "stack":
+                stk = {}
+                for si, (defs, n) in enumerate(stack_cfg.segments):
+                    k = len(defs)
+                    seg = {}
+                    for i in range(k):
+                        idx = offs[si] + jnp.arange(n) * k + i
+                        v = vec[idx]  # (n,)
+                        seg[f"b{i}"] = jax.tree.map(
+                            lambda l: v.reshape((n,) + (1,) * (l.ndim - 1)),
+                            tree["stack"][f"seg{si}"][f"b{i}"])
+                    stk[f"seg{si}"] = seg
+                out["stack"] = stk
+            elif key in embed_keys:
+                out[key] = jax.tree.map(lambda l: vec[L], tree[key])
+            else:
+                out[key] = jax.tree.map(lambda l: vec[L + 1], tree[key])
+        return out
+
+    return LayerGrouping(total, sums_fn, counts_arr, names, broadcast_fn)
+
+
+def flat_grouping(params_shape, top_keys: bool = True) -> LayerGrouping:
+    """Grouping by sorted top-level keys (vision models / generic trees)."""
+    keys = sorted(params_shape.keys())
+    counts = jnp.asarray(
+        [sum(int(l.size) for l in jax.tree.leaves(params_shape[k])) for k in keys],
+        jnp.float32)
+
+    def sums_fn(tree, square: bool) -> jax.Array:
+        vals = []
+        for k in keys:
+            s, _ = _leaf_sums(tree[k], False, square)
+            vals.append(s)
+        return jnp.stack(vals).astype(jnp.float32)
+
+    def broadcast_fn(vec, tree):
+        return {k: jax.tree.map(lambda l: vec[i], tree[k])
+                for i, k in enumerate(keys)}
+
+    return LayerGrouping(len(keys), sums_fn, counts, list(keys), broadcast_fn)
+
+
+def layer_select_fns(grouping_names: List[str], params_shape, stack_cfg=None):
+    """Path predicates for paper-faithful per-layer power iteration (vision)."""
+    def make(key):
+        def pred(path):
+            return len(path) > 0 and getattr(path[0], "key", None) == key
+        return pred
+    return {k: make(k) for k in sorted(params_shape.keys())}

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (LMTaskStream, CIFARLikeStream,
+                                  frontend_stub_batch)

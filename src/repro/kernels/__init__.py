@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for Tri-Accel's compute hot spots.
+
+qdq_cast.py        — fused per-tensor scale + round-to-tier + cast (the
+                     paper's Triton precision kernel, TPU-tiled)
+grad_stats.py      — one-pass fused sum / sum-of-squares / absmax reduction
+                     (feeds the per-layer gradient-variance EMA)
+flash_attention.py — block-tiled online-softmax attention with causal +
+                     sliding-window block skipping (the LM hot spot)
+
+ops.py exposes jit'd wrappers (interpret=True off-TPU); ref.py holds the
+pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref

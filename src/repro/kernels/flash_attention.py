@@ -1,0 +1,111 @@
+"""Block-tiled flash attention (fwd) with causal + sliding-window skipping.
+
+TPU-native tiling of the online-softmax algorithm: (BQ, D) query tiles and
+(BK, D) key/value tiles resident in VMEM, fp32 accumulators in VMEM scratch
+persisted across the innermost (sequential) k-block grid dimension. Blocks
+that are fully masked — above the causal diagonal or outside the sliding
+window — are SKIPPED (``pl.when``), so executed FLOPs are ~S^2/2 for causal
+and ~S*W for windowed attention, unlike the chunked-jnp path which computes
+every pair and masks. GQA is handled in the k/v index_map (q head h reads
+kv head h // rep) so k/v are never materialized per q-head.
+
+Shapes: q (B, S, H, D); k, v (B, S, K, D); H % K == 0; S % BQ == S % BK == 0.
+VMEM at defaults (BQ=BK=256, D<=256 fp32): ~1.5 MiB tiles + 0.5 MiB scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+BQ = 256
+BK = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, window: int, scale: float, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * BQ
+    k_start = ki * BK
+    needed = jnp.asarray(True)
+    if causal:
+        needed = needed & (k_start <= q_start + BQ - 1)
+    if window and window > 0:
+        needed = needed & (k_start + BK - 1 >= q_start - (window - 1))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (BQ, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)              # (BK, Dv)
+        s = q @ k.T                                            # (BQ, BK)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        d = qp - kp
+        ok = jnp.ones((BQ, BK), jnp.bool_)
+        if causal:
+            ok = ok & (d >= 0)
+        if window and window > 0:
+            ok = ok & (d < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = None, interpret: bool = False):
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    rep = H // K
+    assert S % BQ == 0 and S % BK == 0, (S, BQ, BK)
+    if scale is None:
+        scale = D ** -0.5
+    nq, nk = S // BQ, S // BK
+    grid = (B, H, nq, nk)
+    kern = functools.partial(_flash_kernel, causal=causal,
+                             window=int(window or 0), scale=float(scale),
+                             nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, D), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Fused gradient-statistics kernel: one pass -> (sum, sum_sq, absmax).
+
+Feeds Tri-Accel's per-layer gradient-variance EMA (§3.1). The jnp fallback
+reads the gradient three times; this kernel reads each VMEM tile once and
+accumulates all three moments in fp32. The output block index_map is
+constant, so the (1, 3) accumulator stays resident across the sequential
+TPU grid; iteration 0 initializes it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 256
+BLOCK_N = 512
+
+
+def _stats_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.sum(x)
+    ss = jnp.sum(jnp.square(x))
+    mx = jnp.max(jnp.abs(x))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = s
+        o_ref[0, 1] = ss
+        o_ref[0, 2] = mx
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[0, 0] += s
+        o_ref[0, 1] += ss
+        o_ref[0, 2] = jnp.maximum(o_ref[0, 2], mx)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grad_stats(x: jax.Array, interpret: bool = False):
+    """Returns (sum, sum_sq, absmax) of ``x`` as fp32 scalars."""
+    n = x.size
+    cols = BLOCK_N
+    rows = -(-n // cols)
+    pad_rows = max(BLOCK_M, -(-rows // BLOCK_M) * BLOCK_M)
+    xf = jnp.zeros((pad_rows * cols,), x.dtype).at[:n].set(x.reshape(-1))
+    x2 = xf.reshape(pad_rows, cols)
+    out = pl.pallas_call(
+        _stats_kernel,
+        grid=(pad_rows // BLOCK_M,),
+        in_specs=[pl.BlockSpec((BLOCK_M, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        interpret=interpret,
+    )(x2)
+    return out[0, 0], out[0, 1], out[0, 2]

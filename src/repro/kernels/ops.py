@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Off-TPU (this CPU container, unit tests) the kernels execute in interpret
+mode — the same kernel body traced with jnp semantics — so correctness is
+validated everywhere while the BlockSpec tiling targets TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import grad_stats as _gs
+from repro.kernels import qdq_cast as _qc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qdq_cast(x, code, ladder: str = "tpu"):
+    return _qc.qdq_cast(x, code, ladder=ladder, interpret=_interpret())
+
+
+def grad_stats(x):
+    return _gs.grad_stats(x, interpret=_interpret())
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
+                    window=None, scale=None):
+    """Drop-in for repro.nn.attention.attention when positions are the
+    standard arange (train/prefill). Falls back to the chunked-jnp path for
+    unsupported configurations (ragged positions, tiny sequences)."""
+    S = q.shape[1]
+    win = int(window) if isinstance(window, int) and window else 0
+    if S % _fa.BQ or S % _fa.BK:
+        from repro.nn.attention import _chunked_attention, _naive_attention
+        if q_pos is None:
+            B = q.shape[0]
+            q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            k_pos = q_pos
+        return _naive_attention(q, k, v, q_pos, k_pos, causal, window,
+                                scale if scale is not None else q.shape[-1] ** -0.5)
+    return _fa.flash_attention(q, k, v, causal=causal, window=win,
+                               scale=scale, interpret=_interpret())

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FP8_MAX = 448.0
+
+
+def qdq_cast_ref(x: jax.Array, code, ladder: str = "tpu") -> jax.Array:
+    """Round x to the tier grid selected by code (0 low / 1 bf16 / 2 keep)."""
+    xf = x.astype(jnp.float32)
+    if ladder == "tpu":
+        amax = jnp.max(jnp.abs(xf))
+        scale = jnp.where(amax > 0, FP8_MAX / amax, 1.0)
+        low = (xf * scale).astype(jnp.float8_e4m3fn).astype(jnp.float32) / scale
+    else:
+        low = xf.astype(jnp.float16).astype(jnp.float32)
+    mid = xf.astype(jnp.bfloat16).astype(jnp.float32)
+    out = jnp.where(code == 0, low, jnp.where(code == 1, mid, xf))
+    return out.astype(x.dtype)
+
+
+def grad_stats_ref(x: jax.Array):
+    """(sum, sum_sq, absmax) over all elements, fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    return (jnp.sum(xf), jnp.sum(jnp.square(xf)), jnp.max(jnp.abs(xf)))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B,S,H,D), k/v: (B,S,K,D) -> (B,S,H,D). Full softmax reference."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    rep = H // K
+    if scale is None:
+        scale = D ** -0.5
+    qr = q.reshape(B, S, K, rep, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkrd,bskd->bqkrs", qr, k.astype(jnp.float32))
+    idx = jnp.arange(S)
+    d = idx[:, None] - idx[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= d >= 0
+    if window and window > 0:
+        ok &= d < window
+    s = jnp.where(ok[None, :, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.launch.mesh import make_production_mesh, make_dev_mesh
+from repro.launch import sharding

@@ -1,0 +1,23 @@
+"""Mesh construction. A FUNCTION, not a module-level constant, so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod adds a leading
+    "pod" axis: 2 x 16 x 16 = 512 chips. The dry-run launcher sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+    import so these meshes exist on CPU."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_dev_mesh():
+    """1x1 mesh with production axis names — tests/examples run the exact
+    same pjit code path on a single device."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,114 @@
+"""Encoder-decoder model (seamless-m4t backbone stub).
+
+The speech/text frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, Se, frontend_dim) which are
+linearly projected into the encoder. The transformer backbone (24L encoder,
+24L decoder, cross-attention) is real and fully distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import chunked_xent
+from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
+from repro.nn.layers import dense, dense_init, embedding_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab_size: int
+    enc_stack: StackConfig
+    dec_stack: StackConfig
+    frontend_dim: int = 160        # stub: fbank-like frame features
+    tie_embeddings: bool = True
+    loss_chunk: int = 512
+    compute_dtype: Any = jnp.bfloat16
+    family: str = "audio"
+
+    @property
+    def d_model(self) -> int:
+        return self.dec_stack.d_model
+
+    @property
+    def num_layers(self) -> int:
+        return self.enc_stack.num_layers + self.dec_stack.num_layers
+
+
+def encdec_init(key: jax.Array, cfg: EncDecConfig):
+    ks = jax.random.split(key, 6)
+    return {
+        "frontend_proj": dense_init(ks[0], cfg.frontend_dim, cfg.d_model,
+                                    (None, "embed")),
+        "encoder": stack_init(ks[1], cfg.enc_stack),
+        "enc_norm": rmsnorm_init(ks[2], cfg.d_model),
+        "embed": embedding_init(ks[3], cfg.vocab_size, cfg.d_model),
+        "decoder": stack_init(ks[4], cfg.dec_stack),
+        "final_norm": rmsnorm_init(ks[5], cfg.d_model),
+    }
+
+
+def encode(params, frontend_embeds, cfg: EncDecConfig, codes=None, qdq_fn=None):
+    B, Se, _ = frontend_embeds.shape
+    x = dense(params["frontend_proj"], frontend_embeds.astype(cfg.compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    x, _, _ = stack_fwd(params["encoder"], x, pos, cfg.enc_stack, mode="train",
+                        codes=codes, qdq_fn=qdq_fn)
+    return rmsnorm(params["enc_norm"], x, cfg.enc_stack.norm_eps)
+
+
+def encdec_loss(params, batch, cfg: EncDecConfig, codes=None, qdq_fn=None):
+    """batch: frontend_embeds (B,Se,F), tokens (B,St), labels (B,St)."""
+    # codes cover encoder then decoder layers; split them
+    enc_codes = dec_codes = None
+    if codes is not None:
+        enc_codes = codes[:cfg.enc_stack.num_layers]
+        dec_codes = codes[cfg.enc_stack.num_layers:]
+    enc_out = encode(params, batch["frontend_embeds"], cfg, enc_codes, qdq_fn)
+    B, St = batch["tokens"].shape
+    x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
+    pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
+    x, _, aux = stack_fwd(params["decoder"], x, pos, cfg.dec_stack, mode="train",
+                          codes=dec_codes, qdq_fn=qdq_fn, enc_out=enc_out)
+    x = rmsnorm(params["final_norm"], x, cfg.dec_stack.norm_eps)
+    nll, cnt = chunked_xent(x, params["embed"]["table"], batch["labels"],
+                            cfg.loss_chunk)
+    loss = nll / jnp.maximum(cnt.astype(jnp.float32), 1.0)
+    metrics = {"loss": loss, "nll_sum": nll, "tokens": cnt, **aux}
+    return loss + aux["moe_load_balance"] + aux["moe_z_loss"], metrics
+
+
+# ------------------------------------------------------------- serving -----
+def encdec_prefill(params, batch, cfg: EncDecConfig):
+    """Encode + decoder prefill over the target prefix; returns caches."""
+    enc_out = encode(params, batch["frontend_embeds"], cfg)
+    B, St = batch["tokens"].shape
+    x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
+    pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
+    x, caches, _ = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
+                             mode="prefill", enc_out=enc_out)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.dec_stack.norm_eps)
+    logits = x @ params["embed"]["table"].astype(x.dtype).T
+    return logits[:, 0, :], caches
+
+
+def encdec_init_cache(cfg: EncDecConfig, batch: int, length: int, enc_len: int,
+                      dtype=jnp.bfloat16):
+    return stack_init_cache(cfg.dec_stack, batch, length, enc_len=enc_len,
+                            dtype=dtype)
+
+
+def encdec_decode_step(params, token, caches, index, cfg: EncDecConfig):
+    """One decoder token against self KV cache + frozen cross caches."""
+    B = token.shape[0]
+    x = params["embed"]["table"].astype(cfg.compute_dtype)[token][:, None, :]
+    pos = jnp.full((B, 1), index, jnp.int32)
+    x, caches, _ = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
+                             mode="decode", caches=caches, index=index)
+    x = rmsnorm(params["final_norm"], x, cfg.dec_stack.norm_eps)
+    logits = x @ params["embed"]["table"].astype(x.dtype).T
+    return logits[:, 0, :], caches

@@ -1,0 +1,171 @@
+"""Decoder-only LM wrapper (dense / moe / ssm / hybrid / vlm backbones).
+
+The language model is: embedding -> stack (repro.nn.blocks) -> final norm ->
+(tied or separate) readout. The cross-entropy is computed in sequence chunks
+under jax.checkpoint so the full (B, S, vocab) fp32 logits tensor is never
+resident — with 256k vocabularies this is the difference between fitting and
+OOM at 4k/32k sequence lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
+from repro.nn.layers import embedding_init, rmsnorm, rmsnorm_init
+from repro.nn.module import split_params
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm
+    vocab_size: int
+    stack: StackConfig
+    tie_embeddings: bool = True
+    scale_embed: bool = False     # gemma-style sqrt(d_model) embedding scale
+    loss_chunk: int = 512         # sequence chunk for the fused xent
+    compute_dtype: Any = jnp.bfloat16
+    # multimodal stub: when set, inputs may carry precomputed frontend
+    # embeddings of this dimension which are linearly projected into d_model.
+    frontend_dim: Optional[int] = None
+    mrope: bool = False
+
+    @property
+    def d_model(self) -> int:
+        return self.stack.d_model
+
+    @property
+    def num_layers(self) -> int:
+        return self.stack.num_layers
+
+
+def lm_init(key: jax.Array, cfg: LMConfig):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "stack": stack_init(ks[1], cfg.stack),
+        "final_norm": rmsnorm_init(ks[2], cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embedding_init(ks[3], cfg.vocab_size, cfg.d_model)
+    if cfg.frontend_dim:
+        from repro.nn.layers import dense_init
+        p["frontend_proj"] = dense_init(ks[3], cfg.frontend_dim, cfg.d_model,
+                                        (None, "embed"))
+    return p
+
+
+def _embed_inputs(params, batch, cfg: LMConfig):
+    """tokens (B,S) -> (B,S,d); optionally splice in frontend embeddings."""
+    x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    if cfg.frontend_dim and "frontend_embeds" in batch:
+        from repro.nn.layers import dense
+        fe = dense(params["frontend_proj"],
+                   batch["frontend_embeds"].astype(cfg.compute_dtype))
+        # stub modality fusion: frontend embeddings occupy the first F slots
+        F = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, F:]], axis=1)
+    return x
+
+
+def _readout_table(params, cfg: LMConfig):
+    t = params["embed"]["table"] if cfg.tie_embeddings else params["unembed"]["table"]
+    return t  # (V, d)
+
+
+def lm_hidden(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
+    """Forward to final hidden states (B, S, d)."""
+    B, S = batch["tokens"].shape
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mrope = batch.get("mrope_positions") if cfg.mrope else None
+    x = _embed_inputs(params, batch, cfg)
+    x, _, aux = stack_fwd(params["stack"], x, pos, cfg.stack, mode="train",
+                          codes=codes, qdq_fn=qdq_fn, mrope=mrope)
+    x = rmsnorm(params["final_norm"], x, cfg.stack.norm_eps)
+    return x, aux
+
+
+def chunked_xent(hidden, table, labels, chunk, logit_scale=1.0):
+    """Cross-entropy over sequence chunks; logits never fully materialized.
+
+    hidden: (B, S, d), table: (V, d), labels: (B, S) int32 (-1 = ignore).
+    Returns (sum_nll, num_tokens).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback, callers use power-of-two seq lens
+    n = S // chunk
+    hid = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)
+    lab = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll, cnt = carry
+        h, y = xs
+        logits = (h @ table.astype(h.dtype).T).astype(jnp.float32) * logit_scale
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        valid = y >= 0
+        y_safe = jnp.where(valid, y, 0)
+        gold = jnp.take_along_axis(logits, y_safe[..., None], axis=-1)[..., 0]
+        nll = nll + jnp.sum(jnp.where(valid, lse - gold, 0.0))
+        cnt = cnt + jnp.sum(valid)
+        return (nll, cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hid, lab))
+    return nll, cnt
+
+
+def lm_loss(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
+    """Mean next-token cross-entropy + MoE aux losses."""
+    hidden, aux = lm_hidden(params, batch, cfg, codes=codes, qdq_fn=qdq_fn)
+    table = _readout_table(params, cfg)
+    nll, cnt = chunked_xent(hidden, table, batch["labels"], cfg.loss_chunk)
+    loss = nll / jnp.maximum(cnt.astype(jnp.float32), 1.0)
+    total = loss + aux["moe_load_balance"] + aux["moe_z_loss"]
+    metrics = {"loss": loss, "nll_sum": nll, "tokens": cnt, **aux}
+    return total, metrics
+
+
+# ------------------------------------------------------------- serving -----
+def lm_prefill(params, batch, cfg: LMConfig):
+    """Prefill: full-sequence forward returning last-position logits + caches."""
+    B, S = batch["tokens"].shape
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mrope = batch.get("mrope_positions") if cfg.mrope else None
+    x = _embed_inputs(params, batch, cfg)
+    x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack, mode="prefill",
+                             mrope=mrope)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.stack.norm_eps)
+    logits = (x @ _readout_table(params, cfg).astype(x.dtype).T)
+    return logits[:, 0, :], caches
+
+
+def lm_init_cache(cfg: LMConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    return stack_init_cache(cfg.stack, batch, length, dtype=dtype)
+
+
+def lm_decode_step(params, token, caches, index, cfg: LMConfig,
+                   mrope_positions=None):
+    """One token decode. token: (B,) int32; index: scalar int32 position."""
+    B = token.shape[0]
+    x = params["embed"]["table"].astype(cfg.compute_dtype)[token][:, None, :]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    pos = jnp.full((B, 1), index, jnp.int32)
+    x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack, mode="decode",
+                             caches=caches, index=index, mrope=mrope_positions)
+    x = rmsnorm(params["final_norm"], x, cfg.stack.norm_eps)
+    logits = (x @ _readout_table(params, cfg).astype(x.dtype).T)
+    return logits[:, 0, :], caches

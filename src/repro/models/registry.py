@@ -1,0 +1,39 @@
+"""Architecture registry: maps --arch ids to config modules."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, List
+
+ARCHITECTURES = [
+    "qwen2-vl-72b",
+    "smollm-135m",
+    "gemma3-4b",
+    "minitron-4b",
+    "stablelm-1.6b",
+    "deepseek-v2-236b",
+    "deepseek-v2-lite-16b",
+    "mamba2-370m",
+    "seamless-m4t-large-v2",
+    "recurrentgemma-2b",
+]
+
+# the paper's own testbed (vision)
+PAPER_ARCHS = ["resnet18", "efficientnet_b0"]
+
+
+def _module(arch: str):
+    name = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_model_config(arch: str, reduced: bool = False) -> Any:
+    mod = _module(arch)
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def get_arch_module(arch: str):
+    return _module(arch)
+
+
+def list_architectures() -> List[str]:
+    return list(ARCHITECTURES)

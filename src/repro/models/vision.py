@@ -1,0 +1,231 @@
+"""ResNet-18 and EfficientNet-B0 in pure JAX — the paper's own testbed.
+
+Used by the paper-faithful reproduction (examples/paper_repro.py,
+benchmarks/table1.py, table2.py): CIFAR-class inputs, BatchNorm with running
+stats, SGD+momentum. Params are Param-wrapped like every other model so the
+Tri-Accel per-layer precision / curvature machinery applies unchanged.
+
+API: ``vision_init(key, cfg) -> (params, state)``;
+``vision_apply(params, state, images, train) -> (logits, new_state)``.
+``state`` holds BatchNorm running statistics (not differentiated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import param
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str                       # "resnet18" | "efficientnet_b0"
+    num_classes: int = 10
+    stem_stride: int = 1            # 1 for CIFAR 32x32, 2 for 224x224
+    bn_momentum: float = 0.9
+    compute_dtype: Any = jnp.float32
+    family: str = "vision"
+
+
+# ------------------------------------------------------------ primitives ---
+def conv_init(key, kh, kw, cin, cout, groups=1):
+    fan_in = kh * kw * cin // groups
+    scale = math.sqrt(2.0 / fan_in)
+    return {"kernel": param(key, (kh, kw, cin // groups, cout),
+                            (None, None, "embed", "mlp"), "normal", scale)}
+
+
+def conv(p, x, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+
+
+def bn_init(key, c):
+    del key
+    k = jax.random.PRNGKey(0)
+    return ({"scale": param(k, (c,), ("embed",), "ones"),
+             "bias": param(k, (c,), ("embed",), "zeros")},
+            {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)})
+
+
+def bn_apply(p, s, x, train: bool, momentum: float):
+    if train:
+        mu = jnp.mean(x.astype(jnp.float32), axis=(0, 1, 2))
+        var = jnp.var(x.astype(jnp.float32), axis=(0, 1, 2))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mu,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    inv = jax.lax.rsqrt(var + 1e-5)
+    y = (x.astype(jnp.float32) - mu) * inv * p["scale"].astype(jnp.float32) \
+        + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_s
+
+
+# --------------------------------------------------------------- ResNet ----
+_RESNET18_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+
+
+def _basic_block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {}
+    st: Dict[str, Any] = {}
+    p["conv1"] = conv_init(ks[0], 3, 3, cin, cout)
+    p["bn1"], st["bn1"] = bn_init(ks[0], cout)
+    p["conv2"] = conv_init(ks[1], 3, 3, cout, cout)
+    p["bn2"], st["bn2"] = bn_init(ks[1], cout)
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+        p["bnp"], st["bnp"] = bn_init(ks[2], cout)
+    return p, st
+
+
+def _basic_block(p, s, x, stride, train, mom):
+    ns = {}
+    h, ns["bn1"] = bn_apply(p["bn1"], s["bn1"], conv(p["conv1"], x, stride), train, mom)
+    h = jax.nn.relu(h)
+    h, ns["bn2"] = bn_apply(p["bn2"], s["bn2"], conv(p["conv2"], h), train, mom)
+    if "proj" in p:
+        x, ns["bnp"] = bn_apply(p["bnp"], s["bnp"], conv(p["proj"], x, stride), train, mom)
+    return jax.nn.relu(h + x), ns
+
+
+def resnet18_init(key, cfg: VisionConfig):
+    ks = jax.random.split(key, 16)
+    p: Dict[str, Any] = {"stem": conv_init(ks[0], 3, 3, 3, 64)}
+    s: Dict[str, Any] = {}
+    p["bn_stem"], s["bn_stem"] = bn_init(ks[0], 64)
+    cin, ki = 64, 1
+    for si, (cout, nblocks, stride) in enumerate(_RESNET18_STAGES):
+        for bi in range(nblocks):
+            st = stride if bi == 0 else 1
+            p[f"s{si}b{bi}"], s[f"s{si}b{bi}"] = _basic_block_init(ks[ki], cin, cout, st)
+            cin = cout
+            ki += 1
+    p["fc"] = {"kernel": param(ks[ki], (512, cfg.num_classes), ("embed", "mlp"),
+                               "normal", 1.0 / math.sqrt(512)),
+               "bias": param(ks[ki], (cfg.num_classes,), ("mlp",), "zeros")}
+    return p, s
+
+
+def resnet18_apply(p, s, x, train, cfg: VisionConfig):
+    mom = cfg.bn_momentum
+    ns: Dict[str, Any] = {}
+    h, ns["bn_stem"] = bn_apply(p["bn_stem"], s["bn_stem"],
+                                conv(p["stem"], x, cfg.stem_stride), train, mom)
+    h = jax.nn.relu(h)
+    for si, (cout, nblocks, stride) in enumerate(_RESNET18_STAGES):
+        for bi in range(nblocks):
+            st = stride if bi == 0 else 1
+            h, ns[f"s{si}b{bi}"] = _basic_block(p[f"s{si}b{bi}"], s[f"s{si}b{bi}"],
+                                                h, st, train, mom)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ p["fc"]["kernel"].astype(h.dtype) + p["fc"]["bias"].astype(h.dtype)
+    return logits, ns
+
+
+# --------------------------------------------------------- EfficientNet ----
+# (expand_ratio, channels, repeats, stride, kernel)
+_EFFNET_B0_STAGES = [
+    (1, 16, 1, 1, 3), (6, 24, 2, 2, 3), (6, 40, 2, 2, 5), (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5), (6, 192, 4, 2, 5), (6, 320, 1, 1, 3),
+]
+
+
+def _mbconv_init(key, cin, cout, expand, kernel):
+    ks = jax.random.split(key, 6)
+    mid = cin * expand
+    se = max(1, cin // 4)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    if expand != 1:
+        p["expand"] = conv_init(ks[0], 1, 1, cin, mid)
+        p["bn0"], s["bn0"] = bn_init(ks[0], mid)
+    p["dw"] = conv_init(ks[1], kernel, kernel, mid, mid, groups=mid)
+    p["bn1"], s["bn1"] = bn_init(ks[1], mid)
+    p["se_r"] = conv_init(ks[2], 1, 1, mid, se)
+    p["se_e"] = conv_init(ks[3], 1, 1, se, mid)
+    p["project"] = conv_init(ks[4], 1, 1, mid, cout)
+    p["bn2"], s["bn2"] = bn_init(ks[4], cout)
+    return p, s
+
+
+def _mbconv(p, s, x, stride, expand, train, mom):
+    ns: Dict[str, Any] = {}
+    h = x
+    if expand != 1:
+        h, ns["bn0"] = bn_apply(p["bn0"], s["bn0"], conv(p["expand"], h), train, mom)
+        h = jax.nn.silu(h)
+    mid = h.shape[-1]
+    h, ns["bn1"] = bn_apply(p["bn1"], s["bn1"], conv(p["dw"], h, stride, groups=mid),
+                            train, mom)
+    h = jax.nn.silu(h)
+    # squeeze-excite
+    se = jnp.mean(h, axis=(1, 2), keepdims=True)
+    se = jax.nn.silu(conv(p["se_r"], se))
+    se = jax.nn.sigmoid(conv(p["se_e"], se))
+    h = h * se
+    h, ns["bn2"] = bn_apply(p["bn2"], s["bn2"], conv(p["project"], h), train, mom)
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h, ns
+
+
+def efficientnet_b0_init(key, cfg: VisionConfig):
+    ks = jax.random.split(key, 24)
+    p: Dict[str, Any] = {"stem": conv_init(ks[0], 3, 3, 3, 32)}
+    s: Dict[str, Any] = {}
+    p["bn_stem"], s["bn_stem"] = bn_init(ks[0], 32)
+    cin, ki = 32, 1
+    for si, (expand, cout, repeats, stride, kernel) in enumerate(_EFFNET_B0_STAGES):
+        for bi in range(repeats):
+            p[f"s{si}b{bi}"], s[f"s{si}b{bi}"] = _mbconv_init(ks[ki], cin, cout,
+                                                              expand, kernel)
+            cin = cout
+            ki += 1
+    p["head"] = conv_init(ks[ki], 1, 1, cin, 1280)
+    p["bn_head"], s["bn_head"] = bn_init(ks[ki], 1280)
+    p["fc"] = {"kernel": param(ks[ki + 1], (1280, cfg.num_classes),
+                               ("embed", "mlp"), "normal", 1.0 / math.sqrt(1280)),
+               "bias": param(ks[ki + 1], (cfg.num_classes,), ("mlp",), "zeros")}
+    return p, s
+
+
+def efficientnet_b0_apply(p, s, x, train, cfg: VisionConfig):
+    mom = cfg.bn_momentum
+    ns: Dict[str, Any] = {}
+    h, ns["bn_stem"] = bn_apply(p["bn_stem"], s["bn_stem"],
+                                conv(p["stem"], x, cfg.stem_stride), train, mom)
+    h = jax.nn.silu(h)
+    for si, (expand, cout, repeats, stride, kernel) in enumerate(_EFFNET_B0_STAGES):
+        for bi in range(repeats):
+            st = stride if bi == 0 else 1
+            h, ns[f"s{si}b{bi}"] = _mbconv(p[f"s{si}b{bi}"], s[f"s{si}b{bi}"],
+                                           h, st, expand, train, mom)
+    h, ns["bn_head"] = bn_apply(p["bn_head"], s["bn_head"], conv(p["head"], h),
+                                train, mom)
+    h = jax.nn.silu(h)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ p["fc"]["kernel"].astype(h.dtype) + p["fc"]["bias"].astype(h.dtype)
+    return logits, ns
+
+
+def vision_init(key, cfg: VisionConfig):
+    if cfg.name == "resnet18":
+        return resnet18_init(key, cfg)
+    if cfg.name == "efficientnet_b0":
+        return efficientnet_b0_init(key, cfg)
+    raise ValueError(cfg.name)  # pragma: no cover
+
+
+def vision_apply(params, state, images, train, cfg: VisionConfig):
+    if cfg.name == "resnet18":
+        return resnet18_apply(params, state, images, train, cfg)
+    return efficientnet_b0_apply(params, state, images, train, cfg)

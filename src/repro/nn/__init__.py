@@ -1,0 +1,2 @@
+from repro.nn.module import Param, param, split_params, merge_params, stack_init
+from repro.nn import layers, attention, moe, ssm, rglru, blocks

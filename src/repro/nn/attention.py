@@ -1,0 +1,434 @@
+"""Attention variants: GQA (+rope/m-rope, sliding window), MLA, cross-attn.
+
+Three execution paths:
+  * ``naive``   — materializes (Sq, Sk) scores; reference, tests, decode.
+  * ``chunked`` — flash-style online-softmax double scan over (q, k) chunks;
+                  pure jnp, lowers on any backend, O(q_chunk*k_chunk) score
+                  memory. This is what the dry-run lowers for 32k prefill.
+  * Pallas flash kernel (repro.kernels.flash_attention) — TPU target,
+    selected with impl="flash" (validated in interpret mode in tests).
+
+Decode paths use full or ring (sliding-window) KV caches; MLA decode uses the
+compressed-cache *absorbed* formulation (cache holds only (c_kv, k_rope)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (apply_mrope, apply_rope, dense, dense_init,
+                             rmsnorm, rmsnorm_init)
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, ...]] = None
+    qk_norm: bool = False          # gemma3-style RMSNorm on q/k head vectors
+    causal: bool = True
+    impl: str = "chunked"          # "naive" | "chunked" | "flash"
+    q_chunk: int = 512
+    k_chunk: int = 512
+    softmax_scale: Optional[float] = None
+
+    @property
+    def scale(self) -> float:
+        return (self.softmax_scale if self.softmax_scale is not None
+                else self.head_dim ** -0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    q_lora_rank: Optional[int]     # None -> direct q projection (v2-lite)
+    kv_lora_rank: int
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    impl: str = "chunked"
+    q_chunk: int = 512
+    k_chunk: int = 512
+
+    @property
+    def scale(self) -> float:
+        return (self.qk_nope_dim + self.qk_rope_dim) ** -0.5
+
+
+# =========================================================== mask helpers ==
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window) -> jax.Array:
+    """Additive bias (0 / NEG_INF). q_pos: (B, Sq), k_pos: (B, Sk) -> (B, Sq, Sk).
+
+    ``window`` may be a traced int32 scalar; <= 0 means global attention.
+    Cache slots with position < 0 are treated as empty (always masked).
+    """
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    ok = k_pos[:, None, :] >= 0
+    if causal:
+        ok = ok & (d >= 0)
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        ok = ok & jnp.where(w > 0, d < w, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ======================================================= core attention ====
+def _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+    """q: (B, Sq, H, D); k: (B, Sk, K, D); v: (B, Sk, K, Dv) -> (B, Sq, H, Dv)."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qr = q.reshape(B, Sq, K, rep, D).astype(jnp.float32) * scale
+    scores = jnp.einsum("bqkrd,bskd->bqkrs", qr, k.astype(jnp.float32))
+    bias = _mask_bias(q_pos, k_pos, causal, window)  # (B, Sq, Sk)
+    scores = scores + bias[:, :, None, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                       q_chunk, k_chunk):
+    """Flash-style online softmax; outer scan over q chunks, inner over k.
+
+    Sliding-window optimization: when ``window`` is a STATIC python int and
+    the attention is causal self-attention (Sq == Sk), each q chunk only
+    reads a static-size band of k/v ending at its own diagonal — executed
+    FLOPs drop from O(S^2) to O(S * (window + q_chunk)) on every backend
+    (the masked-but-computed chunks are not even loaded). Traced windows
+    fall back to the full masked sweep.
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // K
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+
+    band = None
+    if (isinstance(window, int) and window > 0 and causal and Sq == Sk):
+        band_len = -(-(window - 1 + q_chunk) // k_chunk) * k_chunk
+        if band_len < Sk:
+            band = band_len
+
+    qr = (q.reshape(B, nq, q_chunk, K, rep, D).astype(jnp.float32) * scale)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qpr = q_pos.reshape(B, nq, q_chunk)
+
+    def inner(qc, qp, ks, vs, kps, n_chunks):
+        def k_step(carry, ki):
+            acc, m, l = carry
+            kc, vc, kp = ki
+            s = jnp.einsum("bqkrd,bskd->bqkrs", qc, kc)  # (B,qc,K,rep,kc)
+            s = s + _mask_bias(qp, kp, causal, window)[:, :, None, None, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bqkrs,bskd->bqkrd", p, vc)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, q_chunk, K, rep, Dv), jnp.float32)
+        m0 = jnp.full((B, q_chunk, K, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, K, rep), jnp.float32)
+        kr = ks.reshape(B, n_chunks, k_chunk, K, D)
+        vr = vs.reshape(B, n_chunks, k_chunk, K, Dv)
+        kpr = kps.reshape(B, n_chunks, k_chunk)
+        (acc, m, l), _ = jax.lax.scan(
+            k_step, (acc0, m0, l0),
+            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpr.swapaxes(0, 1)))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if band is None:
+        def q_step(_, xs):
+            qc, qp = xs
+            return None, inner(qc, qp, kf, vf, k_pos, nk)
+
+        _, outs = jax.lax.scan(q_step, None,
+                               (qr.swapaxes(0, 1), qpr.swapaxes(0, 1)))
+    else:
+        def q_step(_, xs):
+            qc, qp, qi = xs
+            start = jnp.clip(qi * q_chunk + q_chunk - band, 0, Sk - band)
+            ks = jax.lax.dynamic_slice(kf, (0, start, 0, 0), (B, band, K, D))
+            vs = jax.lax.dynamic_slice(vf, (0, start, 0, 0), (B, band, K, Dv))
+            kps = jax.lax.dynamic_slice(k_pos, (0, start), (B, band))
+            return None, inner(qc, qp, ks, vs, kps, band // k_chunk)
+
+        _, outs = jax.lax.scan(
+            q_step, None,
+            (qr.swapaxes(0, 1), qpr.swapaxes(0, 1),
+             jnp.arange(nq, dtype=jnp.int32)))
+    # outs: (nq, B, q_chunk, K, rep, Dv)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal, window, scale,
+              impl="chunked", q_chunk=512, k_chunk=512):
+    if impl == "flash":
+        # TPU Pallas kernel path (repro.kernels.ops); falls back to chunked
+        # when the kernel does not support the configuration.
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                    window=window, scale=scale)
+    if impl == "chunked" and q.shape[1] % q_chunk == 0 and k.shape[1] % k_chunk == 0 \
+            and q.shape[1] >= q_chunk and k.shape[1] >= k_chunk:
+        return _chunked_attention(q, k, v, q_pos, k_pos, causal, window,
+                                  scale, q_chunk, k_chunk)
+    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale)
+
+
+# ================================================================= GQA ======
+# Projections are kept 3-D (d_model, heads, head_dim) so tensor parallelism
+# shards the *head* axis directly — a 2-D (d, H*D) kernel sharded on the
+# flattened dim forces XLA to re-shard at every (H, D) reshape when H is not
+# a multiple of the mesh axis (all-gathers inside the layer scan).
+def _proj_init(key, dm, heads, hd, name):
+    import math as _m
+    from repro.nn.module import param as _param
+    return {"kernel": _param(key, (dm, heads, hd), ("embed", name, None),
+                             "normal", 1.0 / _m.sqrt(dm))}
+
+
+def _out_init(key, heads, hd, dm):
+    import math as _m
+    from repro.nn.module import param as _param
+    return {"kernel": _param(key, (heads, hd, dm), ("heads", None, "embed"),
+                             "normal", 1.0 / _m.sqrt(heads * hd))}
+
+
+def proj(p, x):
+    """(B,S,d) @ (d,H,D) -> (B,S,H,D)."""
+    return jnp.einsum("bsd,dhk->bshk", x, p["kernel"].astype(x.dtype))
+
+
+def out_proj(p, y):
+    """(B,S,H,D) @ (H,D,d) -> (B,S,d)."""
+    return jnp.einsum("bshk,hkd->bsd", y, p["kernel"].astype(y.dtype))
+
+
+def gqa_init(key: jax.Array, cfg: AttnConfig):
+    ks = jax.random.split(key, 6)
+    H, K, D, dm = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": _proj_init(ks[0], dm, H, D, "heads"),
+        "wk": _proj_init(ks[1], dm, K, D, "kv"),
+        "wv": _proj_init(ks[2], dm, K, D, "kv"),
+        "wo": _out_init(ks[3], H, D, dm),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(ks[4], D)
+        p["knorm"] = rmsnorm_init(ks[5], D)
+    return p
+
+
+def _gqa_qkv(p, x, q_pos, cfg: AttnConfig, mrope_positions=None):
+    B, S, _ = x.shape
+    H, K, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = proj(p["wq"], x)
+    k = proj(p["wk"], x)
+    v = proj(p["wv"], x)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q)
+        k = rmsnorm(p["knorm"], k)
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_fwd(p, x, q_pos, cfg: AttnConfig, window=None, mrope_positions=None,
+            return_cache=False):
+    """Self-attention over a full sequence (train / prefill).
+
+    x: (B, S, d_model); q_pos: (B, S) int32. Returns y (and KV cache when
+    ``return_cache``: rope-applied keys, values, and slot positions).
+    """
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(p, x, q_pos, cfg, mrope_positions)
+    out = attention(q, k, v, q_pos, q_pos, causal=cfg.causal, window=window,
+                    scale=cfg.scale, impl=cfg.impl, q_chunk=cfg.q_chunk,
+                    k_chunk=cfg.k_chunk)
+    y = out_proj(p["wo"], out)
+    if return_cache:
+        return y, {"k": k, "v": v, "pos": q_pos}
+    return y
+
+
+def gqa_init_cache(cfg: AttnConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    K, D = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, length, K, D), dtype),
+            "v": jnp.zeros((batch, length, K, D), dtype),
+            "pos": jnp.full((batch, length), -1, jnp.int32)}
+
+
+def gqa_decode(p, x, cache, index, cfg: AttnConfig, window=None,
+               mrope_positions=None):
+    """One decode step. x: (B, 1, d_model); index: scalar int32 (shared across
+    the batch — continuous batching with per-request offsets plugs in by
+    making index a (B,) vector and switching the cache update to a scatter).
+
+    The cache ring-buffers when its length < the attended context (sliding
+    window); with a full-length cache the slot is the absolute position.
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = _gqa_qkv(p, x, pos, cfg, mrope_positions)
+    slot = jnp.asarray(index % L, jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, slot))
+    out = _naive_attention(q, k, v, pos, cpos, causal=True, window=window,
+                           scale=cfg.scale)
+    y = out_proj(p["wo"], out)
+    return y, {"k": k, "v": v, "pos": cpos}
+
+
+# ================================================================= MLA ======
+def mla_init(key: jax.Array, cfg: MLAConfig):
+    ks = jax.random.split(key, 8)
+    dm, H = cfg.d_model, cfg.num_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], dm, cfg.q_lora_rank, ("embed", "qlora"))
+        p["qnorm"] = rmsnorm_init(ks[1], cfg.q_lora_rank)
+        p["wuq"] = _proj_init(ks[2], cfg.q_lora_rank, H, qk_dim, "heads")
+    else:
+        p["wq"] = _proj_init(ks[0], dm, H, qk_dim, "heads")
+    p["wdkv"] = dense_init(ks[3], dm, cfg.kv_lora_rank, ("embed", "kvlora"))
+    p["kvnorm"] = rmsnorm_init(ks[4], cfg.kv_lora_rank)
+    p["wkr"] = dense_init(ks[4], dm, cfg.qk_rope_dim, ("embed", None))
+    p["wuk"] = _proj_init(ks[5], cfg.kv_lora_rank, H, cfg.qk_nope_dim, "heads")
+    p["wuv"] = _proj_init(ks[6], cfg.kv_lora_rank, H, cfg.v_head_dim, "heads")
+    p["wo"] = _out_init(ks[7], H, cfg.v_head_dim, dm)
+    return p
+
+
+def _mla_q(p, x, q_pos, cfg: MLAConfig):
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["qnorm"], dense(p["wdq"], x))
+        q = proj(p["wuq"], cq)
+    else:
+        q = proj(p["wq"], x)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, pos, cfg: MLAConfig):
+    ckv = rmsnorm(p["kvnorm"], dense(p["wdkv"], x))          # (B, S, rank)
+    kr = dense(p["wkr"], x)[:, :, None, :]                    # (B, S, 1, rope)
+    kr = apply_rope(kr, pos, cfg.rope_theta)[:, :, 0, :]      # (B, S, rope)
+    return ckv, kr
+
+
+def mla_fwd(p, x, q_pos, cfg: MLAConfig, window=None, return_cache=False):
+    """Training / prefill MLA: expand compressed kv into per-head k/v."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x, q_pos, cfg)
+    ckv, kr = _mla_ckv(p, x, q_pos, cfg)
+    k_nope = proj(p["wuk"], ckv)
+    v = proj(p["wuv"], ckv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(kr[:, :, None, :], (B, S, H, cfg.qk_rope_dim))],
+                        axis=-1)
+    out = attention(q, k, v, q_pos, q_pos, causal=True, window=window,
+                    scale=cfg.scale, impl=cfg.impl, q_chunk=cfg.q_chunk,
+                    k_chunk=cfg.k_chunk)
+    y = out_proj(p["wo"], out)
+    if return_cache:
+        return y, {"ckv": ckv, "kr": kr, "pos": q_pos}
+    return y
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    return {"ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, length, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((batch, length), -1, jnp.int32)}
+
+
+def mla_decode(p, x, cache, index, cfg: MLAConfig):
+    """Absorbed-matmul MLA decode against the compressed (c_kv, k_rope) cache.
+
+    W_uk is folded into the query (q_abs = q_nope @ W_uk per head) so scores
+    are taken directly against c_kv; W_uv is applied after the weighted sum,
+    so neither K nor V is ever materialized per head.
+    """
+    B = x.shape[0]
+    H, R = cfg.num_heads, cfg.kv_lora_rank
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, pos, cfg)                   # (B,1,H,nope/rope)
+    ckv_new, kr_new = _mla_ckv(p, x, pos, cfg)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, index, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, index, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, index))
+
+    wuk = p["wuk"]["kernel"]                                  # (R, H, nope)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))               # (B,1,H,R)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(jnp.float32))
+         + jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * cfg.scale    # (B,H,1,S)
+    bias = _mask_bias(pos, cpos, True, None)                  # (B,1,S)
+    s = s + bias[:, None, :, :]
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))  # (B,1,H,R)
+    wuv = p["wuv"]["kernel"]                                  # (R, H, v)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, wuv.astype(jnp.float32))
+    y = out_proj(p["wo"], out.astype(x.dtype))
+    return y, {"ckv": ckv, "kr": kr, "pos": cpos}
+
+
+# ======================================================== cross-attention ===
+def cross_init(key: jax.Array, cfg: AttnConfig):
+    ks = jax.random.split(key, 4)
+    H, K, D, dm = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": _proj_init(ks[0], dm, H, D, "heads"),
+        "wk": _proj_init(ks[1], dm, K, D, "kv"),
+        "wv": _proj_init(ks[2], dm, K, D, "kv"),
+        "wo": _out_init(ks[3], H, D, dm),
+    }
+
+
+def cross_make_cache(p, enc_out, cfg: AttnConfig):
+    """Project encoder output to K/V once (at prefill)."""
+    B, Se, _ = enc_out.shape
+    k = proj(p["wk"], enc_out)
+    v = proj(p["wv"], enc_out)
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def cross_fwd(p, x, cache, cfg: AttnConfig):
+    """Decoder->encoder attention (no rope, bidirectional over encoder)."""
+    B, S, _ = x.shape
+    q = proj(p["wq"], x)
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    out = attention(q, cache["k"], cache["v"], q_pos, cache["pos"],
+                    causal=False, window=None, scale=cfg.scale,
+                    impl=cfg.impl, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+    return out_proj(p["wo"], out)

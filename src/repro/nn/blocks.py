@@ -1,0 +1,308 @@
+"""Block & stack composition.
+
+A model trunk is a sequence of *segments*; each segment is a group of
+heterogeneous blocks repeated N times. The repeat dimension is consumed by
+``lax.scan`` over stacked parameters, keeping the HLO O(1) in depth:
+
+    recurrentgemma-2b: [((rglru, rglru, gqa), 8), ((rglru, rglru), 1)]
+    gemma3-4b:         [((loc,loc,loc,loc,loc,glob), 5), ((loc,...), 1)]
+    deepseek-v2:       [((mla+dense,), 1), ((mla+moe,), 59)]
+
+Per-layer Tri-Accel precision codes are scanned alongside the parameters and
+applied with a caller-provided ``qdq_fn(tree, code)`` (see
+repro.core.precision), so the paper's per-layer precision policy runs inside
+a single compiled graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import moe as moe_lib
+from repro.nn import rglru as rglru_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.attention import AttnConfig, MLAConfig
+from repro.nn.layers import activation, dense, dense_init, rmsnorm, rmsnorm_init
+from repro.nn.moe import MoEConfig
+from repro.nn.module import Param, merge_params, split_params
+from repro.nn.rglru import RGLRUConfig
+from repro.nn.ssm import SSMConfig
+from repro.launch.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    kind: str                 # "gqa" | "mla" | "ssd" | "rglru"
+    ffn: str = "dense"        # "dense" | "moe" | "none"
+    window: int = 0           # 0 = global attention; > 0 = sliding window
+    cross: bool = False       # decoder block with cross-attention
+
+
+@dataclasses.dataclass(frozen=True)
+class StackConfig:
+    segments: Tuple[Tuple[Tuple[BlockDef, ...], int], ...]
+    d_model: int
+    d_ff: int
+    attn: Optional[AttnConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    moe: Optional[MoEConfig] = None
+    act: str = "silu"
+    gated: bool = True        # SwiGLU-style gated FFN vs plain 2-matrix MLP
+    norm_eps: float = 1e-6
+    remat: bool = True
+
+    @property
+    def num_layers(self) -> int:
+        return sum(len(defs) * n for defs, n in self.segments)
+
+
+# ------------------------------------------------------------------ FFN ----
+def ffn_init(key, d_model, d_ff, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], d_model, d_ff, ("embed", "mlp")),
+         "w_down": dense_init(ks[2], d_ff, d_model, ("mlp", "embed"))}
+    if gated:
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, ("embed", "mlp"))
+    return p
+
+
+def ffn_apply(p, x, act_name):
+    act = activation(act_name)
+    if "w_gate" in p:
+        h = act(dense(p["w_gate"], x)) * dense(p["w_up"], x)
+    else:
+        h = act(dense(p["w_up"], x))
+    return dense(p["w_down"], h)
+
+
+# ---------------------------------------------------------------- block ----
+def block_init(key: jax.Array, bd: BlockDef, sc: StackConfig):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(ks[0], sc.d_model)}
+    if bd.kind == "gqa":
+        p["mix"] = attn_lib.gqa_init(ks[1], sc.attn)
+    elif bd.kind == "mla":
+        p["mix"] = attn_lib.mla_init(ks[1], sc.mla)
+    elif bd.kind == "ssd":
+        p["mix"] = ssm_lib.ssm_init(ks[1], sc.ssm)
+    elif bd.kind == "rglru":
+        p["mix"] = rglru_lib.rglru_init(ks[1], sc.rglru)
+    else:  # pragma: no cover
+        raise ValueError(bd.kind)
+    if bd.cross:
+        p["normx"] = rmsnorm_init(ks[2], sc.d_model)
+        p["cross"] = attn_lib.cross_init(ks[2], sc.attn)
+    if bd.ffn != "none":
+        p["norm2"] = rmsnorm_init(ks[3], sc.d_model)
+        p["ffn"] = (moe_lib.moe_init(ks[4], sc.moe) if bd.ffn == "moe"
+                    else ffn_init(ks[4], sc.d_model, sc.d_ff, sc.gated))
+    return p
+
+
+def block_init_cache(bd: BlockDef, sc: StackConfig, batch: int, length: int,
+                     enc_len: int = 0, dtype=jnp.bfloat16):
+    """Decode-time cache template for one block."""
+    cache: Dict[str, Any] = {}
+    if bd.kind == "gqa":
+        L = min(length, bd.window) if bd.window > 0 else length
+        cache["mix"] = attn_lib.gqa_init_cache(sc.attn, batch, L, dtype)
+    elif bd.kind == "mla":
+        cache["mix"] = attn_lib.mla_init_cache(sc.mla, batch, length, dtype)
+    elif bd.kind == "ssd":
+        cache["mix"] = ssm_lib.ssm_init_cache(sc.ssm, batch)
+    elif bd.kind == "rglru":
+        cache["mix"] = rglru_lib.rglru_init_cache(sc.rglru, batch)
+    if bd.cross:
+        K, D = sc.attn.num_kv_heads, sc.attn.head_dim
+        cache["cross"] = {
+            "k": jnp.zeros((batch, enc_len, K, D), dtype),
+            "v": jnp.zeros((batch, enc_len, K, D), dtype),
+            "pos": jnp.zeros((batch, enc_len), jnp.int32)}
+    return cache
+
+
+def _block_fwd(p, x, pos, bd: BlockDef, sc: StackConfig, mode: str,
+               cache=None, index=None, mrope=None, enc_out=None):
+    """Returns (x, new_cache, aux) for one block in {train, prefill, decode}."""
+    aux = {"moe_load_balance": jnp.zeros((), jnp.float32),
+           "moe_z_loss": jnp.zeros((), jnp.float32)}
+    x = constrain(x, ("batch", None, None))
+    h = rmsnorm(p["norm1"], x, sc.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    if bd.kind == "gqa":
+        if mode == "decode":
+            y, c = attn_lib.gqa_decode(p["mix"], h, cache["mix"], index,
+                                       sc.attn, window=bd.window or None,
+                                       mrope_positions=mrope)
+            new_cache["mix"] = c
+        elif mode == "prefill":
+            y, c = attn_lib.gqa_fwd(p["mix"], h, pos, sc.attn,
+                                    window=bd.window or None,
+                                    mrope_positions=mrope, return_cache=True)
+            new_cache["mix"] = c
+        else:
+            y = attn_lib.gqa_fwd(p["mix"], h, pos, sc.attn,
+                                 window=bd.window or None,
+                                 mrope_positions=mrope)
+    elif bd.kind == "mla":
+        if mode == "decode":
+            y, c = attn_lib.mla_decode(p["mix"], h, cache["mix"], index, sc.mla)
+            new_cache["mix"] = c
+        elif mode == "prefill":
+            y, c = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla, return_cache=True)
+            new_cache["mix"] = c
+        else:
+            y = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla)
+    elif bd.kind == "ssd":
+        if mode == "decode":
+            y, c = ssm_lib.ssm_decode(p["mix"], h, cache["mix"], sc.ssm)
+            new_cache["mix"] = c
+        elif mode == "prefill":
+            y, c = ssm_lib.ssm_fwd(p["mix"], h, sc.ssm, return_cache=True)
+            new_cache["mix"] = c
+        else:
+            y = ssm_lib.ssm_fwd(p["mix"], h, sc.ssm)
+    elif bd.kind == "rglru":
+        if mode == "decode":
+            y, c = rglru_lib.rglru_decode(p["mix"], h, cache["mix"], sc.rglru)
+            new_cache["mix"] = c
+        elif mode == "prefill":
+            y, c = rglru_lib.rglru_fwd(p["mix"], h, sc.rglru, return_cache=True)
+            new_cache["mix"] = c
+        else:
+            y = rglru_lib.rglru_fwd(p["mix"], h, sc.rglru)
+    else:  # pragma: no cover
+        raise ValueError(bd.kind)
+    x = x + y
+
+    if bd.cross:
+        hx = rmsnorm(p["normx"], x, sc.norm_eps)
+        if mode == "prefill":
+            c = attn_lib.cross_make_cache(p["cross"], enc_out, sc.attn)
+            new_cache["cross"] = c
+            x = x + attn_lib.cross_fwd(p["cross"], hx, c, sc.attn)
+        elif mode == "decode":
+            new_cache["cross"] = cache["cross"]
+            x = x + attn_lib.cross_fwd(p["cross"], hx, cache["cross"], sc.attn)
+        else:
+            c = attn_lib.cross_make_cache(p["cross"], enc_out, sc.attn)
+            x = x + attn_lib.cross_fwd(p["cross"], hx, c, sc.attn)
+
+    if bd.ffn != "none":
+        h2 = rmsnorm(p["norm2"], x, sc.norm_eps)
+        if bd.ffn == "moe":
+            y2, moe_aux = moe_lib.moe_apply(p["ffn"], h2, sc.moe)
+            aux = {k: aux[k] + moe_aux[k] for k in aux}
+        else:
+            y2 = ffn_apply(p["ffn"], h2, sc.act)
+        x = x + y2
+    x = constrain(x, ("batch", None, None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------- stack ----
+def _group_init(key: jax.Array, defs: Tuple[BlockDef, ...], sc: StackConfig):
+    ks = jax.random.split(key, len(defs))
+    return {f"b{i}": block_init(ks[i], bd, sc) for i, bd in enumerate(defs)}
+
+
+def stack_init(key: jax.Array, sc: StackConfig):
+    from repro.nn.module import stack_init as stacked
+    params = {}
+    for si, (defs, n) in enumerate(sc.segments):
+        kseg = jax.random.fold_in(key, si)
+        params[f"seg{si}"] = stacked(lambda k: _group_init(k, defs, sc), kseg, n)
+    return params
+
+
+def stack_init_cache(sc: StackConfig, batch: int, length: int, enc_len: int = 0,
+                     dtype=jnp.bfloat16):
+    """Stacked (per-segment) decode caches matching stack_init's layout."""
+    caches = {}
+    for si, (defs, n) in enumerate(sc.segments):
+        group = {f"b{i}": block_init_cache(bd, sc, batch, length, enc_len, dtype)
+                 for i, bd in enumerate(defs)}
+        caches[f"seg{si}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), group)
+    return caches
+
+
+def _apply_qdq(gp, codes, qdq_fn, defs):
+    if qdq_fn is None:
+        return gp
+    return {f"b{i}": jax.tree.map(lambda w: qdq_fn(w, codes[i]), gp[f"b{i}"])
+            for i in range(len(defs))}
+
+
+def stack_fwd(params, x, pos, sc: StackConfig, mode: str = "train",
+              caches=None, index=None, codes=None, qdq_fn=None, mrope=None,
+              enc_out=None):
+    """Run the full stack.
+
+    Returns (x, new_caches, aux) — caches is None for mode="train".
+    codes: (num_layers,) int32 Tri-Accel precision codes (train mode only).
+    """
+    aux = {"moe_load_balance": jnp.zeros((), jnp.float32),
+           "moe_z_loss": jnp.zeros((), jnp.float32)}
+    new_caches = {} if mode != "train" else None
+    layer0 = 0
+    for si, (defs, n) in enumerate(sc.segments):
+        gp = params[f"seg{si}"]
+        k = len(defs)
+        seg_codes = (codes[layer0:layer0 + n * k].reshape(n, k)
+                     if codes is not None else None)
+        layer0 += n * k
+
+        if mode == "train":
+            if seg_codes is None:
+                seg_codes = jnp.ones((n, k), jnp.int32)  # default tier: bf16
+
+            def body(carry, xs):
+                xc, lb, zl = carry
+                gpi, ci = xs
+                gpi = _apply_qdq(gpi, ci, qdq_fn, defs)
+                for i, bd in enumerate(defs):
+                    xc, _, ai = _block_fwd(gpi[f"b{i}"], xc, pos, bd, sc,
+                                           "train", mrope=mrope, enc_out=enc_out)
+                    lb = lb + ai["moe_load_balance"]
+                    zl = zl + ai["moe_z_loss"]
+                return (xc, lb, zl), None
+
+            body_fn = jax.checkpoint(body) if sc.remat else body
+            (x, lb, zl), _ = jax.lax.scan(
+                body_fn, (x, aux["moe_load_balance"], aux["moe_z_loss"]),
+                (gp, seg_codes))
+            aux = {"moe_load_balance": lb, "moe_z_loss": zl}
+        elif mode == "prefill":
+            def body_p(xc, gpi):
+                cs = {}
+                for i, bd in enumerate(defs):
+                    xc, ci, _ = _block_fwd(gpi[f"b{i}"], xc, pos, bd, sc,
+                                           "prefill", mrope=mrope, enc_out=enc_out)
+                    cs[f"b{i}"] = ci
+                return xc, cs
+
+            x, segc = jax.lax.scan(body_p, x, gp)
+            new_caches[f"seg{si}"] = segc
+        elif mode == "decode":
+            def body_d(xc, xs):
+                gpi, ci = xs
+                cs = {}
+                for i, bd in enumerate(defs):
+                    xc, co, _ = _block_fwd(gpi[f"b{i}"], xc, pos, bd, sc,
+                                           "decode", cache=ci[f"b{i}"],
+                                           index=index, mrope=mrope)
+                    cs[f"b{i}"] = co
+                return xc, cs
+
+            x, segc = jax.lax.scan(body_d, x, (gp, caches[f"seg{si}"]))
+            new_caches[f"seg{si}"] = segc
+        else:  # pragma: no cover
+            raise ValueError(mode)
+    return x, new_caches, aux

@@ -1,0 +1,164 @@
+"""Core layers: dense, embedding, norms, rotary embeddings, causal conv."""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Param, param
+
+
+# ---------------------------------------------------------------- dense ----
+def dense_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    axes: Tuple[Optional[str], Optional[str]],
+    use_bias: bool = False,
+    scale: Optional[float] = None,
+):
+    ks = jax.random.split(key, 2)
+    p = {"kernel": param(ks[0], (in_dim, out_dim), axes, "normal", scale)}
+    if use_bias:
+        p["bias"] = param(ks[1], (out_dim,), (axes[1],), "zeros")
+    return p
+
+
+def dense(p, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------ embedding ----
+def embedding_init(key: jax.Array, vocab: int, dim: int, scale: Optional[float] = None):
+    return {"table": param(key, (vocab, dim), ("vocab", "embed"), "embed",
+                           scale if scale is not None else 0.02)}
+
+
+def embed(p, ids: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[ids]
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    """Tied readout: (..., embed) @ (embed, vocab)."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(key: jax.Array, dim: int):
+    del key
+    return {"scale": param(jax.random.PRNGKey(0), (dim,), ("embed",), "zeros")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterization: zeros-init == identity.
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(key: jax.Array, dim: int):
+    del key
+    k = jax.random.PRNGKey(0)
+    return {"scale": param(k, (dim,), ("embed",), "ones"),
+            "bias": param(k, (dim,), ("embed",), "zeros")}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------- activations ---
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron/minitron
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# ------------------------------------------------------------------ rope ---
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Uses the "split-half" convention (rotate_half), matching llama.
+    """
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Sequence[int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions (3, ..., seq) for (t, h, w).
+
+    ``sections`` gives the number of *frequency pairs* per modality axis and
+    must sum to head_dim // 2. Each frequency band takes its rotation angle
+    from the position stream of its section.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # Frequency band i takes its rotation angle from positions[section_of(i)].
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)  # (half,)
+    pos_sel = positions.astype(jnp.float32)[sec_id]  # (half, ..., seq)
+    ang = jnp.moveaxis(pos_sel, 0, -1) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------- causal depthwise conv -
+def causal_conv1d_init(key: jax.Array, dim: int, width: int, use_bias: bool = True):
+    ks = jax.random.split(key, 2)
+    p = {"kernel": param(ks[0], (width, dim), (None, "embed"), "normal", 1.0 / width)}
+    if use_bias:
+        p["bias"] = param(ks[1], (dim,), ("embed",), "zeros")
+    return p
+
+
+def causal_conv1d(p, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (batch, seq, dim)."""
+    width = p["kernel"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    k = p["kernel"].astype(x.dtype)
+    y = sum(pad[:, i:i + x.shape[1], :] * k[i] for i in range(width))
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def causal_conv1d_step(p, x: jax.Array, conv_state: jax.Array):
+    """Single decode step. x: (batch, dim); conv_state: (batch, width-1, dim)."""
+    k = p["kernel"].astype(x.dtype)
+    width = k.shape[0]
+    full = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (b, width, dim)
+    y = jnp.einsum("bwd,wd->bd", full, k)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    new_state = full[:, 1:, :]
+    return y, new_state

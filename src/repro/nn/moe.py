@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 style: shared + routed top-k).
+
+TPU-native sort-based dispatch: assignments are ranked per expert with a
+stable argsort, dropped beyond capacity, scattered into a dense
+(experts, capacity, d) buffer (the scatter is what becomes the EP
+all-to-all under pjit), batch-processed with an einsum over the expert
+axis, and combined back with renormalized router weights.
+
+All shapes are static: capacity = ceil(tokens * top_k / E) * capacity_factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import activation
+from repro.nn.module import param
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0            # shared experts (always-on), same d_ff each
+    capacity_factor: float = 1.25
+    routed_scale: float = 1.0      # deepseek routed_scaling_factor
+    act: str = "silu"
+    aux_loss_coef: float = 0.001
+    z_loss_coef: float = 0.001
+
+
+def moe_init(key: jax.Array, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
+    scale = 1.0 / math.sqrt(d)
+    # expert tensors use dedicated logical axes ("eembed"/"emlp") so weight-
+    # layout profiles (e.g. ZeRO-1's replicate-over-data for the compute
+    # copy) never touch the routed experts — those stay EP+FSDP sharded.
+    p = {
+        "router": param(ks[0], (d, E), ("embed", "expert"), "normal", scale),
+        "w_gate": param(ks[1], (E, d, f), ("expert", "eembed", "emlp"), "normal", scale),
+        "w_up": param(ks[2], (E, d, f), ("expert", "eembed", "emlp"), "normal", scale),
+        "w_down": param(ks[3], (E, f, d), ("expert", "emlp", "eembed"), "normal",
+                        1.0 / math.sqrt(f)),
+    }
+    if cfg.num_shared:
+        fs = cfg.num_shared * f
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": param(kss[0], (d, fs), ("embed", "mlp"), "normal", scale),
+            "w_up": param(kss[1], (d, fs), ("embed", "mlp"), "normal", scale),
+            "w_down": param(kss[2], (fs, d), ("mlp", "embed"), "normal",
+                            1.0 / math.sqrt(fs)),
+        }
+    return p
+
+
+def _swiglu(x, wg, wu, wd, act):
+    h = act(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+    return h @ wd.astype(x.dtype)
+
+
+def moe_apply(p, x: jax.Array, cfg: MoEConfig):
+    """x: (B, S, d) -> (y, aux_losses dict)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    act = activation(cfg.act)
+    xf = x.reshape(T, d)
+
+    # ---- router ----
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (T, k)
+    top_w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    top_w = (top_w * cfg.routed_scale).astype(x.dtype)
+
+    # ---- aux losses (Switch-style load balance + router z-loss) ----
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux = {"moe_load_balance": cfg.aux_loss_coef * E * jnp.sum(me * ce),
+           "moe_z_loss": cfg.z_loss_coef *
+           jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))}
+
+    # ---- rank assignments within each expert (stable sort) ----
+    C = max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+    flat_e = top_e.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < C
+    rank_c = jnp.minimum(rank, C - 1)
+    token_id = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    # ---- dispatch: scatter tokens into (E, C, d); this is the EP a2a ----
+    # (NOTE, measured in §Perf: forcing buf/y_buf shardings with
+    # with_sharding_constraint made the dispatch 12x WORSE under pjit —
+    # XLA re-sharded the scatter/gather operands at full size. Left to
+    # propagation; the true fix is a shard_map ragged all-to-all dispatch,
+    # designed in DESIGN.md.)
+    contrib = jnp.where(keep[:, None], xf[token_id], 0.0)
+    buf = jnp.zeros((E, C, d), x.dtype).at[flat_e, rank_c].add(contrib)
+
+    # ---- expert computation, batched over the expert axis ----
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # ---- combine ----
+    y_assign = y_buf[flat_e, rank_c] * jnp.where(keep, 1.0, 0.0)[:, None]
+    y = (y_assign.reshape(T, k, d) * top_w[..., None]).sum(axis=1)
+
+    if cfg.num_shared:
+        sp = p["shared"]
+        y = y + _swiglu(xf, sp["w_gate"], sp["w_up"], sp["w_down"], act)
+    return y.reshape(B, S, d), aux

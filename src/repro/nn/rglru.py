@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    log a_t = -c * softplus(Lambda) * r_t   # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses `jax.lax.associative_scan` over the sequence (the
+recurrence h_t = a_t h_{t-1} + b_t is associative); decode is the exact
+single-step update. The block is: proj -> conv1d -> RG-LRU, gated by a
+parallel GeLU branch, then an output projection (Griffin recurrent block).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (causal_conv1d, causal_conv1d_init,
+                             causal_conv1d_step, dense, dense_init)
+from repro.nn.module import param
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+
+
+def rglru_init(key: jax.Array, cfg: RGLRUConfig):
+    ks = jax.random.split(key, 7)
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wx": dense_init(ks[0], d, w, ("embed", "mlp")),
+        "wgate": dense_init(ks[1], d, w, ("embed", "mlp")),
+        "conv": causal_conv1d_init(ks[2], w, cfg.conv_width),
+        "wa": dense_init(ks[3], w, w, ("mlp", "mlp2"), use_bias=True),
+        "wi": dense_init(ks[4], w, w, ("mlp", "mlp2"), use_bias=True),
+        # Lambda init so that a^c covers [0.9, 0.999] at r ~= 1 (griffin)
+        "lam": param(ks[5], (w,), ("mlp",), "uniform", 1.0),
+        "out": dense_init(ks[6], w, d, ("mlp", "embed")),
+    }
+
+
+def _gates(p, x):
+    """x: (..., w) post-conv branch -> (log_a, b) of the recurrence."""
+    r = jax.nn.sigmoid(dense(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wi"], x).astype(jnp.float32))
+    softplus_lam = jax.nn.softplus(p["lam"].astype(jnp.float32) + 4.0)
+    log_a = -_C * softplus_lam * r                      # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_fwd(p, u: jax.Array, cfg: RGLRUConfig, return_cache: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model)."""
+    x = dense(p["wx"], u)
+    gate = dense(p["wgate"], u)
+    xc = causal_conv1d(p["conv"], x)
+    a, b = _gates(p, xc)                                # (B, S, w) f32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(u.dtype) * jax.nn.gelu(gate))
+    out = dense(p["out"], y)
+    if return_cache:
+        conv_state = x[:, -(cfg.conv_width - 1):, :].astype(jnp.float32)
+        return out, {"h": h[:, -1, :], "conv": conv_state}
+    return out
+
+
+def rglru_init_cache(cfg: RGLRUConfig, batch: int):
+    return {"h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                              jnp.float32)}
+
+
+def rglru_decode(p, u: jax.Array, cache, cfg: RGLRUConfig):
+    """One step. u: (B, 1, d_model)."""
+    x = dense(p["wx"], u[:, 0, :])
+    gate = dense(p["wgate"], u[:, 0, :])
+    xc, conv_state = causal_conv1d_step(
+        p["conv"], x.astype(cache["conv"].dtype), cache["conv"])
+    a, b = _gates(p, xc)
+    h = a * cache["h"] + b
+    y = (h.astype(u.dtype) * jax.nn.gelu(gate))
+    out = dense(p["out"], y)[:, None, :]
+    return out, {"h": h, "conv": conv_state}

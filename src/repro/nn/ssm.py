@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) block, chunked-scan formulation.
+
+Per head h with state (P, N): the recurrence
+    H_t = exp(a_t) H_{t-1} + dt_t * x_t B_t^T,   y_t = H_t C_t + D x_t
+(a_t = dt_t * A_h <= 0) is evaluated chunk-wise: a quadratic masked
+"attention" term within each chunk plus a carried inter-chunk state — one
+`lax.scan` over chunks, O(S*Q) time, O(Q^2) score memory per head.
+
+Decode is the exact single-step recurrence against (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (causal_conv1d, causal_conv1d_init,
+                             causal_conv1d_step, dense, dense_init, rmsnorm,
+                             rmsnorm_init)
+from repro.nn.module import param
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    state_dim: int = 128           # N
+    head_dim: int = 64             # P
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key: jax.Array, cfg: SSMConfig):
+    ks = jax.random.split(key, 6)
+    d, di, H, N, G = cfg.d_model, cfg.d_inner, cfg.num_heads, cfg.state_dim, cfg.n_groups
+    conv_dim = di + 2 * G * N
+    # in_proj emits [z, x, B, C, dt]
+    proj_dim = 2 * di + 2 * G * N + H
+    p = {
+        "in_proj": dense_init(ks[0], d, proj_dim, ("embed", "mlp")),
+        "conv": causal_conv1d_init(ks[1], conv_dim, cfg.conv_width),
+        "A_log": param(ks[2], (H,), ("heads",), "mamba_alog"),  # A = -exp(A_log)
+        "D": param(ks[3], (H,), ("heads",), "ones"),
+        "dt_bias": param(ks[4], (H,), ("heads",), "zeros"),
+        "norm": rmsnorm_init(ks[5], di),
+        "out_proj": dense_init(jax.random.fold_in(ks[5], 1), di, d, ("mlp", "embed")),
+    }
+    return p
+
+
+def _split_proj(proj, cfg: SSMConfig):
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.state_dim, cfg.num_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * G * N], axis=-1)
+    return z, xbc, dt  # (..., di), (..., di + 2GN), (..., H)
+
+
+def _split_xbc(xbc, cfg: SSMConfig):
+    di, G, N = cfg.d_inner, cfg.n_groups, cfg.state_dim
+    x, B, C = jnp.split(xbc, [di, di + G * N], axis=-1)
+    return x, B, C
+
+
+def ssm_fwd(p, u: jax.Array, cfg: SSMConfig, return_cache: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model). S % chunk == 0 (pad upstream)."""
+    Bb, S, _ = u.shape
+    H, P, N, G, Q = cfg.num_heads, cfg.head_dim, cfg.state_dim, cfg.n_groups, cfg.chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = H // G
+
+    proj = dense(p["in_proj"], u)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = jax.nn.silu(causal_conv1d(p["conv"], xbc))
+    xs, Bs, Cs = _split_xbc(xbc, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,), negative
+    a = dt * A                                                # (B, S, H)
+
+    xh = xs.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    Bh = Bs.reshape(Bb, nc, Q, G, N).astype(jnp.float32)
+    Ch = Cs.reshape(Bb, nc, Q, G, N).astype(jnp.float32)
+    ah = a.reshape(Bb, nc, Q, H)
+    dth = dt.reshape(Bb, nc, Q, H)
+
+    def chunk_step(state, inp):
+        # state: (B, H, P, N)
+        xc, Bc, Cc, ac, dtc = inp  # (B,Q,H,P), (B,Q,G,N), (B,Q,G,N), (B,Q,H), (B,Q,H)
+        s = jnp.cumsum(ac, axis=1)                            # (B,Q,H) cumulative decay
+        # intra-chunk quadratic term: W[q,k] = (C_q . B_k) * exp(s_q - s_k) * dt_k, k<=q
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cc, Bc)            # (B,G,Q,Q)
+        CB = jnp.repeat(CB, rep, axis=1)                      # (B,H,Q,Q)
+        ds = s[:, :, None, :] - s[:, None, :, :]              # (B,Q,Q,H) s_q - s_k
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # clamp masked entries BEFORE exp: exp(+big) would be inf and poison
+        # the backward pass through the where (inf * 0 -> nan).
+        ds = jnp.where(mask[None, :, :, None], ds, -1e9)
+        L = jnp.exp(ds)
+        W = CB * jnp.transpose(L, (0, 3, 1, 2)) \
+            * jnp.transpose(dtc, (0, 2, 1))[:, :, None, :]    # (B,H,Q,Q)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", W, xc)
+        # inter-chunk: contribution of carried state
+        Ck = jnp.repeat(Cc, rep, axis=2)                      # (B,Q,H,N)
+        y_inter = jnp.einsum("bqhn,bhpn,bqh->bqhp", Ck, state, jnp.exp(s))
+        # state update: H_new = exp(s_Q) H + sum_k exp(s_Q - s_k) dt_k x_k B_k^T
+        w_end = jnp.exp(s[:, -1:, :] - s) * dtc               # (B,Q,H)
+        Bk = jnp.repeat(Bc, rep, axis=2)                      # (B,Q,H,N)
+        dstate = jnp.einsum("bkhp,bkhn,bkh->bhpn", xc, Bk, w_end)
+        state = state * jnp.exp(s[:, -1, :])[:, :, None, None] + dstate
+        return state, y_intra + y_inter
+    state0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(
+        chunk_step, state0,
+        (xh.swapaxes(0, 1), Bh.swapaxes(0, 1), Ch.swapaxes(0, 1),
+         ah.swapaxes(0, 1), dth.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, P)
+    y = y + xh.reshape(Bb, S, H, P) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, S, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)
+    if return_cache:
+        conv_state = _conv_tail(p, u, cfg)
+        return out, {"ssm": state.astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def _conv_tail(p, u, cfg: SSMConfig):
+    """Final (width-1) pre-activation conv inputs, for prefill->decode handoff."""
+    proj = dense(p["in_proj"], u)
+    _, xbc, _ = _split_proj(proj, cfg)
+    w = cfg.conv_width
+    return xbc[:, -(w - 1):, :].astype(jnp.float32)
+
+
+def ssm_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.state_dim
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.state_dim
+    return {"ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32)}
+
+
+def ssm_decode(p, u: jax.Array, cache, cfg: SSMConfig):
+    """One step. u: (B, 1, d_model)."""
+    Bb = u.shape[0]
+    H, P, N, G = cfg.num_heads, cfg.head_dim, cfg.state_dim, cfg.n_groups
+    rep = H // G
+    proj = dense(p["in_proj"], u[:, 0, :])
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc_c, conv_state = causal_conv1d_step(
+        p["conv"], xbc.astype(cache["conv"].dtype), cache["conv"])
+    xbc_c = jax.nn.silu(xbc_c)
+    x, B, C = _split_xbc(xbc_c, cfg)
+    x = x.reshape(Bb, H, P).astype(jnp.float32)
+    B = jnp.repeat(B.reshape(Bb, G, N), rep, axis=1).astype(jnp.float32)
+    C = jnp.repeat(C.reshape(Bb, G, N), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                        # (B, H)
+    state = cache["ssm"] * a[:, :, None, None] + \
+        jnp.einsum("bhp,bhn,bh->bhpn", x, B, dt)
+    y = jnp.einsum("bhpn,bhn->bhp", state, C) + x * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)[:, None, :]
+    return out, {"ssm": state, "conv": conv_state}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, sgdm, adamw, apply_updates, global_norm
+from repro.optim.compression import compressed_psum_grads

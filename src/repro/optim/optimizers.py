@@ -1,0 +1,99 @@
+"""Optimizers over fp32 master params with per-leaf LR scaling.
+
+``update(grads, state, params, lr)`` where ``lr`` is a scalar OR a tree of
+per-leaf multipliers (Tri-Accel's curvature-scaled per-layer learning rates
+are broadcast to leaves via repro.core.grouping.LayerGrouping.broadcast).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, lr) -> (updates, state)
+    slots: int                   # fp32 state slots per param (memory model)
+
+
+def _lr_leaf(lr, leaf_path_idx, lr_tree_leaves):
+    return lr_tree_leaves[leaf_path_idx] if lr_tree_leaves is not None else lr
+
+
+def _as_lr_tree(lr, params):
+    if isinstance(lr, (int, float)) or (hasattr(lr, "ndim") and lr.ndim == 0):
+        return None
+    return lr
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
+         nesterov: bool = False) -> Optimizer:
+    """SGD with momentum — the paper's baseline optimizer."""
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        lr_tree = _as_lr_tree(lr, params)
+
+        def upd(g, mu, p, s):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu = momentum * mu + g
+            step = (momentum * mu + g) if nesterov else mu
+            return (-s * step).astype(p.dtype), mu
+
+        scales = lr_tree if lr_tree is not None else jax.tree.map(lambda p: lr, params)
+        out = jax.tree.map(upd, grads, state["mu"], params, scales)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update, slots=1)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        lr_tree = _as_lr_tree(lr, params)
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p, s):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-s * step).astype(p.dtype), m, v
+
+        scales = lr_tree if lr_tree is not None else jax.tree.map(lambda p: lr, params)
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params, scales)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer(init, update, slots=2)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

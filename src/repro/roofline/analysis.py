@@ -1,0 +1,95 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = coll_bytes  / (chips * link_bw)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the per-device
+program, so per-device quantities are multiplied by chip count to express the
+global numerator (the two conventions give identical terms).
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and sum
+the shard-shape bytes of every collective op (all-reduce counted twice for
+the ring's reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape literal, e.g. f32[16,1024]{1,0} or bf16[8]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip."""
+    peak_flops: float = 197e12       # bf16
+    hbm_bw: float = 819e9            # bytes/s
+    link_bw: float = 50e9            # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output-shape sized).
+
+    ``-done`` ops are skipped so async (start/done) pairs count once.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_text)
+        if kind == "all-reduce":
+            b *= 2  # ring = reduce-scatter + all-gather passes
+        out[kind] += b
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, hw: HW = HW()):
+    return {
+        "compute_s": flops_per_device / hw.peak_flops,
+        "memory_s": bytes_per_device / hw.hbm_bw,
+        "collective_s": collective_bytes_per_device / hw.link_bw,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+
+
+def model_flops(n_params_active: float, tokens: float, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (train fwd+bwd) or 2*N*D (inference fwd)."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_params_active * tokens

@@ -1,0 +1,319 @@
+"""Analytic FLOPs / HBM-traffic model, per (architecture x shape).
+
+Why analytic: XLA's ``cost_analysis()`` visits each instruction once, so
+with scan-over-layers (and grad-accum / attention-chunk scans) it
+undercounts flops and bytes by the loop trip counts — by ~L x for an
+L-layer stack. The dry-run records the raw cost_analysis numbers for
+reference, but roofline terms are derived from this model, which enumerates
+every GEMM the executed graph performs (and is cross-checked against
+MODEL_FLOPS = 6*N*D; see EXPERIMENTS.md).
+
+Conventions:
+  * flops per GEMM (m,k,n): 2*m*k*n.
+  * bytes per GEMM: (m*k + gather_factor*k*n + m*n) * dtype_bytes —
+    activations read, weights read (x2 when FSDP writes the gathered copy
+    to HBM first), outputs written. Attention score/context GEMMs are
+    special-cased: online-softmax never materializes (T, ctx) in HBM, so
+    only q/k/v/out traffic is counted for them.
+  * train factor: fwd + backward (2x) + remat recompute (1x when
+    stack.remat) = 4x fwd flops (3x without remat); same factor applied to
+    traffic.
+  * The chunked-jnp attention computes ALL (q,k) chunk pairs (masking,
+    not skipping): executed context = full S. ``window_skip``/
+    ``causal_skip`` model kernels that skip masked blocks (the Pallas flash
+    path and the hillclimbed variants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LMConfig
+from repro.nn.blocks import BlockDef, StackConfig
+
+BF16 = 2.0
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        return self
+
+
+def gemm(m: float, k: float, n: float, mult: float = 1.0,
+         dtype_bytes: float = BF16, gather_factor: float = 2.0,
+         act_bytes: bool = True) -> Costs:
+    f = 2.0 * m * k * n * mult
+    b = (m * k + gather_factor * k * n + m * n) * dtype_bytes * mult \
+        if act_bytes else (m * k + k * n) * dtype_bytes * mult
+    return Costs(f, b)
+
+
+def attn_core(T: float, ctx: float, H: int, k_dim: int, v_dim: int,
+              kv_heads: int) -> Costs:
+    """scores + pv GEMMs with flash-style traffic (no (T,ctx) in HBM)."""
+    f = 2.0 * T * ctx * (k_dim + v_dim) * H
+    # q read + k,v read + out write
+    b = (T * H * k_dim + T * kv_heads * (k_dim + v_dim) + T * H * v_dim) * BF16
+    return Costs(f, b)
+
+
+def _exec_ctx(S: float, window: int, causal_skip: bool,
+              window_skip: bool) -> float:
+    ctx = S
+    if window_skip and window and window > 0:
+        ctx = min(float(window), S)
+    elif causal_skip:
+        ctx = S / 2.0
+    return ctx
+
+
+def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
+              causal_skip=False, window_skip=False, enc_len: float = 0.0,
+              decode_ctx: Optional[float] = None) -> Costs:
+    c = Costs()
+    dm = sc.d_model
+    if bd.kind == "gqa":
+        a = sc.attn
+        H, K, D = a.num_heads, a.num_kv_heads, a.head_dim
+        c += gemm(T, dm, H * D)                    # q
+        c += gemm(T, dm, K * D, 2)                 # k, v
+        c += gemm(T, H * D, dm)                    # o
+        if decode_ctx is not None:
+            ctx = decode_ctx
+            if bd.window:
+                ctx = min(float(bd.window), ctx)
+        elif bd.window:
+            # the chunked path executes a static band for static windows
+            band = -(-(bd.window - 1 + a.q_chunk) // a.k_chunk) * a.k_chunk
+            ctx = min(float(band), S)
+        else:
+            ctx = _exec_ctx(S, 0, causal_skip, window_skip)
+        c += attn_core(T, ctx, H, D, D, K)
+    elif bd.kind == "mla":
+        m = sc.mla
+        H = m.num_heads
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        if m.q_lora_rank:
+            c += gemm(T, dm, m.q_lora_rank)
+            c += gemm(T, m.q_lora_rank, H * qk)
+        else:
+            c += gemm(T, dm, H * qk)
+        c += gemm(T, dm, m.kv_lora_rank)           # down kv
+        c += gemm(T, dm, m.qk_rope_dim)            # k_rope
+        ctx = decode_ctx if decode_ctx is not None else \
+            _exec_ctx(S, 0, causal_skip, window_skip)
+        if decode_ctx is None:
+            # training/prefill: expand per-head k/v from c_kv
+            c += gemm(T, m.kv_lora_rank, H * m.qk_nope_dim)
+            c += gemm(T, m.kv_lora_rank, H * m.v_head_dim)
+            c += attn_core(T, ctx, H, qk, m.v_head_dim, H)
+        else:
+            # absorbed decode against the compressed cache
+            c += gemm(T, m.qk_nope_dim, m.kv_lora_rank, H)   # q absorb
+            c += attn_core(T, ctx, H, m.kv_lora_rank + m.qk_rope_dim,
+                           m.kv_lora_rank, 1)
+            c += gemm(T, m.kv_lora_rank, m.v_head_dim, H)    # wuv fold
+        c += gemm(T, H * m.v_head_dim, dm)         # o
+    elif bd.kind == "ssd":
+        s = sc.ssm
+        di, H, P, N, G, Q = (s.d_inner, s.num_heads, s.head_dim, s.state_dim,
+                             s.n_groups, s.chunk)
+        proj = 2 * di + 2 * G * N + H
+        c += gemm(T, dm, proj)                     # in_proj
+        c += Costs(2 * T * s.conv_width * (di + 2 * G * N),
+                   3 * T * (di + 2 * G * N) * BF16)          # conv
+        Qe = min(Q, S)
+        c += Costs(2 * T * Qe * G * N, 0)          # CB intra
+        c += Costs(2 * T * Qe * H * P, T * di * BF16 * 2)    # W @ x intra
+        c += Costs(4 * T * H * P * N, T * H * P * N / max(Qe, 1) * 4.0)  # state
+        c += gemm(T, di, dm)                       # out_proj
+    elif bd.kind == "rglru":
+        r = sc.rglru
+        w = r.lru_width
+        c += gemm(T, dm, w, 2)                     # wx, wgate
+        c += gemm(T, w, w, 2)                      # wa, wi gates
+        c += Costs(10 * T * w, 6 * T * w * 4.0)    # scan (f32 states)
+        c += gemm(T, w, dm)                        # out
+    if bd.cross:
+        a = sc.attn
+        H, K, D = a.num_heads, a.num_kv_heads, a.head_dim
+        c += gemm(T, dm, H * D)                    # q
+        c += gemm(T, H * D, dm)                    # o
+        c += attn_core(T, enc_len, H, D, D, K)
+        # enc k/v projections are charged to the encoder pass (once)
+    if bd.ffn == "dense":
+        n_mat = 3 if sc.gated else 2
+        c += gemm(T, dm, sc.d_ff, 1)
+        if sc.gated:
+            c += gemm(T, dm, sc.d_ff, 1)
+        c += gemm(T, sc.d_ff, dm, 1)
+    elif bd.ffn == "moe":
+        mo = sc.moe
+        c += gemm(T, dm, mo.num_experts)           # router
+        rows = T * mo.top_k * mo.capacity_factor   # executed (capacity) rows
+        c += gemm(rows, dm, mo.d_ff_expert, 2)     # gate, up
+        c += gemm(rows, mo.d_ff_expert, dm, 1)     # down
+        if mo.num_shared:
+            fs = mo.num_shared * mo.d_ff_expert
+            c += gemm(T, dm, fs, 2)
+            c += gemm(T, fs, dm, 1)
+        # dispatch/combine gathers: 2x tokens moved in and out
+        c += Costs(0, 4 * rows * dm * BF16)
+    # norms / residuals / rope: elementwise traffic
+    c += Costs(6 * T * dm, 8 * T * dm * BF16)
+    return c
+
+
+def stack_fwd_costs(sc: StackConfig, T: float, S: float, **kw) -> Costs:
+    c = Costs()
+    for defs, n in sc.segments:
+        for bd in defs:
+            sub = block_fwd(bd, sc, T, S, **kw)
+            c += Costs(sub.flops * n, sub.bytes * n)
+    return c
+
+
+def lm_fwd_costs(cfg: LMConfig, T: float, S: float, **kw) -> Costs:
+    c = stack_fwd_costs(cfg.stack, T, S, **kw)
+    c += gemm(T, cfg.d_model, cfg.vocab_size)      # unembed / loss logits
+    c += Costs(4 * T * cfg.vocab_size, T * cfg.d_model * BF16 * 2)  # softmax
+    return c
+
+
+def encdec_fwd_costs(cfg: EncDecConfig, B: float, S_enc: float, S_dec: float,
+                     **kw) -> Costs:
+    T_enc, T_dec = B * S_enc, B * S_dec
+    c = stack_fwd_costs(cfg.enc_stack, T_enc, S_enc, **kw)
+    # encoder k/v for cross-attention (once per enc token per dec layer)
+    a = cfg.dec_stack.attn
+    c += gemm(T_enc, cfg.d_model, a.num_kv_heads * a.head_dim,
+              2 * cfg.dec_stack.num_layers)
+    kw2 = dict(kw)
+    kw2["enc_len"] = S_enc          # per-sequence cross-attention context
+    c += stack_fwd_costs(cfg.dec_stack, T_dec, S_dec, **kw2)
+    c += gemm(T_dec, cfg.d_model, cfg.vocab_size)
+    c += Costs(4 * T_dec * cfg.vocab_size, 0)
+    return c
+
+
+# ------------------------------------------------------------- top level ---
+def train_costs(cfg, global_batch: int, seq_len: int,
+                causal_skip=False, window_skip=False) -> Costs:
+    remat = (cfg.dec_stack.remat if isinstance(cfg, EncDecConfig)
+             else cfg.stack.remat)
+    factor = 4.0 if remat else 3.0
+    if isinstance(cfg, EncDecConfig):
+        fwd = encdec_fwd_costs(cfg, global_batch, seq_len // 2, seq_len // 2,
+                               causal_skip=causal_skip,
+                               window_skip=window_skip)
+    else:
+        T = global_batch * seq_len
+        fwd = lm_fwd_costs(cfg, T, float(seq_len), causal_skip=causal_skip,
+                           window_skip=window_skip)
+    # optimizer + control update traffic: master/momentum fp32 read+write
+    n_params = None
+    return Costs(fwd.flops * factor, fwd.bytes * factor)
+
+
+def opt_traffic(n_params: float, slots: int = 1) -> Costs:
+    # grads f32 r+w, master f32 r+w, slots f32 r+w
+    return Costs(6 * n_params, (4 + 4 + 4 * slots) * 2 * n_params)
+
+
+def prefill_costs(cfg, global_batch: int, seq_len: int, **kw) -> Costs:
+    if isinstance(cfg, EncDecConfig):
+        return encdec_fwd_costs(cfg, global_batch, seq_len // 2,
+                                seq_len // 2, **kw)
+    return lm_fwd_costs(cfg, global_batch * seq_len, float(seq_len), **kw)
+
+
+def decode_costs(cfg, global_batch: int, cache_len: int,
+                 enc_len: float = 1536.0) -> Costs:
+    T = float(global_batch)
+    if isinstance(cfg, EncDecConfig):
+        c = stack_fwd_costs(cfg.dec_stack, T, float(cache_len),
+                            decode_ctx=float(cache_len), enc_len=enc_len,
+                            window_skip=True)
+        c += gemm(T, cfg.d_model, cfg.vocab_size)
+        # cache reads dominate traffic: charged in attn_core k/v term? No —
+        # decode reads the whole cache per step:
+        a = cfg.dec_stack.attn
+        c += Costs(0, cache_len * T * a.num_kv_heads * a.head_dim * 2 * BF16
+                   * cfg.dec_stack.num_layers)
+        return c
+    c = stack_fwd_costs(cfg.stack, T, float(cache_len),
+                        decode_ctx=float(cache_len), window_skip=True)
+    c += gemm(T, cfg.d_model, cfg.vocab_size)
+    c += Costs(0, _cache_read_bytes(cfg, T, cache_len))
+    return c
+
+
+def cache_bytes(cfg, B: float, S: float, enc_len: float = 1536.0) -> float:
+    """Total decode-cache bytes (= per-step cache read traffic)."""
+    if isinstance(cfg, EncDecConfig):
+        a = cfg.dec_stack.attn
+        self_kv = (cfg.dec_stack.num_layers * B * S
+                   * a.num_kv_heads * a.head_dim * 2 * BF16)
+        cross = (cfg.dec_stack.num_layers * B * enc_len
+                 * a.num_kv_heads * a.head_dim * 2 * BF16)
+        return self_kv + cross
+    return _cache_read_bytes(cfg, B, S)
+
+
+def hbm_estimate(cfg, kind: str, global_batch: int, seq_len: int,
+                 chips: int, accum: int, n_params: float,
+                 opt_slots: int = 1) -> float:
+    """Per-device HBM bytes: the same model the memory-elastic batch scaler
+    uses (params/optimizer/grads + remat-resident activations + MoE dispatch
+    buffers + decode caches), all fully sharded across ``chips``."""
+    if isinstance(cfg, EncDecConfig):
+        L = cfg.enc_stack.num_layers + cfg.dec_stack.num_layers
+        dm = cfg.d_model
+        moe = None
+    else:
+        L = cfg.stack.num_layers
+        dm = cfg.d_model
+        moe = cfg.stack.moe
+    if kind == "train":
+        state = n_params * (4.0 + 4.0 * opt_slots + 4.0 + 2.0)  # master+slots+grads+bf16
+        tokens_micro = global_batch * seq_len / max(accum, 1)
+        acts = 2.5 * dm * BF16 * L * tokens_micro
+        moe_buf = 0.0
+        if moe is not None:
+            rows = tokens_micro * moe.top_k * moe.capacity_factor
+            moe_buf = rows * (dm * 2 + 2 * moe.d_ff_expert) * BF16
+        return (state + acts + moe_buf) / chips
+    if kind == "prefill":
+        # no backward pass: only layer-local transients + the KV caches live
+        acts = 6.0 * dm * BF16 * global_batch * seq_len
+        kv = cache_bytes(cfg, global_batch, seq_len)
+        return (n_params * 2.0 + acts + kv) / chips
+    # decode
+    return (n_params * 2.0 + cache_bytes(cfg, global_batch, seq_len)) / chips
+
+
+def _cache_read_bytes(cfg: LMConfig, B: float, S: float) -> float:
+    total = 0.0
+    sc = cfg.stack
+    for defs, n in sc.segments:
+        for bd in defs:
+            if bd.kind == "gqa":
+                L = min(float(bd.window), S) if bd.window else S
+                total += n * B * L * sc.attn.num_kv_heads * sc.attn.head_dim \
+                    * 2 * BF16
+            elif bd.kind == "mla":
+                total += n * B * S * (sc.mla.kv_lora_rank
+                                      + sc.mla.qk_rope_dim) * BF16
+            elif bd.kind == "ssd":
+                s = sc.ssm
+                total += n * B * s.num_heads * s.head_dim * s.state_dim * 4.0
+            elif bd.kind == "rglru":
+                total += n * B * sc.rglru.lru_width * 4.0
+    return total

@@ -1,0 +1,205 @@
+"""Trip-count-aware collective extraction from optimized HLO text.
+
+XLA's cost_analysis visits each instruction once, so anything inside a
+`while` (every lax.scan: our layer stacks, grad-accum, attention chunking)
+is undercounted by its trip count. The optimized HLO, however, annotates
+loops with ``backend_config={"known_trip_count":{"n":...}}``; we walk the
+computation graph from ENTRY, multiplying per-computation collective bytes
+by the enclosing loops' trip counts.
+
+Byte accounting per op (ring algorithms, g = replica-group size):
+    all-gather:         out_bytes * (g-1)/g          (received)
+    reduce-scatter:     out_bytes * (g-1)            (shards sent/recv'd)
+    all-reduce:         2 * out_bytes * (g-1)/g      (RS + AG phases)
+    all-to-all:         out_bytes * (g-1)/g
+    collective-permute: out_bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=(%[\w.\-]+), body=(%[\w.\-]+)"
+    r".*?(?:\"known_trip_count\":\{\"n\":\"(\d+)\"\})?", re.S)
+_CALL_RE = re.compile(r"(?:to_apply|body|condition)=(%[\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            cur = m.group(1)
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = comps.setdefault(cur, [])
+                comps["__entry_name__"] = cur  # type: ignore
+            comps.setdefault(cur, [])
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes_by_op(hlo: str, top: int = 20):
+    """Trip-count-expanded per-op attribution (kind, op_name) -> bytes."""
+    comps = split_computations(hlo)
+    entry = comps.get("__entry_name__")
+    per_comp: Dict[str, list] = {}
+    children: Dict[str, list] = {}
+    for name, lines in comps.items():
+        if not isinstance(lines, list):
+            continue
+        items, kids = [], []
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm and "-done(" not in line:
+                b = float(_shape_bytes(cm.group(1)))
+                if "_promoted" in line:
+                    b *= 0.5
+                g = _group_size(line)
+                kind = cm.group(2)
+                if kind == "all-gather":
+                    b = b * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    b = b * (g - 1)
+                elif kind == "all-reduce":
+                    b = 2.0 * b * (g - 1) / g
+                elif kind == "all-to-all":
+                    b = b * (g - 1) / g
+                op = re.search(r'op_name="([^"]+)"', line)
+                items.append((kind, op.group(1)[-90:] if op else "?", b))
+            wm = re.search(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)", line)
+            if wm:
+                tm = re.search(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}", line)
+                kids.append((wm.group(2), int(tm.group(1)) if tm else 1))
+                continue
+            for cal in re.finditer(r"to_apply=(%[\w.\-]+)", line):
+                kids.append((cal.group(1), 1))
+        per_comp[name] = items
+        children[name] = kids
+
+    out: Dict = {}
+
+    def walk(name, mult, depth=0):
+        if depth > 50:
+            return
+        for kind, op, b in per_comp.get(name, []):
+            key = (kind, op)
+            out[key] = out.get(key, 0.0) + b * mult
+        for child, trips in children.get(name, []):
+            walk(child, mult * trips, depth + 1)
+
+    if isinstance(entry, str):
+        walk(entry, 1)
+    return sorted(out.items(), key=lambda kv: -kv[1])[:top]
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Returns per-device bytes by collective kind, trip-count expanded."""
+    comps = split_computations(hlo)
+    entry = comps.get("__entry_name__")
+    if not isinstance(entry, str):
+        # fallback: treat whole text as one computation, no trip expansion
+        entry = None
+
+    per_comp_coll: Dict[str, Dict[str, float]] = {}
+    per_comp_children: Dict[str, List[Tuple[str, int]]] = {}
+
+    for name, lines in comps.items():
+        if not isinstance(lines, list):
+            continue
+        coll = {}
+        children: List[Tuple[str, int]] = []
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm and "-done(" not in line:
+                shape_text, kind = cm.group(1), cm.group(2)
+                b = float(_shape_bytes(shape_text))
+                # CPU-XLA promotes bf16 reductions to f32 ("..._promoted"
+                # to_apply); TPU lowers them natively in bf16 — halve so the
+                # schedule reflects the TPU target, not the CPU artifact.
+                if "_promoted" in line:
+                    b *= 0.5
+                g = _group_size(line)
+                if kind == "all-gather":
+                    b = b * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    b = b * (g - 1)
+                elif kind == "all-reduce":
+                    b = 2.0 * b * (g - 1) / g
+                elif kind == "all-to-all":
+                    b = b * (g - 1) / g
+                coll[kind] = coll.get(kind, 0.0) + b
+            wm = re.search(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)", line)
+            if wm:
+                tm = re.search(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}", line)
+                trips = int(tm.group(1)) if tm else 1
+                children.append((wm.group(2), trips))
+                continue
+            for cal in re.finditer(r"to_apply=(%[\w.\-]+)", line):
+                children.append((cal.group(1), 1))
+        per_comp_coll[name] = coll
+        per_comp_children[name] = children
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def collect(name: str, depth=0) -> Dict[str, float]:
+        if name in memo or depth > 50:
+            return memo.get(name, {})
+        total = dict(per_comp_coll.get(name, {}))
+        for child, trips in per_comp_children.get(name, []):
+            sub = collect(child, depth + 1)
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + v * trips
+        memo[name] = total
+        return total
+
+    if entry is None:
+        # no entry found: sum everything once
+        out: Dict[str, float] = {}
+        for coll in per_comp_coll.values():
+            for k, v in coll.items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+    return collect(entry)

@@ -1,0 +1,3 @@
+from repro.train.train_step import TrainState, make_train_step, make_loss_fn, cast_params
+from repro.train.serve import make_prefill_fn, make_decode_fn
+from repro.train.schedules import warmup_cosine

@@ -1,0 +1,16 @@
+"""LR schedules (paper: 5-epoch warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.05):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return schedule

@@ -1,0 +1,35 @@
+"""Serving steps: prefill and single-token greedy decode.
+
+``decode`` takes and returns the full cache pytree (donated under jit), so
+the lowered serve_step is exactly "one new token against a seq_len cache".
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import (EncDecConfig, encdec_decode_step,
+                                 encdec_prefill)
+from repro.models.lm import LMConfig, lm_decode_step, lm_prefill
+
+
+def make_prefill_fn(cfg):
+    def prefill(params, batch):
+        if isinstance(cfg, EncDecConfig):
+            logits, caches = encdec_prefill(params, batch, cfg)
+        else:
+            logits, caches = lm_prefill(params, batch, cfg)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return prefill
+
+
+def make_decode_fn(cfg):
+    def decode(params, caches, token, index):
+        if isinstance(cfg, EncDecConfig):
+            logits, caches = encdec_decode_step(params, token, caches, index, cfg)
+        else:
+            logits, caches = lm_decode_step(params, token, caches, index, cfg)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return decode

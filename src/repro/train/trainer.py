@@ -1,0 +1,207 @@
+"""Host-side training loop: Tri-Accel control cadence, elastic batch rungs,
+fault tolerance (atomic async checkpoints, preemption, resume, elastic
+re-shard), and deterministic restartable data.
+
+Straggler/failure model (see DESIGN.md): data is a pure function of
+(seed, step, host), so any restart — same or different mesh size — resumes
+bit-identically from the last committed checkpoint without replaying or
+skipping batches; there is no data-loader state to rebuild. Preemption
+(SIGTERM) triggers checkpoint-and-exit. Batch-rung changes swap between
+AOT-warmed executables (zero-stall actuation of §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         restore_checkpoint)
+from repro.core import curvature as curv
+from repro.core.batch_scaler import BatchScaler, MemoryModel
+from repro.core.controller import init_control, with_curvature
+from repro.core.grouping import lm_grouping
+from repro.core.precision import TriAccelConfig
+from repro.data.synthetic import LMTaskStream
+from repro.launch.mesh import make_dev_mesh
+from repro.launch import sharding as shd
+from repro.models.lm import LMConfig, lm_init, lm_loss
+from repro.nn.module import split_params
+from repro.optim.optimizers import adamw, sgdm
+from repro.train.schedules import warmup_cosine
+from repro.train.train_step import TrainState, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    base_lr: float = 3e-3
+    warmup_steps: int = 20
+    optimizer: str = "sgdm"
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    accum: int = 1
+    seed: int = 0
+    seq_len: int = 128
+    rungs: tuple = (8,)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    b_curv: int = 4
+    elastic_true_batch: bool = True   # paper mode: rung changes global B
+
+
+class Trainer:
+    def __init__(self, model_cfg: LMConfig, tac: TriAccelConfig,
+                 tcfg: TrainerConfig, mesh=None):
+        self.cfg = model_cfg
+        self.tac = tac
+        self.tcfg = tcfg
+        self.mesh = mesh if mesh is not None else make_dev_mesh()
+        key = jax.random.PRNGKey(tcfg.seed)
+
+        wrapped = lm_init(key, model_cfg)
+        params, axes = split_params(wrapped)
+        self.param_axes = axes
+        self.param_sh = shd.param_shardings(
+            axes, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                               params), self.mesh)
+        params = jax.device_put(params, self.param_sh)
+
+        self.grouping = lm_grouping(params, model_cfg.stack)
+        opt = (sgdm(tcfg.momentum, tcfg.weight_decay) if tcfg.optimizer == "sgdm"
+               else adamw(weight_decay=tcfg.weight_decay))
+        self.opt = opt
+        schedule = warmup_cosine(tcfg.base_lr, tcfg.warmup_steps,
+                                 tcfg.total_steps)
+        self._step_fn = make_train_step(model_cfg, tac, opt, self.grouping,
+                                        schedule, accum=tcfg.accum,
+                                        grad_clip=tcfg.grad_clip)
+        self.state = TrainState(params, opt.init(params),
+                                init_control(self.grouping.num_layers, tac))
+
+        # §3.3: memory model + rung controller
+        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        mm = MemoryModel.for_transformer(
+            n_params / self.mesh.size, model_cfg.d_model,
+            model_cfg.num_layers, opt_slots=opt.slots,
+            remat=model_cfg.stack.remat)
+        self.scaler = BatchScaler(tcfg.rungs, tcfg.seq_len, mm, tac)
+
+        self.stream = LMTaskStream(model_cfg.vocab_size, tcfg.seq_len,
+                                   self._global_batch(), seed=tcfg.seed)
+        self._jitted: Dict[int, Any] = {}
+        self._curv_fn = None
+        self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir, tcfg.ckpt_keep)
+                     if tcfg.ckpt_dir else None)
+        self._preempted = False
+        self.metrics_log = []
+
+    # ------------------------------------------------------------- utils --
+    def _global_batch(self) -> int:
+        dp = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                dp *= self.mesh.shape[a]
+        return self.scaler.microbatch * dp if hasattr(self, "scaler") \
+            else self.tcfg.rungs[-1] * dp
+
+    def _get_step(self, batch_size: int):
+        """AOT-warmed executable per batch rung (zero-stall rung switches)."""
+        if batch_size not in self._jitted:
+            with self.mesh, shd.activation_mesh(self.mesh):
+                self._jitted[batch_size] = jax.jit(self._step_fn,
+                                                   donate_argnums=(0,))
+        return self._jitted[batch_size]
+
+    def warm_rungs(self):
+        for r in self.tcfg.rungs:
+            dummy = self._batch_for_rung(r, 0)
+            self._get_step(r)  # jit cache entry; compiled on first call
+            del dummy
+
+    def _batch_for_rung(self, rung: int, step: int):
+        stream = dataclasses.replace(
+            self.stream, global_batch=self._dp_size() * rung) \
+            if self.tcfg.elastic_true_batch else self.stream
+        return stream.batch(step)
+
+    def _dp_size(self) -> int:
+        dp = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                dp *= self.mesh.shape[a]
+        return dp
+
+    # ------------------------------------------------- fault tolerance ----
+    def install_preemption_handler(self):
+        def _handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, _handler)
+
+    def maybe_restore(self) -> int:
+        if not (self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None):
+            return 0
+        # elastic re-shard: checkpoints are host-layout, so leaves re-place
+        # onto THIS mesh whatever mesh wrote them
+        host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
+        params = jax.device_put(host.params, self.param_sh)
+        self.state = TrainState(params, jax.device_put(host.opt_state),
+                                jax.device_put(host.control))
+        return int(self.state.control.step)
+
+    # -------------------------------------------------------------- run ---
+    def run(self, steps: Optional[int] = None):
+        steps = steps if steps is not None else self.tcfg.total_steps
+        start = int(self.state.control.step)
+        t0 = time.time()
+        for step in range(start, start + steps):
+            if self._preempted:
+                if self.ckpt:
+                    self.ckpt.save(step, self.state, block=True)
+                raise SystemExit(143)
+            rung = self.scaler.microbatch
+            batch = self._batch_for_rung(rung, step)
+            step_fn = self._get_step(rung)
+            with self.mesh, shd.activation_mesh(self.mesh):
+                self.state, metrics = step_fn(self.state, batch)
+
+            # §3.2 curvature cadence (host side, tiny batch)
+            if self.tac.enable_curvature and step > 0 and \
+                    step % self.tac.t_curv == 0:
+                lam = self._curvature(step)
+                self.state = self.state._replace(
+                    control=with_curvature(self.state.control, lam))
+            # §3.3 batch-rung cadence
+            if step > 0 and step % self.tac.t_ctrl == 0:
+                codes = jax.device_get(self.state.control.codes)
+                self.scaler.observe(step, codes=list(codes))
+            if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, self.state)
+            if step % self.tcfg.log_every == 0:
+                m = {k: float(v) for k, v in jax.device_get(metrics).items()}
+                m.update(step=step, rung=rung,
+                         mem_gb=self.scaler._mem(self.scaler.idx) / 1e9,
+                         wall_s=round(time.time() - t0, 2))
+                self.metrics_log.append(m)
+        if self.ckpt:
+            self.ckpt.save(start + steps, self.state, block=True)
+        return self.metrics_log
+
+    def _curvature(self, step: int):
+        mb = self.stream.batch(step)
+        small = jax.tree.map(lambda x: x[:self.tcfg.b_curv], mb)
+        loss_fn = lambda p, b: lm_loss(p, b, self.cfg)[0]
+        if self.tac.curvature_method == "fisher":
+            g = jax.grad(loss_fn)(self.state.params, small)
+            return curv.fisher_layer(g, self.grouping.mean)
+        key = jax.random.PRNGKey(step)
+        return curv.hutchinson_layer_traces(
+            loss_fn, self.state.params, lambda t: self.grouping.mean(t),
+            key, 1, small)

@@ -1,0 +1,91 @@
+"""Tri-Accel training step for the paper's vision testbed (ResNet-18 /
+EfficientNet-B0, BatchNorm state threaded alongside params).
+
+Used by examples/paper_repro.py and benchmarks/table1.py / table2.py to
+reproduce the paper's FP32 / AMP-static / Tri-Accel comparison: the same
+§3.4 control loop as the LM path, with the per-layer grouping over the
+model's top-level blocks (paper-faithful gpu ladder: fp16/bf16/fp32 on f32
+containers, dynamic loss scaling).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import ControlState, lr_scales, update_control
+from repro.core.grouping import flat_grouping
+from repro.core.precision import TriAccelConfig, make_qdq_fn
+from repro.models.vision import VisionConfig, vision_apply
+from repro.optim.optimizers import Optimizer, apply_updates, global_norm
+
+
+class VisionTrainState(NamedTuple):
+    params: Any
+    bn_state: Any
+    opt_state: Any
+    control: ControlState
+
+
+def _apply_codes(params, codes, qdq_fn, keys):
+    if qdq_fn is None:
+        return params
+    return {k: jax.tree.map(lambda w: qdq_fn(w, codes[i]), params[k])
+            for i, k in enumerate(keys)}
+
+
+def make_vision_train_step(cfg: VisionConfig, tac: TriAccelConfig,
+                           opt: Optimizer, grouping, schedule,
+                           grad_clip: float = 0.0):
+    qdq_fn = make_qdq_fn(tac)
+    keys = grouping.names
+
+    def loss_at(params, bn_state, batch, codes, ls):
+        p = _apply_codes(params, codes, qdq_fn, keys)
+        logits, new_bn = vision_apply(p, bn_state, batch["images"], True, cfg)
+        one = jax.nn.one_hot(batch["labels"], cfg.num_classes)
+        loss = -jnp.mean(jnp.sum(one * jax.nn.log_softmax(logits), axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                        ).astype(jnp.float32))
+        return loss * ls, (new_bn, {"loss": loss, "accuracy": acc})
+
+    def train_step(state: VisionTrainState, batch):
+        params, bn_state, opt_state, control = state
+        ls = control.loss_scale
+        grads, (new_bn, metrics) = jax.grad(loss_at, has_aux=True)(
+            params, bn_state, batch, control.codes, ls)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / ls, grads)
+        finite = jnp.all(jnp.stack([jnp.all(jnp.isfinite(g))
+                                    for g in jax.tree.leaves(grads)]))
+        if grad_clip > 0:
+            gn = global_norm(grads)
+            grads = jax.tree.map(
+                lambda g: g * jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9)),
+                grads)
+        control2 = update_control(control, grouping.moments(grads), tac, finite)
+        lr = schedule(control2.step)
+        lr_tree = grouping.broadcast(lr_scales(control2, tac) * lr, params)
+        updates, opt_state2 = opt.update(grads, opt_state, params, lr_tree)
+        new_params = apply_updates(params, updates)
+        keep = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(finite, a, b), new, old)
+        new_params = keep(new_params, params)
+        opt_state2 = keep(opt_state2, opt_state)
+        new_bn = keep(new_bn, bn_state)
+        metrics = dict(metrics)
+        metrics.update(grads_finite=finite, loss_scale=control2.loss_scale,
+                       frac_low=jnp.mean((control2.codes == 0).astype(jnp.float32)),
+                       frac_fp32=jnp.mean((control2.codes == 2).astype(jnp.float32)))
+        return VisionTrainState(new_params, new_bn, opt_state2, control2), metrics
+
+    return train_step
+
+
+def make_vision_eval(cfg: VisionConfig):
+    @jax.jit
+    def evaluate(params, bn_state, batch):
+        logits, _ = vision_apply(params, bn_state, batch["images"], False, cfg)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                         ).astype(jnp.float32))
+    return evaluate

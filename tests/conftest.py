@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests run on 1 CPU device (the dry-run, and ONLY the dry-run, forces 512)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,73 @@
+"""Attention equivalences: chunked == naive across masks/GQA; MLA absorbed
+decode == expanded prefill; rope relativity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (AttnConfig, MLAConfig, _chunked_attention,
+                                _naive_attention, mla_decode, mla_fwd,
+                                mla_init, mla_init_cache)
+from repro.nn.layers import apply_rope
+from repro.nn.module import split_params
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("HK", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, None), (False, 8)])
+def test_chunked_matches_naive(HK, causal, window):
+    H, K = HK
+    B, Sq, Sk, D = 2, 64, 64, 16
+    q = jax.random.normal(KEY, (B, Sq, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Sk, K, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Sk, K, D))
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    a = _naive_attention(q, k, v, qp, kp, causal, window, D ** -0.5)
+    b = _chunked_attention(q, k, v, qp, kp, causal, window, D ** -0.5, 16, 16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    """The compressed-cache absorbed decode must equal the expanded
+    (training) formulation position by position."""
+    cfg = MLAConfig(d_model=48, num_heads=3, q_lora_rank=24, kv_lora_rank=16,
+                    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, impl="naive")
+    p, _ = split_params(mla_init(KEY, cfg))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (B, S, 48))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    y_full = mla_fwd(p, x, pos, cfg)
+    cache = mla_init_cache(cfg, B, S, dtype=jnp.float32)
+    outs = []
+    for i in range(S):
+        y, cache = mla_decode(p, x[:, i:i + 1], cache, jnp.asarray(i), cfg)
+        outs.append(y)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               atol=3e-5)
+
+
+def test_rope_is_relative():
+    """shifting q and k positions together leaves scores unchanged."""
+    D = 32
+    q = jax.random.normal(KEY, (1, 4, 2, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 4, 2, D))
+    p0 = jnp.arange(4, dtype=jnp.int32)[None]
+    p1 = p0 + 17
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, p0), apply_rope(k, p0))
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, p1), apply_rope(k, p1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-4)
+
+
+def test_mrope_sections_match_rope_when_positions_equal():
+    from repro.nn.layers import apply_mrope
+    D = 32
+    x = jax.random.normal(KEY, (2, 6, 2, D))
+    pos = jnp.broadcast_to(jnp.arange(6, dtype=jnp.int32)[None], (2, 6))
+    mpos = jnp.stack([pos, pos, pos])
+    a = apply_rope(x, pos)
+    b = apply_mrope(x, mpos, (8, 4, 4))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -1,0 +1,58 @@
+"""Analytic cost model sanity: executed train FLOPs bracket MODEL_FLOPS
+(6ND) within the expected remat/attention envelope for every LM arch."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.dryrun import param_count_active
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import lm_init
+from repro.models.encdec import encdec_init
+from repro.models.registry import get_arch_module, list_architectures
+from repro.roofline import costmodel as cm
+
+
+@pytest.mark.parametrize("arch", list_architectures())
+def test_train_flops_bracket_model_flops(arch):
+    cfg = get_arch_module(arch).config()
+    init = encdec_init if isinstance(cfg, EncDecConfig) else lm_init
+    pshape = jax.eval_shape(lambda k: init(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshape = jax.tree.map(lambda p: p.value, pshape,
+                          is_leaf=lambda x: hasattr(x, "axes"))
+    n_active = param_count_active(cfg, pshape)
+    B, S = 256, 4096
+    model = 6.0 * n_active * B * S
+    if isinstance(cfg, EncDecConfig):
+        # enc-dec runs each token through only half the stack
+        model = model / 2
+    exec_ = cm.train_costs(cfg, B, S).flops
+    # executed >= useful (remat 8/6, attention, capacity overheads), but
+    # never more than ~6x (would indicate a unit bug)
+    assert 0.9 * model <= exec_ <= 6.0 * model, (arch, exec_ / model)
+
+
+def test_decode_costs_scale_with_cache():
+    cfg = get_arch_module("stablelm-1.6b").config()
+    a = cm.decode_costs(cfg, 128, 1024).flops
+    b = cm.decode_costs(cfg, 128, 32768).flops
+    assert b > a  # attention term grows with cache
+
+    m = get_arch_module("mamba2-370m").config()
+    a = cm.decode_costs(m, 128, 1024).flops
+    b = cm.decode_costs(m, 128, 524288).flops
+    assert abs(b - a) / a < 1e-6  # O(1) state: no growth
+
+
+def test_window_band_reduces_train_flops():
+    g = get_arch_module("gemma3-4b").config()
+    banded = cm.train_costs(g, 32, 4096).flops
+    # against a hypothetical full-sweep (window treated as global)
+    import dataclasses
+    loc_free = dataclasses.replace(
+        g, stack=dataclasses.replace(
+            g.stack, segments=tuple(
+                (tuple(dataclasses.replace(bd, window=0) for bd in defs), n)
+                for defs, n in g.stack.segments)))
+    full = cm.train_costs(loc_free, 32, 4096).flops
+    assert banded < full

@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+Kernels execute in interpret mode on CPU; BlockSpec tiling targets TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("shape", [(8,), (100,), (256, 512), (1000, 37),
+                                   (3, 17, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ladder", ["tpu", "gpu"])
+@pytest.mark.parametrize("code", [0, 1, 2])
+def test_qdq_cast(shape, dtype, ladder, code):
+    x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+    got = ops.qdq_cast(x, jnp.asarray(code), ladder)
+    want = ref.qdq_cast_ref(x, jnp.asarray(code), ladder)
+    assert got.dtype == x.dtype and got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("shape", [(64,), (513, 129), (1024, 512), (7, 3, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grad_stats(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 2).astype(dtype)
+    s, ss, mx = ops.grad_stats(x)
+    rs, rss, rmx = ref.grad_stats_ref(x)
+    np.testing.assert_allclose(float(s), float(rs), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(ss), float(rss), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(mx), float(rmx), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("S", [256, 512])
+@pytest.mark.parametrize("HK", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(S, HK, causal, window, dtype):
+    H, K = HK
+    B, D = 2, 64
+    q = jax.random.normal(KEY, (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, D)).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_matches_model_attention_path():
+    """kernels.ops.flash_attention == nn.attention chunked path."""
+    from repro.nn.attention import _chunked_attention
+    B, S, H, K, D = 1, 512, 4, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    a = ops.flash_attention(q, k, v, causal=True, window=0)
+    b = _chunked_attention(q, k, v, pos, pos, True, None, D ** -0.5, 256, 256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)
