@@ -1,5 +1,9 @@
 """Paper Table 1: Performance/Efficiency across architectures and methods.
 
+All cells run through the unified Trainer/TrainTask engine
+(repro.train.paper_harness.run_method); model_time integrates the tier
+speed model over the actual elastic rung/precision trajectory.
+
 CSV: dataset,arch,method,acc,wall_s_per_epoch,model_time,mem_gb,eff_score
 """
 from __future__ import annotations

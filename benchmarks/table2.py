@@ -1,7 +1,9 @@
 """Paper Table 2: ablation of memory-optimization components (CIFAR-10).
 
 Rows: standard -> +dynamic batch -> +dynamic precision -> full Tri-Accel,
-reporting modeled peak memory and the reduction vs standard.
+reporting modeled peak memory and the reduction vs standard. Every ablation
+runs through the unified Trainer/TrainTask engine
+(repro.train.paper_harness.run_method).
 
 CSV: arch,configuration,mem_gb,reduction_pct
 """

@@ -1,5 +1,8 @@
 """Paper reproduction (Table 1 behavior): FP32 vs AMP-static vs Tri-Accel
-on ResNet-18 and EfficientNet-B0, CIFAR-class synthetic data.
+on ResNet-18 and EfficientNet-B0, CIFAR-class synthetic data — through the
+unified Trainer/TrainTask engine (the vision runs now get checkpointing and
+resume like every other workload: pass --ckpt and re-run the same command
+after an interruption).
 
     PYTHONPATH=src python examples/paper_repro.py [--steps 60] [--arch resnet18]
 
@@ -8,6 +11,7 @@ FP32-ish ordering, modeled memory FP32 > AMP > Tri-Accel, efficiency score
 ordering Tri-Accel > AMP > FP32, and adaptive behavior (codes/batch evolve).
 """
 import argparse
+import os
 
 from repro.train.paper_harness import run_method
 
@@ -18,17 +22,22 @@ def main():
                     choices=["resnet18", "efficientnet_b0"])
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint root; per-method subdirs enable resume")
     args = ap.parse_args()
 
     print(f"{'method':>10} {'acc%':>6} {'wall s/ep':>10} {'model-t':>8} "
           f"{'mem GB':>7} {'eff':>7} {'B_end':>6} {'lo/hi codes':>12}")
     for method in ("fp32", "amp", "triaccel"):
+        ckpt_dir = (os.path.join(args.ckpt, f"{args.arch}_{method}")
+                    if args.ckpt else None)
         r = run_method(method, arch=args.arch, steps=args.steps,
-                       seed=args.seed)
+                       seed=args.seed, ckpt_dir=ckpt_dir)
+        resumed = f" (resumed@{r.resumed_from})" if r.resumed_from else ""
         print(f"{r.method:>10} {r.accuracy:6.1f} {r.wall_time_s:10.1f} "
               f"{r.model_time_s:8.2f} {r.model_mem_gb:7.3f} "
               f"{r.eff_score:7.1f} {r.final_batch:6d} "
-              f"{r.frac_low:5.2f}/{r.frac_fp32:4.2f}")
+              f"{r.frac_low:5.2f}/{r.frac_fp32:4.2f}{resumed}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from repro.core.precision import TriAccelConfig
 from repro.models.lm import LMConfig
 from repro.nn.attention import AttnConfig
 from repro.nn.blocks import BlockDef, StackConfig
+from repro.train.task import LMTask
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -28,7 +29,8 @@ def main():
                          mem_cap_bytes=0.5e9)
     tcfg = TrainerConfig(total_steps=60, base_lr=1e-2, warmup_steps=10,
                          seq_len=64, rungs=(4, 8, 16), log_every=10)
-    trainer = Trainer(model, tac, tcfg)
+    trainer = Trainer(LMTask(model), tac, tcfg)
+    trainer.warm_rungs()   # AOT-compile every batch rung: zero-stall switches
     log = trainer.run()
     print(f"{'step':>5} {'loss':>8} {'rung':>5} {'lo/bf/hi codes':>16} "
           f"{'lr':>9} {'mem(GB)':>8}")

@@ -14,7 +14,7 @@ exit, rerun the same command to resume from the last committed step.
 import argparse
 
 from repro.core.precision import TriAccelConfig
-from repro.models.registry import get_arch_module
+from repro.models.registry import get_task
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -30,8 +30,7 @@ def main():
                     help="use the smoke-scale reduced config")
     args = ap.parse_args()
 
-    mod = get_arch_module(args.arch)
-    cfg = mod.reduced_config() if args.reduced else mod.config()
+    task = get_task(args.arch, reduced=args.reduced)
     tac = TriAccelConfig(ladder="tpu", t_ctrl=20, t_curv=50, b_curv=2,
                          curvature_method="fisher", mem_cap_bytes=8e9)
     tcfg = TrainerConfig(total_steps=args.steps, base_lr=args.lr,
@@ -39,7 +38,8 @@ def main():
                          seq_len=args.seq,
                          rungs=(args.rung, args.rung * 2, args.rung * 4),
                          ckpt_dir=args.ckpt, ckpt_every=50, log_every=10)
-    tr = Trainer(cfg, tac, tcfg)
+    tr = Trainer(task, tac, tcfg)
+    tr.warm_rungs()
     tr.install_preemption_handler()
     start = tr.maybe_restore()
     if start:

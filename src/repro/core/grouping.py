@@ -166,6 +166,45 @@ def flat_grouping(params_shape, top_keys: bool = True) -> LayerGrouping:
     return LayerGrouping(len(keys), sums_fn, counts, list(keys), broadcast_fn)
 
 
+def encdec_grouping(pshape, cfg) -> LayerGrouping:
+    """Grouping over both enc-dec stacks: encoder layers, decoder layers,
+    then the embed and head pseudo-layers (mirrors lm_grouping's order)."""
+    enc = lm_grouping({"stack": pshape["encoder"], "embed": pshape["embed"],
+                       "final_norm": pshape["enc_norm"]}, cfg.enc_stack)
+    dec = lm_grouping({"stack": pshape["decoder"], "embed": pshape["embed"],
+                       "final_norm": pshape["final_norm"]}, cfg.dec_stack)
+    Le, Ld = cfg.enc_stack.num_layers, cfg.dec_stack.num_layers
+    total = Le + Ld + 2
+    counts = jnp.concatenate([enc.counts[:Le], dec.counts[:Ld],
+                              enc.counts[Le:Le + 1], dec.counts[Ld + 1:Ld + 2]])
+    names = enc.names[:Le] + dec.names[:Ld] + ["embed", "head"]
+
+    def sums_fn(tree, square):
+        es = enc.sums({"stack": tree["encoder"], "embed": tree["embed"],
+                       "final_norm": tree["enc_norm"]}, square)
+        ds = dec.sums({"stack": tree["decoder"], "embed": tree["embed"],
+                       "final_norm": tree["final_norm"]}, square)
+        return jnp.concatenate([es[:Le], ds[:Ld], es[Le:Le + 1],
+                                ds[Ld + 1:Ld + 2]])
+
+    def broadcast_fn(vec, tree):
+        eb = enc.broadcast(jnp.concatenate([vec[:Le], vec[-2:]]),
+                           {"stack": tree["encoder"], "embed": tree["embed"],
+                            "final_norm": tree["enc_norm"]})
+        db = dec.broadcast(jnp.concatenate([vec[Le:Le + Ld], vec[-2:]]),
+                           {"stack": tree["decoder"], "embed": tree["embed"],
+                            "final_norm": tree["final_norm"]})
+        out = {"encoder": eb["stack"], "decoder": db["stack"],
+               "embed": eb["embed"], "enc_norm": eb["final_norm"],
+               "final_norm": db["final_norm"]}
+        if "frontend_proj" in tree:
+            out["frontend_proj"] = jax.tree.map(lambda l: vec[-2],
+                                                tree["frontend_proj"])
+        return out
+
+    return LayerGrouping(total, sums_fn, counts, names, broadcast_fn)
+
+
 def layer_select_fns(grouping_names: List[str], params_shape, stack_cfg=None):
     """Path predicates for paper-faithful per-layer power iteration (vision)."""
     def make(key):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, input_specs_for
-from repro.core.grouping import lm_grouping
+from repro.core.grouping import encdec_grouping, lm_grouping
 from repro.core.precision import TriAccelConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch import sharding as shd
@@ -94,8 +94,10 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
     info = {"params_total": n_total, "params_active": n_active}
 
     if shape.kind == "train":
+        from repro.train.task import task_for_config
+        task = task_for_config(cfg)
         if isinstance(cfg, EncDecConfig):
-            grouping = _encdec_grouping(pvals_shape, cfg)
+            grouping = encdec_grouping(pvals_shape, cfg)
         else:
             grouping = lm_grouping(pvals_shape, cfg.stack)
         tac = TriAccelConfig(ladder="tpu", dynamic_precision=triaccel)
@@ -107,15 +109,15 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
             compute_sh = shd.param_shardings(paxes, pvals_shape, mesh,
                                              overrides={"embed": (),
                                                         "mlp2": ()})
-        step_fn = make_train_step(cfg, tac, opt, grouping,
+        step_fn = make_train_step(task, tac, opt, grouping,
                                   warmup_cosine(3e-4, 100, 10000), accum=accum,
                                   compute_shardings=compute_sh)
         opt_shape = jax.eval_shape(opt.init, pvals_shape)
         opt_sh = shd.state_shardings_like(param_sh, opt_shape)
         ctl_shape = jax.eval_shape(lambda: init_control(grouping.num_layers, tac))
         ctl_sh = jax.tree.map(lambda _: shd.replicated(mesh), ctl_shape)
-        state_sds = TrainState(pvals_shape, opt_shape, ctl_shape)
-        state_sh = TrainState(param_sh, opt_sh, ctl_sh)
+        state_sds = TrainState(pvals_shape, {}, opt_shape, ctl_shape)
+        state_sh = TrainState(param_sh, {}, opt_sh, ctl_sh)
         batch_sh = shd.batch_shardings(specs, mesh)
         with mesh, shd.activation_mesh(mesh):
             jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
@@ -175,43 +177,9 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
     return lowered, info
 
 
-def _encdec_grouping(pshape, cfg):
-    """Grouping over both stacks: encoder layers, decoder layers, embed, head."""
-    from repro.core.grouping import LayerGrouping, lm_grouping
-    enc = lm_grouping({"stack": pshape["encoder"], "embed": pshape["embed"],
-                       "final_norm": pshape["enc_norm"]}, cfg.enc_stack)
-    dec = lm_grouping({"stack": pshape["decoder"], "embed": pshape["embed"],
-                       "final_norm": pshape["final_norm"]}, cfg.dec_stack)
-    Le, Ld = cfg.enc_stack.num_layers, cfg.dec_stack.num_layers
-    total = Le + Ld + 2
-    counts = jnp.concatenate([enc.counts[:Le], dec.counts[:Ld],
-                              enc.counts[Le:Le + 1], dec.counts[Ld + 1:Ld + 2]])
-    names = enc.names[:Le] + dec.names[:Ld] + ["embed", "head"]
-
-    def sums_fn(tree, square):
-        es = enc.sums({"stack": tree["encoder"], "embed": tree["embed"],
-                       "final_norm": tree["enc_norm"]}, square)
-        ds = dec.sums({"stack": tree["decoder"], "embed": tree["embed"],
-                       "final_norm": tree["final_norm"]}, square)
-        return jnp.concatenate([es[:Le], ds[:Ld], es[Le:Le + 1],
-                                ds[Ld + 1:Ld + 2]])
-
-    def broadcast_fn(vec, tree):
-        eb = enc.broadcast(jnp.concatenate([vec[:Le], vec[-2:]]),
-                           {"stack": tree["encoder"], "embed": tree["embed"],
-                            "final_norm": tree["enc_norm"]})
-        db = dec.broadcast(jnp.concatenate([vec[Le:Le + Ld], vec[-2:]]),
-                           {"stack": tree["decoder"], "embed": tree["embed"],
-                            "final_norm": tree["final_norm"]})
-        out = {"encoder": eb["stack"], "decoder": db["stack"],
-               "embed": eb["embed"], "enc_norm": eb["final_norm"],
-               "final_norm": db["final_norm"]}
-        if "frontend_proj" in tree:
-            out["frontend_proj"] = jax.tree.map(lambda l: vec[-2],
-                                                tree["frontend_proj"])
-        return out
-
-    return LayerGrouping(total, sums_fn, counts, names, broadcast_fn)
+# encoder-decoder grouping moved to repro.core.grouping; old name kept for
+# existing importers
+_encdec_grouping = encdec_grouping
 
 
 def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
@@ -226,8 +194,8 @@ def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
                  else (256 // n, n))
         axes = (("pod", "data", "model") if mesh_kind == "multi"
                 else ("data", "model"))
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        from repro.launch.mesh import _axis_types_kw
+        mesh = jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
     else:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.size

@@ -5,6 +5,12 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n: int) -> dict:
+    # jax < 0.5 has no sharding.AxisType (everything is Auto implicitly)
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model). Multi-pod adds a leading
     "pod" axis: 2 x 16 x 16 = 512 chips. The dry-run launcher sets
@@ -12,12 +18,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     import so these meshes exist on CPU."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_dev_mesh():
     """1x1 mesh with production axis names — tests/examples run the exact
     same pjit code path on a single device."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_types_kw(2))

@@ -41,11 +41,10 @@ def main():
         jax.distributed.initialize()
 
     from repro.core.precision import TriAccelConfig
-    from repro.models.registry import get_arch_module
+    from repro.models.registry import get_task
     from repro.train.trainer import Trainer, TrainerConfig
 
-    mod = get_arch_module(args.arch)
-    cfg = mod.reduced_config() if args.reduced else mod.config()
+    task = get_task(args.arch, reduced=args.reduced)
     tac = TriAccelConfig(
         ladder=args.ladder, t_ctrl=20, t_curv=100, b_curv=2,
         curvature_method="fisher", mem_cap_bytes=args.mem_cap_gb * 1e9,
@@ -59,8 +58,9 @@ def main():
                          optimizer=args.optimizer, accum=args.accum,
                          seq_len=args.seq, rungs=rungs, ckpt_dir=args.ckpt,
                          ckpt_every=max(50, args.steps // 10), log_every=10)
-    tr = Trainer(cfg, tac, tcfg)
+    tr = Trainer(task, tac, tcfg)
     tr.install_preemption_handler()
+    tr.warm_rungs()
     start = tr.maybe_restore()
     if start:
         print(f"resumed at step {start}", flush=True)

@@ -1,4 +1,5 @@
-"""Architecture registry: maps --arch ids to config modules."""
+"""Architecture registry: maps --arch ids to config modules and to
+``TrainTask`` constructors for the unified training engine."""
 from __future__ import annotations
 
 import importlib
@@ -31,9 +32,21 @@ def get_model_config(arch: str, reduced: bool = False) -> Any:
     return mod.reduced_config() if reduced else mod.config()
 
 
+def get_task(arch: str, reduced: bool = False) -> Any:
+    """-> TrainTask for any registered arch (LM, enc-dec, or vision): the
+    entry point the Trainer/benchmark layers build on."""
+    from repro.train.task import task_for_config
+    return task_for_config(get_model_config(arch, reduced))
+
+
 def get_arch_module(arch: str):
     return _module(arch)
 
 
 def list_architectures() -> List[str]:
     return list(ARCHITECTURES)
+
+
+def list_tasks() -> List[str]:
+    """Every arch the unified engine can train, incl. the paper testbed."""
+    return list(ARCHITECTURES) + list(PAPER_ARCHS)

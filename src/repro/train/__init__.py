@@ -1,3 +1,7 @@
-from repro.train.train_step import TrainState, make_train_step, make_loss_fn, cast_params
+from repro.train.train_step import (TrainState, make_train_step, make_loss_fn,
+                                    cast_params)
+from repro.train.task import (TrainTask, LMTask, EncDecTask, VisionTask,
+                              task_for_config)
+from repro.train.trainer import Trainer, TrainerConfig
 from repro.train.serve import make_prefill_fn, make_decode_fn
 from repro.train.schedules import warmup_cosine

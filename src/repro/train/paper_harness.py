@@ -1,5 +1,8 @@
 """Paper-reproduction harness: FP32 vs AMP-static vs Tri-Accel on the
-paper's own testbed (ResNet-18 / EfficientNet-B0, CIFAR-class data).
+paper's own testbed (ResNet-18 / EfficientNet-B0, CIFAR-class data) —
+running through the unified ``Trainer``/``TrainTask`` engine, so the vision
+runs get the same checkpointing, preemption, AOT rung warmup, and control
+cadence as every other workload.
 
 Method wiring (Table 1 + Table 2 ablations):
     fp32        static codes=2, fixed batch           (paper FP32 baseline)
@@ -9,34 +12,26 @@ Method wiring (Table 1 + Table 2 ablations):
     triaccel    dynamic codes + curvature LR + rungs  (full method)
 
 Metrics per the paper: top-1 accuracy (held-out stream), wall-clock
-time/epoch as measured on THIS host, modeled accelerator time/epoch and
-modeled peak memory (tier-weighted byte/FLOP model calibrated on the FP32
-point — this container has no GPU/TPU, so the paper's fp16 speedups cannot
-materialize in wall-clock; see EXPERIMENTS.md §Repro notes), and the
+time/epoch as measured on THIS host, modeled accelerator time/epoch
+(tier-weighted byte/FLOP model integrated over the ACTUAL rung/precision
+trajectory, not the final point) and modeled peak memory (calibrated on the
+FP32 point — this container has no GPU/TPU, so the paper's fp16 speedups
+cannot materialize in wall-clock; see EXPERIMENTS.md §Repro notes), and the
 paper's efficiency score Acc / (time * mem%).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import init_control, with_curvature
-from repro.core import curvature as curv
-from repro.core.batch_scaler import BatchScaler, MemoryModel, TIER_BYTES
-from repro.core.grouping import flat_grouping
+from repro.core.batch_scaler import MemoryModel
 from repro.core.precision import TriAccelConfig
-from repro.data.synthetic import CIFARLikeStream
-from repro.models.vision import VisionConfig, vision_init, vision_apply
-from repro.nn.module import split_params
-from repro.optim.optimizers import sgdm
-from repro.train.schedules import warmup_cosine
-from repro.train.vision_step import (VisionTrainState, make_vision_eval,
-                                     make_vision_train_step)
+from repro.models.vision import VisionConfig
+from repro.train.task import VisionTask
+from repro.train.trainer import Trainer, TrainerConfig
 
 PAPER_FP32_GB = {"resnet18": 0.35, "efficientnet_b0": 0.301}
 # per-tier relative matmul throughput of the paper's target (T4-class):
@@ -69,6 +64,7 @@ class MethodResult:
     frac_fp32: float
     final_batch: int
     batch_history: List[int]
+    resumed_from: int = 0       # checkpoint step this run resumed at
 
 
 def _tac_for(method: str, mem_cap_gb: float) -> TriAccelConfig:
@@ -93,7 +89,7 @@ def _tac_for(method: str, mem_cap_gb: float) -> TriAccelConfig:
     return TriAccelConfig(**base)  # full triaccel
 
 
-def _memory_model(cfg: VisionConfig, params) -> MemoryModel:
+def vision_memory_model(cfg: VisionConfig, params) -> MemoryModel:
     n = sum(int(x.size) for x in jax.tree.leaves(params))
     elems = activation_elems(cfg)
     mm = MemoryModel(param_count=n, opt_slots=1,
@@ -105,76 +101,91 @@ def _memory_model(cfg: VisionConfig, params) -> MemoryModel:
     return mm
 
 
+# keep the old private name importable (tests, notebooks)
+_memory_model = vision_memory_model
+
+
+def _trajectory_time(metrics_log, method: str, steps: int) -> float:
+    """Integrate the tier-speed model over the ACTUAL (rung, codes)
+    trajectory: modeled time for step t is rung_t / speed_t, where speed_t
+    is the layer-weighted mean tier throughput at that step. Returns the
+    total modeled time and leaves per-epoch normalization to the caller.
+
+    (Earlier revisions used only the FINAL rung/codes, so Table 1/2 numbers
+    ignored the elastic schedule entirely.)"""
+    total = 0.0
+    for m in metrics_log:
+        if method == "fp32":
+            speed = TIER_SPEED[2]
+        elif method == "amp":
+            speed = TIER_SPEED[1]
+        else:
+            lo, hi = m["frac_low"], m["frac_fp32"]
+            mid = max(0.0, 1.0 - lo - hi)
+            speed = lo * TIER_SPEED[0] + mid * TIER_SPEED[1] + hi * TIER_SPEED[2]
+        total += m["rung"] / max(speed, 1e-9)
+    # metrics_log covers every step (log_every=1); guard anyway
+    covered = max(len(metrics_log), 1)
+    return total * steps / covered
+
+
 def run_method(method: str, arch: str = "resnet18", steps: int = 60,
                batch0: int = 32, seed: int = 0, epoch_steps: int = 20,
-               num_classes: int = 10) -> MethodResult:
+               num_classes: int = 10,
+               ckpt_dir: Optional[str] = None) -> MethodResult:
     cfg = VisionConfig(name=arch, num_classes=num_classes)
-    key = jax.random.PRNGKey(seed)
-    pw, bn_state = vision_init(key, cfg)
-    params, _ = split_params(pw)
-    grouping = flat_grouping(params)
+    task = VisionTask(cfg)
 
     # memory cap chosen so the elastic controller has headroom to act, as in
     # the paper's 16GB cards running far below capacity
-    mm = _memory_model(cfg, params)
+    pshape = jax.eval_shape(lambda k: task.init(k)[0], jax.ShapeDtypeStruct(
+        (2,), jax.numpy.uint32))
+    from repro.nn.module import split_params
+    pvals, _ = split_params(pshape)
+    mm = vision_memory_model(cfg, pvals)
     tac = _tac_for(method, mem_cap_gb=mm.total(batch0 * 2, codes=[1]) / 1e9)
     rungs = tuple(batch0 * i // 2 for i in range(1, 5))  # B0/2 steps, paper's delta
-    scaler = BatchScaler(rungs, 1, mm, tac, start_rung=batch0)
+
+    tcfg = TrainerConfig(
+        total_steps=steps, base_lr=0.05, warmup_steps=max(2, steps // 10),
+        optimizer="sgdm", momentum=0.9, weight_decay=5e-4, grad_clip=5.0,
+        seed=seed, seq_len=1, rungs=rungs, start_rung=batch0,
+        ckpt_dir=ckpt_dir, ckpt_every=max(10, steps // 4),
+        log_every=1, b_curv=tac.b_curv)
+    trainer = Trainer(task, tac, tcfg)
     if method in ("fp32", "amp", "prec_only"):
-        scaler.idx = rungs.index(batch0)
+        trainer.scaler.idx = rungs.index(batch0)  # fixed-batch baselines
 
-    opt = sgdm(momentum=0.9, weight_decay=5e-4)
-    schedule = warmup_cosine(0.05, max(2, steps // 10), steps)
-    step_fn = jax.jit(make_vision_train_step(cfg, tac, opt, grouping,
-                                             schedule, grad_clip=5.0))
-    evaluate = make_vision_eval(cfg)
-    state = VisionTrainState(params, bn_state, opt.init(params),
-                             init_control(grouping.num_layers, tac))
-    stream = CIFARLikeStream(num_classes=num_classes, global_batch=batch0,
-                             seed=seed)
-    t0 = time.time()
-    frac_low = frac_fp32 = 0.0
-    for step in range(steps):
-        b = scaler.microbatch
-        batch = dataclasses.replace(stream, global_batch=b).batch(step)
-        state, metrics = step_fn(state, batch)
-        if tac.enable_curvature and step > 0 and step % tac.t_curv == 0:
-            small = jax.tree.map(lambda x: x[:tac.b_curv], batch)
-            loss_fn = lambda p, bb: -jnp.mean(jnp.sum(
-                jax.nn.one_hot(bb["labels"], num_classes)
-                * jax.nn.log_softmax(vision_apply(p, state.bn_state,
-                                                  bb["images"], True, cfg)[0]),
-                axis=-1))
-            g = jax.grad(loss_fn)(state.params, small)
-            lam = curv.fisher_layer(g, grouping.mean)
-            state = state._replace(control=with_curvature(state.control, lam))
-        if step % tac.t_ctrl == 0:
-            codes = list(jax.device_get(state.control.codes))
-            scaler.observe(step, codes=codes)
-        frac_low = float(metrics["frac_low"])
-        frac_fp32 = float(metrics["frac_fp32"])
-    wall = time.time() - t0
+    resumed = trainer.maybe_restore() if ckpt_dir else 0
+    ran = max(steps - resumed, 0)
+    log = trainer.run(ran)
+    wall = log[-1]["wall_s"] if log else 0.0
+    frac_low = log[-1]["frac_low"] if log else 0.0
+    frac_fp32 = log[-1]["frac_fp32"] if log else 0.0
+    scaler = trainer.scaler
 
-    # held-out accuracy
-    test = CIFARLikeStream(num_classes=num_classes, global_batch=256,
-                           seed=seed, train=False)
-    accs = [float(evaluate(state.params, state.bn_state, test.batch(i)))
-            for i in range(4)]
+    # held-out accuracy through the task's eval path
+    test = task.eval_stream(256, seed=seed)
+    evaluate = jax.jit(task.evaluate)
+    accs = [float(evaluate(trainer.state.params, trainer.state.aux_state,
+                           test.batch(i))) for i in range(4)]
     acc = 100.0 * float(np.mean(accs))
 
-    # modeled accelerator time: tier-weighted throughput, normalized per epoch
-    codes = list(jax.device_get(state.control.codes))
+    # modeled accelerator time: tier speed integrated over the actual
+    # rung/precision trajectory, normalized per epoch
+    codes = list(jax.device_get(trainer.state.control.codes))
     if method == "fp32":
         codes = [2] * len(codes)
     elif method == "amp":
         codes = [1] * len(codes)
-    speed = np.mean([TIER_SPEED[int(c)] for c in codes])
-    images = sum(h for _, h, _ in scaler.history) or steps * batch0
-    model_time = (steps * scaler.microbatch / speed) / steps  # relative unit
+    model_time = _trajectory_time(log, method, steps) / max(steps, 1)
     mem_gb = mm.total(scaler.microbatch, codes=codes, ladder="gpu") / 1e9
-    wall_epoch = wall * epoch_steps / steps
+    # wall only covers the steps actually run THIS process (resume-aware)
+    wall_epoch = wall * epoch_steps / max(ran, 1)
     mem_pct = mem_gb / (tac.mem_cap_bytes / 1e9)
-    eff = acc / max(model_time * mem_pct, 1e-9)
+    # a fully-resumed run (ran == 0) has no trajectory: report eff as 0
+    # rather than acc/epsilon
+    eff = acc / (model_time * mem_pct) if model_time * mem_pct > 0 else 0.0
     return MethodResult(method, arch, acc, wall_epoch, model_time, mem_gb,
                         eff, frac_low, frac_fp32, scaler.microbatch,
-                        [h[1] for h in scaler.history])
+                        [h[1] for h in scaler.history], resumed)

@@ -1,0 +1,270 @@
+"""Task-agnostic training interface — the seam between *what* is trained
+and the single Tri-Accel engine that trains it (DESIGN.md §1).
+
+A ``TrainTask`` bundles everything model-specific the engine needs:
+
+    init(key)        -> (wrapped_params, aux_state)
+    loss(params, aux_state, batch, codes, qdq_fn)
+                     -> (loss, new_aux_state, metrics)
+    grouping(params) -> LayerGrouping (the (L,) layer view the controller
+                        operates on)
+    data_stream(global_batch, seed)
+                     -> deterministic restartable stream with .batch(step)
+
+plus small static hooks (``compute_dtype``, ``tokens_per_sample``,
+``loss_codes``, ``memory_model``) so the compiled §3.4 control loop — QDQ
+precision emulation, fused moment statistics, control update,
+curvature-scaled LR, loss-scale ladder, grad-accum scan, non-finite skip —
+exists in exactly ONE graph definition (repro.train.train_step) for every
+workload. Model state that is carried but not differentiated (BatchNorm
+running statistics) rides in ``aux_state`` and is threaded through the
+generalized ``TrainState``.
+
+Three implementations cover the repo's workloads: ``LMTask`` (decoder-only
+LMs, incl. MoE/SSM/hybrid/VLM stubs), ``EncDecTask`` (encoder-decoder),
+``VisionTask`` (the paper's ResNet-18 / EfficientNet-B0 testbed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouping import (LayerGrouping, encdec_grouping, flat_grouping,
+                                 lm_grouping)
+from repro.data.synthetic import (CIFARLikeStream, LMTaskStream,
+                                  frontend_stub_batch)
+from repro.models.encdec import EncDecConfig, encdec_init, encdec_loss
+from repro.models.lm import LMConfig, lm_init, lm_loss
+from repro.models.vision import VisionConfig, vision_apply, vision_init
+
+
+class TrainTask:
+    """Protocol base. Subclasses provide the model-specific pieces; the
+    engine (train_step + Trainer) never touches model code directly."""
+
+    cfg: Any
+
+    # ------------------------------------------------------------ model ---
+    def init(self, key: jax.Array) -> Tuple[Any, Any]:
+        """-> (Param-wrapped params, aux_state). aux_state is {} when the
+        model carries no non-differentiated state."""
+        raise NotImplementedError
+
+    def loss(self, params, aux_state, batch, codes, qdq_fn):
+        """-> (scalar loss, new_aux_state, metrics dict).
+
+        ``codes``/``qdq_fn`` implement the §3.1 precision actuation; a task
+        applies them wherever its parameters enter compute (per stack layer
+        for LMs, per top-level block for vision). ``qdq_fn is None`` means
+        true static precision (no rounding)."""
+        raise NotImplementedError
+
+    def grouping(self, params) -> LayerGrouping:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- data ---
+    def data_stream(self, global_batch: int, seed: int = 0,
+                    seq_len: int = 1):
+        """The Trainer always passes ``seq_len`` (its configured sequence
+        length); tasks without a sequence dimension ignore it."""
+        raise NotImplementedError
+
+    def eval_stream(self, global_batch: int, seed: int = 0):
+        """Held-out stream (defaults to the train stream)."""
+        return self.data_stream(global_batch, seed)
+
+    # ---------------------------------------------------- static hooks ----
+    @property
+    def name(self) -> str:
+        return getattr(self.cfg, "name", type(self).__name__)
+
+    @property
+    def compute_dtype(self):
+        return self.cfg.compute_dtype
+
+    def tokens_per_sample(self, seq_len: int) -> int:
+        """Activation tokens per batch element (seq_len for LMs, 1 for
+        vision) — feeds the §3.3 memory model."""
+        return seq_len
+
+    def loss_codes(self, codes: jax.Array) -> jax.Array:
+        """Slice of the (L,) control codes the loss consumes (LM groupings
+        append embed/head pseudo-layers that the stack never sees)."""
+        return codes
+
+    def memory_model(self, params, opt_slots: int, mesh_size: int = 1):
+        """Per-device HBM model for the §3.3 batch controller."""
+        from repro.core.batch_scaler import MemoryModel
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        return MemoryModel(param_count=n / mesh_size, opt_slots=opt_slots)
+
+    def curvature_loss(self, params, aux_state, batch) -> jax.Array:
+        """Scalar loss for §3.2 curvature probes (no QDQ, no loss scale)."""
+        return self.loss(params, aux_state, batch, None, None)[0]
+
+
+# =========================================================== language =====
+@dataclasses.dataclass
+class LMTask(TrainTask):
+    cfg: LMConfig
+
+    def init(self, key):
+        return lm_init(key, self.cfg), {}
+
+    def loss(self, params, aux_state, batch, codes, qdq_fn):
+        total, metrics = lm_loss(params, batch, self.cfg,
+                                 codes=codes if qdq_fn is not None else None,
+                                 qdq_fn=qdq_fn)
+        return total, aux_state, metrics
+
+    def grouping(self, params):
+        return lm_grouping(params, self.cfg.stack)
+
+    def loss_codes(self, codes):
+        return codes[: self.cfg.stack.num_layers]
+
+    def data_stream(self, global_batch, seed=0, seq_len: int = 128):
+        return LMTaskStream(self.cfg.vocab_size, seq_len, global_batch,
+                            seed=seed)
+
+    def memory_model(self, params, opt_slots, mesh_size=1):
+        from repro.core.batch_scaler import MemoryModel
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        return MemoryModel.for_transformer(
+            n / mesh_size, self.cfg.d_model, self.cfg.num_layers,
+            opt_slots=opt_slots, remat=self.cfg.stack.remat)
+
+
+# ======================================================== enc-dec =========
+@dataclasses.dataclass(frozen=True)
+class EncDecStream:
+    """Deterministic synthetic enc-dec batches: frontend embeddings in,
+    token targets out — pure function of (seed, step, host)."""
+    vocab_size: int
+    frontend_dim: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int, host_id: int = 0, num_hosts: int = 1):
+        assert self.global_batch % num_hosts == 0
+        b = self.global_batch // num_hosts
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 step * 65536 + host_id)
+        ke, kt = jax.random.split(key)
+        toks = jax.random.randint(kt, (b, self.seq_len), 0, self.vocab_size)
+        return {
+            "frontend_embeds": frontend_stub_batch(
+                ke, b, self.seq_len, self.frontend_dim, dtype=jnp.float32),
+            "tokens": toks.astype(jnp.int32),
+            "labels": toks.astype(jnp.int32),
+        }
+
+
+@dataclasses.dataclass
+class EncDecTask(TrainTask):
+    cfg: EncDecConfig
+
+    def init(self, key):
+        return encdec_init(key, self.cfg), {}
+
+    def loss(self, params, aux_state, batch, codes, qdq_fn):
+        total, metrics = encdec_loss(params, batch, self.cfg,
+                                     codes=codes if qdq_fn is not None else None,
+                                     qdq_fn=qdq_fn)
+        return total, aux_state, metrics
+
+    def grouping(self, params):
+        return encdec_grouping(params, self.cfg)
+
+    def loss_codes(self, codes):
+        n = self.cfg.enc_stack.num_layers + self.cfg.dec_stack.num_layers
+        return codes[:n]
+
+    def data_stream(self, global_batch, seed=0, seq_len: int = 128):
+        return EncDecStream(self.cfg.vocab_size, self.cfg.frontend_dim,
+                            seq_len, global_batch, seed=seed)
+
+    def memory_model(self, params, opt_slots, mesh_size=1):
+        from repro.core.batch_scaler import MemoryModel
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        return MemoryModel.for_transformer(
+            n / mesh_size, self.cfg.d_model,
+            self.cfg.enc_stack.num_layers + self.cfg.dec_stack.num_layers,
+            opt_slots=opt_slots, remat=self.cfg.enc_stack.remat)
+
+
+# ========================================================== vision ========
+def apply_codes(params, codes, qdq_fn, keys):
+    """Per-top-level-block QDQ actuation (the vision/generic counterpart of
+    the LM stack's per-layer lax.switch — DESIGN.md §2)."""
+    if qdq_fn is None:
+        return params
+    return {k: jax.tree.map(lambda w: qdq_fn(w, codes[i]), params[k])
+            for i, k in enumerate(keys)}
+
+
+@dataclasses.dataclass
+class VisionTask(TrainTask):
+    """The paper's testbed: BatchNorm running stats ride in aux_state."""
+    cfg: VisionConfig
+
+    def init(self, key):
+        return vision_init(key, self.cfg)
+
+    def _keys(self, params):
+        return sorted(params.keys())
+
+    def loss(self, params, aux_state, batch, codes, qdq_fn):
+        if codes is not None:
+            params = apply_codes(params, codes, qdq_fn, self._keys(params))
+        logits, new_aux = vision_apply(params, aux_state, batch["images"],
+                                       True, self.cfg)
+        one = jax.nn.one_hot(batch["labels"], self.cfg.num_classes)
+        loss = -jnp.mean(jnp.sum(one * jax.nn.log_softmax(logits), axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                        ).astype(jnp.float32))
+        return loss, new_aux, {"loss": loss, "accuracy": acc}
+
+    def grouping(self, params):
+        return flat_grouping(params)
+
+    def tokens_per_sample(self, seq_len):
+        return 1
+
+    def data_stream(self, global_batch, seed=0, seq_len: int = 1):
+        return CIFARLikeStream(num_classes=self.cfg.num_classes,
+                               global_batch=global_batch, seed=seed)
+
+    def eval_stream(self, global_batch, seed=0):
+        return CIFARLikeStream(num_classes=self.cfg.num_classes,
+                               global_batch=global_batch, seed=seed,
+                               train=False)
+
+    def evaluate(self, params, aux_state, batch) -> jax.Array:
+        """Held-out top-1 accuracy (BN in inference mode)."""
+        logits, _ = vision_apply(params, aux_state, batch["images"], False,
+                                 self.cfg)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                         ).astype(jnp.float32))
+
+    def memory_model(self, params, opt_slots, mesh_size=1):
+        # calibrated against the paper's published FP32 point in
+        # repro.train.paper_harness.vision_memory_model
+        from repro.train.paper_harness import vision_memory_model
+        return vision_memory_model(self.cfg, params)
+
+
+# ========================================================= dispatch =======
+def task_for_config(cfg) -> TrainTask:
+    """Registry hook: model config -> TrainTask (DESIGN.md §1)."""
+    if isinstance(cfg, VisionConfig):
+        return VisionTask(cfg)
+    if isinstance(cfg, EncDecConfig):
+        return EncDecTask(cfg)
+    if isinstance(cfg, LMConfig):
+        return LMTask(cfg)
+    raise TypeError(f"no TrainTask for config type {type(cfg).__name__}")

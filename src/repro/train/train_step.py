@@ -1,12 +1,15 @@
 """The jitted training step: loss -> grads -> Tri-Accel control -> update.
 
-One compiled graph contains the whole §3.4 device-side loop:
+One compiled graph — shared by EVERY workload via the ``TrainTask``
+interface (repro.train.task, DESIGN.md §1) — contains the whole §3.4
+device-side loop:
   * per-layer QDQ precision emulation driven by control.codes (lax.switch),
   * fused per-layer gradient moment statistics (variance EMA inputs),
   * control-state update (EMA, code refresh on the t_ctrl cadence,
     dynamic loss scaling for the fp16 ladder),
   * curvature-scaled per-layer learning rates,
-  * optimizer update over fp32 master params with non-finite-step skipping.
+  * optimizer update over fp32 master params with non-finite-step skipping,
+  * aux-state threading (e.g. BatchNorm running stats for vision tasks).
 
 Gradient accumulation scans over microbatches (the memory-elastic batch
 scaler selects the rung = microbatch size; the global batch and therefore
@@ -14,7 +17,6 @@ convergence semantics stay fixed unless the paper's true-B mode is chosen).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -24,12 +26,13 @@ from repro.core.controller import ControlState, lr_scales, update_control
 from repro.core.grouping import LayerGrouping
 from repro.core.precision import TriAccelConfig, make_qdq_fn
 from repro.models.encdec import EncDecConfig, encdec_loss
-from repro.models.lm import LMConfig, lm_loss
+from repro.models.lm import lm_loss
 from repro.optim.optimizers import Optimizer, apply_updates, global_norm
 
 
 class TrainState(NamedTuple):
     params: Any          # fp32 master
+    aux_state: Any       # non-differentiated model state (BN stats); {} if none
     opt_state: Any
     control: ControlState
 
@@ -46,56 +49,51 @@ def make_loss_fn(cfg):
     return lm_loss
 
 
-def _num_stack_layers(cfg) -> int:
-    if isinstance(cfg, EncDecConfig):
-        return cfg.enc_stack.num_layers + cfg.dec_stack.num_layers
-    return cfg.stack.num_layers
-
-
 def _tree_finite(tree) -> jax.Array:
-    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(x)) for x in
-                              jax.tree.leaves(tree)]))
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(x)) for x in leaves]))
 
 
-def make_train_step(cfg, tac: TriAccelConfig, opt: Optimizer,
+def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
                     grouping: LayerGrouping, schedule: Callable,
                     accum: int = 1, grad_clip: float = 0.0,
                     compute_shardings=None):
-    """Returns train_step(state, batch) -> (state, metrics).
+    """Returns train_step(state, batch) -> (state, metrics) for any
+    ``TrainTask``.
 
-    ``compute_shardings`` (optional NamedSharding tree) pins the bf16
+    ``compute_shardings`` (optional NamedSharding tree) pins the low-precision
     compute copy of the weights to a different layout than the fp32
     master — the ZeRO-1 profile replicates the compute copy over the data
     axes (one bf16 all-gather + one grad reduce-scatter per microstep at
     the cast boundary) instead of per-layer FSDP gathers + full-size grad
     all-reduces inside the layer scan.
     """
-    loss_fn = make_loss_fn(cfg)
     qdq_fn = make_qdq_fn(tac)
-    n_stack = _num_stack_layers(cfg)
 
-    def loss_at(params32, microbatch, codes, loss_scale):
+    def loss_at(params32, aux_state, microbatch, codes, loss_scale):
         from repro.launch.sharding import constrain_tree_batch
         microbatch = constrain_tree_batch(microbatch)
-        cp = cast_params(params32, cfg.compute_dtype)
+        cp = cast_params(params32, task.compute_dtype)
         if compute_shardings is not None:
             cp = jax.tree.map(jax.lax.with_sharding_constraint, cp,
                               compute_shardings)
-        total, metrics = loss_fn(cp, microbatch, cfg,
-                                 codes=codes if qdq_fn is not None else None,
-                                 qdq_fn=qdq_fn)
-        return total * loss_scale, metrics
+        total, new_aux, metrics = task.loss(cp, aux_state, microbatch,
+                                            codes, qdq_fn)
+        return total * loss_scale, (new_aux, metrics)
 
     def train_step(state: TrainState, batch):
-        params32, opt_state, control = state
-        codes = control.codes[:n_stack]
+        params32, aux_state, opt_state, control = state
+        codes = task.loss_codes(control.codes)
         ls = control.loss_scale
 
         if accum > 1:
-            def micro(g_acc, mb):
-                (_, m), g = jax.value_and_grad(loss_at, has_aux=True)(
-                    params32, mb, codes, ls)
-                return jax.tree.map(jnp.add, g_acc, g), m
+            def micro(carry, mb):
+                g_acc, aux = carry
+                (_, (aux2, m)), g = jax.value_and_grad(loss_at, has_aux=True)(
+                    params32, aux, mb, codes, ls)
+                return (jax.tree.map(jnp.add, g_acc, g), aux2), m
 
             mb0 = jax.tree.map(
                 lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
@@ -108,14 +106,14 @@ def make_train_step(cfg, tac: TriAccelConfig, opt: Optimizer,
                     (3, accum, mp.shape[1] // accum) + mp.shape[2:]
                 ).transpose(1, 0, *range(2, mp.ndim + 1))
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params32)
-            grads, mstack = jax.lax.scan(micro, g0, mb0)
+            (grads, new_aux), mstack = jax.lax.scan(micro, (g0, aux_state), mb0)
             grads = jax.tree.map(lambda g: g / accum, grads)
             metrics = jax.tree.map(
                 lambda m: jnp.mean(m.astype(jnp.float32), axis=0)
                 if jnp.issubdtype(m.dtype, jnp.floating) else m[-1], mstack)
         else:
-            (_, metrics), grads = jax.value_and_grad(loss_at, has_aux=True)(
-                params32, batch, codes, ls)
+            (_, (new_aux, metrics)), grads = jax.value_and_grad(
+                loss_at, has_aux=True)(params32, aux_state, batch, codes, ls)
 
         grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / ls), grads)
         finite = _tree_finite(grads)
@@ -138,6 +136,7 @@ def make_train_step(cfg, tac: TriAccelConfig, opt: Optimizer,
             lambda a, b: jnp.where(finite, a, b), new, old)
         new_params = keep(new_params, params32)
         opt_state2 = keep(opt_state2, opt_state)
+        new_aux = keep(new_aux, aux_state)
 
         metrics = dict(metrics)
         metrics.update({
@@ -148,6 +147,6 @@ def make_train_step(cfg, tac: TriAccelConfig, opt: Optimizer,
             "frac_low": jnp.mean((control2.codes == 0).astype(jnp.float32)),
             "frac_fp32": jnp.mean((control2.codes == 2).astype(jnp.float32)),
         })
-        return TrainState(new_params, opt_state2, control2), metrics
+        return TrainState(new_params, new_aux, opt_state2, control2), metrics
 
     return train_step

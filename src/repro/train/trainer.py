@@ -1,20 +1,24 @@
-"""Host-side training loop: Tri-Accel control cadence, elastic batch rungs,
-fault tolerance (atomic async checkpoints, preemption, resume, elastic
-re-shard), and deterministic restartable data.
+"""Host-side training engine: Tri-Accel control cadence, elastic batch
+rungs, fault tolerance (atomic async checkpoints, preemption, resume,
+elastic re-shard), and deterministic restartable data — for ANY TrainTask
+(LM, enc-dec, vision) through one code path.
 
-Straggler/failure model (see DESIGN.md): data is a pure function of
+Straggler/failure model (see DESIGN.md §3): data is a pure function of
 (seed, step, host), so any restart — same or different mesh size — resumes
 bit-identically from the last committed checkpoint without replaying or
 skipping batches; there is no data-loader state to rebuild. Preemption
 (SIGTERM) triggers checkpoint-and-exit. Batch-rung changes swap between
-AOT-warmed executables (zero-stall actuation of §3.3).
+AOT-compiled executables (zero-stall actuation of §3.3): ``warm_rungs()``
+lowers + compiles the step for every configured rung ahead of time, keyed
+on (rung, state treedef), so the first step on any rung never stalls on
+XLA.
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,17 +26,15 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
                                          restore_checkpoint)
 from repro.core import curvature as curv
-from repro.core.batch_scaler import BatchScaler, MemoryModel
+from repro.core.batch_scaler import BatchScaler
 from repro.core.controller import init_control, with_curvature
-from repro.core.grouping import lm_grouping
 from repro.core.precision import TriAccelConfig
-from repro.data.synthetic import LMTaskStream
 from repro.launch.mesh import make_dev_mesh
 from repro.launch import sharding as shd
-from repro.models.lm import LMConfig, lm_init, lm_loss
 from repro.nn.module import split_params
 from repro.optim.optimizers import adamw, sgdm
 from repro.train.schedules import warmup_cosine
+from repro.train.task import TrainTask, task_for_config
 from repro.train.train_step import TrainState, make_train_step
 
 
@@ -49,6 +51,7 @@ class TrainerConfig:
     seed: int = 0
     seq_len: int = 128
     rungs: tuple = (8,)
+    start_rung: Optional[int] = None  # None: largest rung that fits
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     ckpt_keep: int = 3
@@ -58,46 +61,53 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, model_cfg: LMConfig, tac: TriAccelConfig,
-                 tcfg: TrainerConfig, mesh=None):
-        self.cfg = model_cfg
+    """The single Tri-Accel engine. Accepts a ``TrainTask`` (or a bare
+    model config, wrapped via ``task_for_config``)."""
+
+    def __init__(self, task, tac: TriAccelConfig, tcfg: TrainerConfig,
+                 mesh=None):
+        if not isinstance(task, TrainTask):
+            task = task_for_config(task)
+        self.task = task
+        self.cfg = task.cfg
         self.tac = tac
         self.tcfg = tcfg
         self.mesh = mesh if mesh is not None else make_dev_mesh()
         key = jax.random.PRNGKey(tcfg.seed)
 
-        wrapped = lm_init(key, model_cfg)
+        wrapped, aux_state = task.init(key)
         params, axes = split_params(wrapped)
         self.param_axes = axes
         self.param_sh = shd.param_shardings(
             axes, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                                params), self.mesh)
         params = jax.device_put(params, self.param_sh)
+        aux_state = jax.device_put(aux_state, shd.replicated(self.mesh))
 
-        self.grouping = lm_grouping(params, model_cfg.stack)
+        self.grouping = task.grouping(params)
         opt = (sgdm(tcfg.momentum, tcfg.weight_decay) if tcfg.optimizer == "sgdm"
                else adamw(weight_decay=tcfg.weight_decay))
         self.opt = opt
         schedule = warmup_cosine(tcfg.base_lr, tcfg.warmup_steps,
                                  tcfg.total_steps)
-        self._step_fn = make_train_step(model_cfg, tac, opt, self.grouping,
+        self._step_fn = make_train_step(task, tac, opt, self.grouping,
                                         schedule, accum=tcfg.accum,
                                         grad_clip=tcfg.grad_clip)
-        self.state = TrainState(params, opt.init(params),
+        self.state = TrainState(params, aux_state, opt.init(params),
                                 init_control(self.grouping.num_layers, tac))
 
-        # §3.3: memory model + rung controller
-        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
-        mm = MemoryModel.for_transformer(
-            n_params / self.mesh.size, model_cfg.d_model,
-            model_cfg.num_layers, opt_slots=opt.slots,
-            remat=model_cfg.stack.remat)
-        self.scaler = BatchScaler(tcfg.rungs, tcfg.seq_len, mm, tac)
+        # §3.3: memory model + rung controller (task-provided HBM model)
+        mm = task.memory_model(params, opt_slots=opt.slots,
+                               mesh_size=self.mesh.size)
+        self.scaler = BatchScaler(tcfg.rungs,
+                                  task.tokens_per_sample(tcfg.seq_len), mm,
+                                  tac, start_rung=tcfg.start_rung)
 
-        self.stream = LMTaskStream(model_cfg.vocab_size, tcfg.seq_len,
-                                   self._global_batch(), seed=tcfg.seed)
-        self._jitted: Dict[int, Any] = {}
-        self._curv_fn = None
+        self.stream = task.data_stream(self._global_batch(), seed=tcfg.seed,
+                                       seq_len=tcfg.seq_len)
+        # AOT executable cache: (rung, state treedef) -> jax.stages.Compiled
+        self._executables: Dict[Tuple[int, Any], Any] = {}
+        self.compile_count = 0
         self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir, tcfg.ckpt_keep)
                      if tcfg.ckpt_dir else None)
         self._preempted = False
@@ -105,32 +115,7 @@ class Trainer:
 
     # ------------------------------------------------------------- utils --
     def _global_batch(self) -> int:
-        dp = 1
-        for a in ("pod", "data"):
-            if a in self.mesh.axis_names:
-                dp *= self.mesh.shape[a]
-        return self.scaler.microbatch * dp if hasattr(self, "scaler") \
-            else self.tcfg.rungs[-1] * dp
-
-    def _get_step(self, batch_size: int):
-        """AOT-warmed executable per batch rung (zero-stall rung switches)."""
-        if batch_size not in self._jitted:
-            with self.mesh, shd.activation_mesh(self.mesh):
-                self._jitted[batch_size] = jax.jit(self._step_fn,
-                                                   donate_argnums=(0,))
-        return self._jitted[batch_size]
-
-    def warm_rungs(self):
-        for r in self.tcfg.rungs:
-            dummy = self._batch_for_rung(r, 0)
-            self._get_step(r)  # jit cache entry; compiled on first call
-            del dummy
-
-    def _batch_for_rung(self, rung: int, step: int):
-        stream = dataclasses.replace(
-            self.stream, global_batch=self._dp_size() * rung) \
-            if self.tcfg.elastic_true_batch else self.stream
-        return stream.batch(step)
+        return self.scaler.microbatch * self._dp_size()
 
     def _dp_size(self) -> int:
         dp = 1
@@ -138,6 +123,42 @@ class Trainer:
             if a in self.mesh.axis_names:
                 dp *= self.mesh.shape[a]
         return dp
+
+    @staticmethod
+    def _abstract(x) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=getattr(x, "sharding", None))
+
+    def _get_step(self, rung: int):
+        """AOT-compiled executable per batch rung (zero-stall rung switches).
+
+        The cache key includes the state treedef, so a structural change
+        (e.g. restoring a checkpoint with different aux state) can never
+        dispatch into a stale executable."""
+        key = (rung, jax.tree_util.tree_structure(self.state))
+        exe = self._executables.get(key)
+        if exe is None:
+            state_sds = jax.tree.map(self._abstract, self.state)
+            batch_sds = jax.tree.map(self._abstract,
+                                     self._batch_for_rung(rung, 0))
+            with self.mesh, shd.activation_mesh(self.mesh):
+                exe = (jax.jit(self._step_fn, donate_argnums=(0,))
+                       .lower(state_sds, batch_sds).compile())
+            self._executables[key] = exe
+            self.compile_count += 1
+        return exe
+
+    def warm_rungs(self):
+        """Pre-compile the train step for every configured rung; afterwards
+        a step on any rung triggers zero new XLA compilations."""
+        for r in self.tcfg.rungs:
+            self._get_step(r)
+
+    def _batch_for_rung(self, rung: int, step: int):
+        stream = dataclasses.replace(
+            self.stream, global_batch=self._dp_size() * rung) \
+            if self.tcfg.elastic_true_batch else self.stream
+        return stream.batch(step)
 
     # ------------------------------------------------- fault tolerance ----
     def install_preemption_handler(self):
@@ -149,11 +170,12 @@ class Trainer:
         if not (self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None):
             return 0
         # elastic re-shard: checkpoints are host-layout, so leaves re-place
-        # onto THIS mesh whatever mesh wrote them
+        # onto THIS mesh whatever mesh wrote them. Each leaf lands on the
+        # LIVE state's sharding, so AOT executables warmed before the
+        # restore stay dispatchable.
         host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
-        params = jax.device_put(host.params, self.param_sh)
-        self.state = TrainState(params, jax.device_put(host.opt_state),
-                                jax.device_put(host.control))
+        self.state = jax.tree.map(
+            lambda h, cur: jax.device_put(h, cur.sharding), host, self.state)
         return int(self.state.control.step)
 
     # -------------------------------------------------------------- run ---
@@ -169,8 +191,7 @@ class Trainer:
             rung = self.scaler.microbatch
             batch = self._batch_for_rung(rung, step)
             step_fn = self._get_step(rung)
-            with self.mesh, shd.activation_mesh(self.mesh):
-                self.state, metrics = step_fn(self.state, batch)
+            self.state, metrics = step_fn(self.state, batch)
 
             # §3.2 curvature cadence (host side, tiny batch)
             if self.tac.enable_curvature and step > 0 and \
@@ -197,7 +218,8 @@ class Trainer:
     def _curvature(self, step: int):
         mb = self.stream.batch(step)
         small = jax.tree.map(lambda x: x[:self.tcfg.b_curv], mb)
-        loss_fn = lambda p, b: lm_loss(p, b, self.cfg)[0]
+        aux = self.state.aux_state
+        loss_fn = lambda p, b: self.task.curvature_loss(p, aux, b)
         if self.tac.curvature_method == "fisher":
             g = jax.grad(loss_fn)(self.state.params, small)
             return curv.fisher_layer(g, self.grouping.mean)

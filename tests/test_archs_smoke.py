@@ -16,9 +16,10 @@ from repro.models.lm import (LMConfig, lm_init, lm_init_cache, lm_loss,
 from repro.models.registry import get_arch_module, list_architectures
 from repro.nn.module import split_params
 from repro.optim.optimizers import sgdm
+from repro.core.grouping import encdec_grouping
 from repro.train.serve import make_decode_fn, make_prefill_fn
+from repro.train.task import task_for_config
 from repro.train.train_step import TrainState, make_train_step
-from repro.launch.dryrun import _encdec_grouping
 
 ARCHS = list_architectures()
 
@@ -56,13 +57,13 @@ def test_forward_and_train_step(arch):
     assert jnp.isfinite(total), arch
     assert metrics["loss"].shape == ()
 
-    grouping = (_encdec_grouping(params, cfg) if isinstance(cfg, EncDecConfig)
+    grouping = (encdec_grouping(params, cfg) if isinstance(cfg, EncDecConfig)
                 else lm_grouping(params, cfg.stack))
     tac = TriAccelConfig(ladder="tpu", t_ctrl=1)
     opt = sgdm()
-    step = make_train_step(cfg, tac, opt, grouping,
+    step = make_train_step(task_for_config(cfg), tac, opt, grouping,
                            lambda s: jnp.asarray(1e-3), accum=1)
-    state = TrainState(params, opt.init(params),
+    state = TrainState(params, {}, opt.init(params),
                        init_control(grouping.num_layers, tac))
     state2, metrics = jax.jit(step)(state, batch)
     assert bool(metrics["grads_finite"]), arch

@@ -3,20 +3,34 @@ feedback accumulates the quantization residual."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # degrade gracefully: run fixed examples
+    given = settings = st = None
 
 from repro.optim.compression import dequantize_int8, quantize_int8
 
 
-@given(st.floats(0.1, 1e4))
-@settings(max_examples=25, deadline=None)
-def test_quantize_roundtrip_error_bounded(scale):
+def _check_roundtrip_error_bounded(scale):
     x = jax.random.normal(jax.random.PRNGKey(1), (256,)) * scale
     q, s = quantize_int8(x)
     y = dequantize_int8(q, s)
     amax = float(jnp.max(jnp.abs(x)))
     # max quantization error is half an int8 bucket
     assert float(jnp.max(jnp.abs(y - x))) <= amax / 127.0 + 1e-6
+
+
+if st is not None:
+    @given(st.floats(0.1, 1e4))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_roundtrip_error_bounded(scale):
+        _check_roundtrip_error_bounded(scale)
+else:
+    @pytest.mark.parametrize("scale", [0.1, 1.0, 37.5, 1e4])
+    def test_quantize_roundtrip_error_bounded(scale):
+        _check_roundtrip_error_bounded(scale)
 
 
 def test_quantize_zero_safe():

@@ -1,0 +1,216 @@
+"""Unified-engine guarantees (the TrainTask refactor contract):
+
+(a) the task-generic train step is numerically identical to the
+    pre-refactor dedicated vision step (reference implementation inlined
+    below) for 5 steps at fixed seed;
+(b) LM and vision trainers both round-trip through AsyncCheckpointer
+    restore — including vision aux_state (BatchNorm), which the old
+    vision path could not checkpoint at all;
+(c) warm_rungs() leaves an AOT-compiled executable per rung: a training
+    step on any configured rung triggers ZERO new XLA compilations
+    (probed via jax.monitoring backend_compile events + the trainer's
+    executable-cache counter).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from typing import Any, NamedTuple
+
+from repro.core.controller import ControlState, init_control, lr_scales, \
+    update_control
+from repro.core.precision import TriAccelConfig, make_qdq_fn
+from repro.data.synthetic import CIFARLikeStream
+from repro.models.lm import LMConfig
+from repro.models.vision import VisionConfig, vision_apply
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+from repro.nn.module import split_params
+from repro.optim.optimizers import apply_updates, global_norm, sgdm
+from repro.train.schedules import warmup_cosine
+from repro.train.task import LMTask, VisionTask
+from repro.train.train_step import TrainState, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ======================================================================
+# (a) numeric parity with the pre-refactor vision step
+# ======================================================================
+# Reference: the deleted repro/train/vision_step.py, inlined verbatim.
+class _RefVisionState(NamedTuple):
+    params: Any
+    bn_state: Any
+    opt_state: Any
+    control: ControlState
+
+
+def _ref_apply_codes(params, codes, qdq_fn, keys):
+    if qdq_fn is None:
+        return params
+    return {k: jax.tree.map(lambda w: qdq_fn(w, codes[i]), params[k])
+            for i, k in enumerate(keys)}
+
+
+def _ref_make_vision_train_step(cfg, tac, opt, grouping, schedule,
+                                grad_clip=0.0):
+    qdq_fn = make_qdq_fn(tac)
+    keys = grouping.names
+
+    def loss_at(params, bn_state, batch, codes, ls):
+        p = _ref_apply_codes(params, codes, qdq_fn, keys)
+        logits, new_bn = vision_apply(p, bn_state, batch["images"], True, cfg)
+        one = jax.nn.one_hot(batch["labels"], cfg.num_classes)
+        loss = -jnp.mean(jnp.sum(one * jax.nn.log_softmax(logits), axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                        ).astype(jnp.float32))
+        return loss * ls, (new_bn, {"loss": loss, "accuracy": acc})
+
+    def train_step(state, batch):
+        params, bn_state, opt_state, control = state
+        ls = control.loss_scale
+        grads, (new_bn, metrics) = jax.grad(loss_at, has_aux=True)(
+            params, bn_state, batch, control.codes, ls)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / ls, grads)
+        finite = jnp.all(jnp.stack([jnp.all(jnp.isfinite(g))
+                                    for g in jax.tree.leaves(grads)]))
+        if grad_clip > 0:
+            gn = global_norm(grads)
+            grads = jax.tree.map(
+                lambda g: g * jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9)),
+                grads)
+        control2 = update_control(control, grouping.moments(grads), tac, finite)
+        lr = schedule(control2.step)
+        lr_tree = grouping.broadcast(lr_scales(control2, tac) * lr, params)
+        updates, opt_state2 = opt.update(grads, opt_state, params, lr_tree)
+        new_params = apply_updates(params, updates)
+        keep = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(finite, a, b), new, old)
+        return _RefVisionState(keep(new_params, params), keep(new_bn, bn_state),
+                               keep(opt_state2, opt_state), control2), metrics
+
+    return train_step
+
+
+def _vision_fixture(seed=0):
+    cfg = VisionConfig(name="resnet18", num_classes=10)
+    task = VisionTask(cfg)
+    pw, bn = task.init(jax.random.PRNGKey(seed))
+    params, _ = split_params(pw)
+    grouping = task.grouping(params)
+    tac = TriAccelConfig(ladder="gpu", t_ctrl=2, t_curv=1000, b_curv=2,
+                         tau_low=3e-9, tau_high=1e-5, alpha=0.05,
+                         enable_curvature=False, mem_cap_bytes=4e9)
+    opt = sgdm(momentum=0.9, weight_decay=5e-4)
+    schedule = warmup_cosine(0.05, 2, 5)
+    return cfg, task, params, bn, grouping, tac, opt, schedule
+
+
+def test_unified_step_matches_prerefactor_vision_step():
+    cfg, task, params, bn, grouping, tac, opt, schedule = _vision_fixture()
+    ref_step = jax.jit(_ref_make_vision_train_step(
+        cfg, tac, opt, grouping, schedule, grad_clip=5.0))
+    new_step = jax.jit(make_train_step(
+        task, tac, opt, grouping, schedule, grad_clip=5.0))
+
+    ref = _RefVisionState(params, bn, opt.init(params),
+                          init_control(grouping.num_layers, tac))
+    new = TrainState(params, bn, opt.init(params),
+                     init_control(grouping.num_layers, tac))
+    stream = CIFARLikeStream(global_batch=8, seed=3)
+    for i in range(5):
+        batch = stream.batch(i)
+        ref, mr = ref_step(ref, batch)
+        new, mn = new_step(new, batch)
+        np.testing.assert_array_equal(np.asarray(mr["loss"]),
+                                      np.asarray(mn["loss"]), err_msg=f"step {i}")
+    for name, a, b in (("params", ref.params, new.params),
+                       ("bn", ref.bn_state, new.aux_state),
+                       ("opt", ref.opt_state, new.opt_state),
+                       ("control", ref.control, new.control)):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=name)
+
+
+# ======================================================================
+# (b) checkpoint round-trip through the unified Trainer, LM and vision
+# ======================================================================
+def _tiny_lm(vocab=64):
+    attn = AttnConfig(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      impl="naive")
+    sc = StackConfig(segments=(((BlockDef("gqa", "dense"),), 2),),
+                     d_model=64, d_ff=128, attn=attn, remat=False)
+    return LMConfig(name="tiny", family="dense", vocab_size=vocab, stack=sc,
+                    compute_dtype=jnp.float32)
+
+
+def _tiny_vision():
+    return VisionConfig(name="resnet18", num_classes=10)
+
+
+@pytest.mark.parametrize("kind", ["lm", "vision"])
+def test_checkpoint_roundtrip_unified(kind, tmp_path):
+    if kind == "lm":
+        task = LMTask(_tiny_lm())
+        tac = TriAccelConfig(ladder="tpu", t_ctrl=4, enable_curvature=False)
+        mk = lambda: TrainerConfig(total_steps=4, seq_len=16, rungs=(4,),
+                                   ckpt_dir=str(tmp_path), ckpt_every=100,
+                                   log_every=1, base_lr=1e-2)
+    else:
+        task = VisionTask(_tiny_vision())
+        tac = TriAccelConfig(ladder="gpu", t_ctrl=4, enable_curvature=False,
+                             mem_cap_bytes=4e9)
+        mk = lambda: TrainerConfig(total_steps=4, seq_len=1, rungs=(4,),
+                                   ckpt_dir=str(tmp_path), ckpt_every=100,
+                                   log_every=1, base_lr=1e-3)
+    tr = Trainer(task, tac, mk())
+    tr.run(4)            # final save is blocking
+    tr.ckpt.wait()
+
+    tr2 = Trainer(task, tac, mk())
+    assert tr2.maybe_restore() == 4
+    for a, b in zip(jax.tree.leaves(tr.state), jax.tree.leaves(tr2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ======================================================================
+# (c) warm_rungs(): zero new compilations on any configured rung
+# ======================================================================
+def test_warm_rungs_precompiles_every_rung():
+    task = VisionTask(_tiny_vision())
+    tac = TriAccelConfig(ladder="gpu", t_ctrl=1000, enable_curvature=False,
+                         enable_batch=False, mem_cap_bytes=4e9)
+    tcfg = TrainerConfig(total_steps=4, seq_len=1, rungs=(2, 4),
+                         log_every=1000, base_lr=1e-3)
+    tr = Trainer(task, tac, tcfg)
+    tr.warm_rungs()
+    assert tr.compile_count == len(tcfg.rungs)
+    assert all(isinstance(e, jax.stages.Compiled)
+               for e in tr._executables.values())
+
+    compile_events = []
+    active = [True]
+
+    def _listener(name, *args, **kw):
+        if active[0] and "backend_compile" in name:
+            compile_events.append(name)
+
+    # monitoring listeners are a private API; the compile_count probe below
+    # is authoritative, the XLA event check is best-effort
+    try:
+        from jax._src import monitoring as _mon
+        _mon.register_event_duration_secs_listener(_listener)
+    except (ImportError, AttributeError):
+        _mon = None
+    try:
+        tr.run(1)                     # default rung
+        tr.scaler.idx = 0             # force the other rung
+        tr.run(1)
+    finally:
+        active[0] = False
+        unreg = getattr(_mon, "_unregister_event_duration_listener_by_callback",
+                        None) if _mon is not None else None
+        if unreg is not None:
+            unreg(_listener)
+    assert tr.compile_count == len(tcfg.rungs)   # cache untouched
+    assert compile_events == [], compile_events

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # degrade gracefully: run fixed examples
+    given = settings = st = None
 
 from repro.core import curvature as curv
 from repro.core.batch_scaler import BatchScaler, MemoryModel
@@ -31,9 +35,7 @@ def test_curvature_promotion_overrides():
     assert list(np.asarray(codes)) == [0, 2]
 
 
-@given(st.lists(st.floats(1e-10, 1e2), min_size=1, max_size=32))
-@settings(max_examples=30, deadline=None)
-def test_codes_monotone_in_variance(vs):
+def _check_codes_monotone(vs):
     """Higher variance never gets LOWER precision (monotone law)."""
     tac = TriAccelConfig(enable_curvature=False)
     v = jnp.asarray(sorted(vs), jnp.float32)
@@ -41,13 +43,30 @@ def test_codes_monotone_in_variance(vs):
     assert (np.diff(codes) >= 0).all()
 
 
-@given(st.integers(0, 2))
-@settings(max_examples=9, deadline=None)
-def test_qdq_idempotent(code):
+def _check_qdq_idempotent(code):
     x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 2
     once = qdq(x, jnp.asarray(code), "gpu")
     twice = qdq(once, jnp.asarray(code), "gpu")
     np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+if st is not None:
+    @given(st.lists(st.floats(1e-10, 1e2), min_size=1, max_size=32))
+    @settings(max_examples=30, deadline=None)
+    def test_codes_monotone_in_variance(vs):
+        _check_codes_monotone(vs)
+
+    @given(st.integers(0, 2))
+    @settings(max_examples=9, deadline=None)
+    def test_qdq_idempotent(code):
+        _check_qdq_idempotent(code)
+else:
+    def test_codes_monotone_in_variance():
+        _check_codes_monotone([1e-10, 1e-7, 5e-4, 1e-3, 1e2])
+
+    @pytest.mark.parametrize("code", [0, 1, 2])
+    def test_qdq_idempotent(code):
+        _check_qdq_idempotent(code)
 
 
 def test_variance_from_moments():
@@ -119,13 +138,21 @@ def test_scaler_backs_off_on_measured_pressure():
     assert sc.microbatch < hi
 
 
-@given(st.lists(st.floats(0, 2e10), min_size=1, max_size=50))
-@settings(max_examples=30, deadline=None)
-def test_scaler_rung_always_valid(measured):
+def _check_rung_always_valid(measured):
     sc, _ = _scaler()
     for i, m in enumerate(measured):
         r = sc.observe(i, measured_bytes=m)
         assert r in sc.rungs
+
+
+if st is not None:
+    @given(st.lists(st.floats(0, 2e10), min_size=1, max_size=50))
+    @settings(max_examples=30, deadline=None)
+    def test_scaler_rung_always_valid(measured):
+        _check_rung_always_valid(measured)
+else:
+    def test_scaler_rung_always_valid():
+        _check_rung_always_valid([0.0, 2e10, 1e9, 1.5e10, 5e8, 2e10, 0.0])
 
 
 def test_precision_codes_shrink_modeled_memory():

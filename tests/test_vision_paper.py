@@ -14,24 +14,26 @@ from repro.nn.module import split_params
 from repro.optim.optimizers import sgdm
 from repro.train.paper_harness import (_memory_model, _tac_for,
                                        activation_elems)
-from repro.train.vision_step import VisionTrainState, make_vision_train_step
+from repro.train.task import VisionTask
+from repro.train.train_step import TrainState, make_train_step
 
 
 def test_vision_step_learns():
     cfg = VisionConfig(name="resnet18", num_classes=10)
+    task = VisionTask(cfg)
     key = jax.random.PRNGKey(0)
-    pw, bn = vision_init(key, cfg)
+    pw, bn = task.init(key)
     params, _ = split_params(pw)
-    grouping = flat_grouping(params)
+    grouping = task.grouping(params)
     tac = _tac_for("triaccel", mem_cap_gb=4.0)
     opt = sgdm(momentum=0.9)
-    step = jax.jit(make_vision_train_step(cfg, tac, opt, grouping,
-                                          lambda s: jnp.asarray(0.05)))
-    state = VisionTrainState(params, bn, opt.init(params),
-                             init_control(grouping.num_layers, tac))
-    stream = CIFARLikeStream(global_batch=16, seed=0)
+    step = jax.jit(make_train_step(task, tac, opt, grouping,
+                                   lambda s: jnp.asarray(0.05), grad_clip=5.0))
+    state = TrainState(params, bn, opt.init(params),
+                       init_control(grouping.num_layers, tac))
+    stream = CIFARLikeStream(global_batch=32, seed=0)
     losses = []
-    for i in range(14):
+    for i in range(20):
         state, m = step(state, stream.batch(i))
         losses.append(float(m["loss"]))
     assert np.mean(losses[-4:]) < np.mean(losses[:4]), losses
