@@ -30,6 +30,11 @@ def main() -> None:
     roofline_table.main()
     sys.stdout.flush()
 
+    from benchmarks import serve_bench
+    print("# serving: tok/s + modeled HBM per (batch rung x precision tier)")
+    serve_bench.main(steps=5 if args.quick else 20)
+    sys.stdout.flush()
+
     if not args.skip_vision:
         from benchmarks import table1, table2
         print("# paper Table 1 (FP32 / AMP / Tri-Accel)")

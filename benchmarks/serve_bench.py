@@ -1,0 +1,95 @@
+"""§Serving benchmark: decode throughput and modeled HBM at each
+(batch rung x precision tier) for one sub-quadratic arch (recurrentgemma-2b:
+O(1) recurrent state + window-bounded KV) and one full-attention arch
+(smollm-135m: full-length KV).
+
+tok/s is measured on THIS host over the reduced config's AOT-warmed decode
+executable (CPU wall numbers validate dispatch, not TPU perf); modeled HBM
+is the serve memory model of the FULL config — weights at the tier's byte
+width + the decode-cache bytes at ``--model-len`` context — the same model
+the ServeSession's rung controller runs on.
+
+CSV (one section of benchmarks/run.py): serve:arch,rung,tier,tok_s,
+hbm_model_gb,fits. ``--out`` additionally writes one dry-run-style JSON
+artifact per cell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+ARCHS = ("recurrentgemma-2b", "smollm-135m")
+RUNGS = (1, 4, 16)
+TIERS = (0, 1, 2)
+
+
+def run(archs=ARCHS, rungs=RUNGS, tiers=TIERS, steps: int = 20,
+        model_len: int = 32768, hbm_cap: float = 16e9):
+    import jax
+    from repro.models.registry import get_task
+    from repro.nn.module import split_params
+    from repro.serve import ServeEngine
+
+    rows = []
+    for arch in archs:
+        task = get_task(arch, reduced=True)
+        wrapped, aux = task.init(jax.random.PRNGKey(0))
+        params, _ = split_params(wrapped)
+        engine = ServeEngine(task, params, aux, total_len=64, prompt_len=8,
+                             rungs=rungs, tiers=tiers)
+        # full-config memory model: modeled HBM at the production context
+        full = get_task(arch)
+        pshape = jax.eval_shape(lambda k: full.init(k)[0],
+                                jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+        pvals = jax.tree.map(lambda p: p.value, pshape,
+                             is_leaf=lambda x: hasattr(x, "axes"))
+        for rung in rungs:
+            for tier in tiers:
+                caches = engine.init_caches(rung)
+                tok = np.zeros((rung,), np.int32)
+                idx = np.arange(rung, dtype=np.int32) % 8
+                out, caches = engine.decode(rung, tier, caches, tok, idx)
+                jax.block_until_ready(out)
+                t0 = time.time()
+                for s in range(steps):
+                    out, caches = engine.decode(rung, tier, caches, tok,
+                                                idx + 1 + s)
+                jax.block_until_ready(out)
+                dt = max(time.time() - t0, 1e-9)
+                mm = full.serve_memory_model(pvals, model_len,
+                                             weight_tier=tier)
+                hbm = mm.total(rung * full.tokens_per_sample(model_len))
+                rows.append({"arch": arch, "rung": rung, "tier": tier,
+                             "tok_s": steps * rung / dt,
+                             "hbm_per_device_bytes": hbm,
+                             "fits_hbm": bool(hbm < hbm_cap)})
+    return rows
+
+
+def main(steps: int = 20, out_dir=None):
+    rows = run(steps=steps)
+    print("serve:arch,rung,tier,tok_s,hbm_model_gb,fits")
+    for r in rows:
+        print("serve:" + ",".join([
+            r["arch"], str(r["rung"]), str(r["tier"]), f"{r['tok_s']:.1f}",
+            f"{r['hbm_per_device_bytes'] / 1e9:.2f}", str(r["fits_hbm"])]))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        for r in rows:
+            fn = os.path.join(
+                out_dir, f"{r['arch']}__serve_r{r['rung']}_t{r['tier']}.json")
+            with open(fn, "w") as f:
+                json.dump(dict(r, shape=f"serve_r{r['rung']}_t{r['tier']}",
+                               status="ok"), f, indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(steps=args.steps, out_dir=args.out)

@@ -1,72 +1,74 @@
-"""Serving example: prefill + batched greedy decode with a KV cache,
-exercising the same serve_step the decode_32k / long_500k dry-run cells
-lower (ring caches for windowed layers, compressed MLA caches, SSM states).
+"""Elastic serving on the unified task layer: continuous batching at
+memory-driven batch rungs, AOT-warmed (rung, precision-tier) decode
+executables, precision-adaptive decode weights — for ANY registered arch,
+the vision testbed included.
 
     PYTHONPATH=src python examples/elastic_serve.py --arch recurrentgemma-2b
+    PYTHONPATH=src python examples/elastic_serve.py --arch resnet18
+
+Requests arrive in waves (half up front, half mid-flight) so the session
+exercises admission, rung growth, and shrink within one run.
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.models.encdec import EncDecConfig, encdec_init, encdec_init_cache
-from repro.models.lm import lm_init, lm_init_cache
-from repro.models.registry import get_arch_module
-from repro.nn.module import split_params
-from repro.train.serve import make_decode_fn, make_prefill_fn
+from repro.models import registry
+from repro.serve import ServeConfig, ServeSession
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="recurrentgemma-2b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="recurrentgemma-2b",
+                    choices=registry.list_tasks())
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--rungs", default="1,2,4")
+    ap.add_argument("--tiers", default="0,1",
+                    help="decode-weight precision tiers to warm "
+                         "(0=fp8 QDQ, 1=bf16, 2=fp32)")
     args = ap.parse_args()
 
-    cfg = get_arch_module(args.arch).reduced_config()
-    key = jax.random.PRNGKey(0)
-    init_fn = encdec_init if isinstance(cfg, EncDecConfig) else lm_init
-    params, _ = split_params(init_fn(key, cfg))
-    params = jax.tree.map(
-        lambda p: p.astype(jnp.bfloat16)
-        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    task = registry.get_task(args.arch, reduced=True)
+    rungs = tuple(sorted(int(r) for r in args.rungs.split(",")))
+    tiers = tuple(int(t) for t in args.tiers.split(","))
+    cfg = ServeConfig(prompt_len=args.prompt_len,
+                      total_len=args.prompt_len + args.gen + 8,
+                      rungs=rungs, tiers=tiers, max_new_tokens=args.gen,
+                      t_ctrl=8)
+    sess = ServeSession(task, cfg)
+    compiles = sess.warm()
+    print(f"arch={args.arch} warmed {compiles} executables "
+          f"(rungs={rungs} x tiers={tiers})")
 
-    B, P = args.batch, args.prompt_len
-    total = P + args.gen + 8
-    if isinstance(cfg, EncDecConfig):
-        batch = {"frontend_embeds": jax.random.normal(key, (B, P, cfg.frontend_dim)),
-                 "tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
-        caches = encdec_init_cache(cfg, B, total, enc_len=P)
-        idx0 = P
-    else:
-        batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
-        caches = lm_init_cache(cfg, B, total)
-        idx0 = 0
+    # deterministic synthetic requests from the task's own stream
+    batch = task.data_stream(max(args.requests, 1), seed=0,
+                             seq_len=args.prompt_len).batch(0)
+    inputs = [{k: np.asarray(v[i]) for k, v in batch.items() if k != "labels"}
+              for i in range(args.requests)]
 
-    prefill = jax.jit(make_prefill_fn(cfg))
-    decode = jax.jit(make_decode_fn(cfg), donate_argnums=(1,))
+    first = inputs[: max(args.requests // 2, 1)]
+    rest = inputs[len(first):]
+    for x in first:
+        sess.submit(x)
+    for _ in range(3):                      # let the first wave get in flight
+        sess.step()
+    for x in rest:                          # mid-flight arrivals -> rung growth
+        sess.submit(x)
+    stats = sess.run()
 
-    tok, _ = prefill(params, batch)
-    # replay prompt through the decode cache, then generate greedily
-    toks = [tok]
-    t0 = time.time()
-    if not isinstance(cfg, EncDecConfig):
-        for i in range(P):
-            tok, caches = decode(params, caches, batch["tokens"][:, i],
-                                 jnp.asarray(i, jnp.int32))
-    for i in range(args.gen):
-        tok, caches = decode(params, caches, tok,
-                             jnp.asarray(idx0 + P + i, jnp.int32)
-                             if isinstance(cfg, EncDecConfig)
-                             else jnp.asarray(P + i, jnp.int32))
-        toks.append(tok)
-    dt = time.time() - t0
-    out = jnp.stack(toks, axis=1)
-    print(f"arch={args.arch} generated {out.shape} tokens "
-          f"({args.gen * B / dt:.1f} tok/s incl. replay)")
-    print("sample:", list(map(int, out[0][:16])))
+    print(f"served {len(sess.results())} requests in {stats['steps']} steps "
+          f"({stats['tok_s']:.1f} tok/s, {stats['decoded_tokens']} tokens)")
+    print(f"rung history {stats['rung_history']}  "
+          f"tier history {stats['tier_history']}  "
+          f"new compiles after warm-up: "
+          f"{stats['compile_count'] - compiles}")
+    for rid, req in sorted(sess.results().items()):
+        if task.serves_tokens:
+            print(f"  req {rid}: {req.tokens[:12]}{'...' if len(req.tokens) > 12 else ''}")
+        else:
+            print(f"  req {rid}: class={req.result}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,15 @@
 """Shared shape definitions + input_specs builders for all architectures.
 
-Every assigned architecture is paired with the same four shapes:
+Every assigned LM/enc-dec architecture is paired with the same four shapes:
 
     train_4k     seq=4096   global_batch=256  -> train_step
     prefill_32k  seq=32768  global_batch=32   -> prefill_step
     decode_32k   seq=32768  global_batch=128  -> serve_step (1 token, KV=seq)
     long_500k    seq=524288 global_batch=1    -> serve_step; sub-quadratic only
+
+The paper's vision testbed serves through one batched-inference shape:
+
+    infer_4k     global_batch=4096            -> infer_step (cache-free)
 
 ``input_specs`` return jax.ShapeDtypeStruct stand-ins only — nothing is
 allocated; the dry-run lowers against them.
@@ -20,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.models.encdec import EncDecConfig
 from repro.models.lm import LMConfig
+from repro.models.vision import VisionConfig
 
 SDS = jax.ShapeDtypeStruct
 
@@ -29,7 +34,7 @@ class Shape:
     name: str
     seq_len: int
     global_batch: int
-    kind: str                    # "train" | "prefill" | "decode"
+    kind: str                    # "train" | "prefill" | "decode" | "infer"
 
 
 SHAPES: Dict[str, Shape] = {
@@ -37,7 +42,10 @@ SHAPES: Dict[str, Shape] = {
     "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
     "long_500k": Shape("long_500k", 524288, 1, "decode"),
+    "infer_4k": Shape("infer_4k", 1, 4096, "infer"),
 }
+
+VISION_IMAGE_SIZE = 32           # the CIFAR-class testbed resolution
 
 # number of stub frontend positions (vlm patches) prepended for qwen2-vl
 VLM_PATCHES = 256
@@ -78,12 +86,23 @@ def encdec_input_specs(cfg: EncDecConfig, shape: Shape) -> Dict[str, Any]:
     return {"token": SDS((B,), jnp.int32)}
 
 
+def vision_input_specs(cfg: VisionConfig, shape: Shape) -> Dict[str, Any]:
+    S = VISION_IMAGE_SIZE
+    return {"images": SDS((shape.global_batch, S, S, 3), jnp.float32)}
+
+
 def input_specs_for(cfg, shape_name: str) -> Dict[str, Any]:
     shape = SHAPES[shape_name]
+    if isinstance(cfg, VisionConfig):
+        return vision_input_specs(cfg, shape)
     if isinstance(cfg, EncDecConfig):
         return encdec_input_specs(cfg, shape)
     return lm_input_specs(cfg, shape)
 
 
 def skip_reason(cfg, shape_name: str, skip_map: Dict[str, str]) -> Optional[str]:
-    return skip_map.get(shape_name)
+    if shape_name in skip_map:
+        return skip_map[shape_name]
+    if SHAPES[shape_name].kind == "infer" and not isinstance(cfg, VisionConfig):
+        return "batched-inference shape: vision testbed only"
+    return None

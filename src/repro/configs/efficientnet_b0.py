@@ -6,7 +6,9 @@ adaptation) — noted in EXPERIMENTS.md.
 """
 from repro.models.vision import VisionConfig
 
-SKIP_SHAPES = {s: "vision model: LM shapes not applicable"
+# serving runs through the cache-free infer_4k shape (configs.base); only
+# the sequence-shaped LM cells are skipped
+SKIP_SHAPES = {s: "vision model: LM sequence shapes not applicable"
                for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")}
 
 

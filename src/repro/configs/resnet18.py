@@ -1,7 +1,11 @@
-"""resnet18 [paper]: the paper's primary testbed (CIFAR-10/100)."""
+"""resnet18 [paper]: the paper's primary testbed (CIFAR-10/100).
+
+Serving runs through the cache-free ``infer_4k`` batched-inference shape
+(configs.base); only the sequence-shaped LM cells are skipped.
+"""
 from repro.models.vision import VisionConfig
 
-SKIP_SHAPES = {s: "vision model: LM shapes not applicable"
+SKIP_SHAPES = {s: "vision model: LM sequence shapes not applicable"
                for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")}
 
 

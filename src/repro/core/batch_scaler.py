@@ -74,6 +74,21 @@ class MemoryModel:
             self.calibration = measured_bytes / est
 
 
+@dataclasses.dataclass
+class ServeMemoryModel(MemoryModel):
+    """Inference-time HBM model: weights at the ACTIVE serving precision tier
+    (fp8 / bf16 / fp32 per ``TIER_BYTES``) plus per-sequence decode-cache
+    bytes carried in ``act_bytes_per_token_layer`` — no optimizer, master, or
+    gradient state. Drives both the §3.3 batch-rung controller and the
+    precision-adaptive decode tier selection (repro.serve.session)."""
+
+    weight_tier: int = 1               # serving precision code: 0/1/2
+    ladder: str = "tpu"
+
+    def param_state_bytes(self) -> float:
+        return self.param_count * TIER_BYTES[self.ladder][self.weight_tier]
+
+
 class BatchScaler:
     """Discrete-rung realization of the paper's VRAM feedback controller."""
 

@@ -23,24 +23,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, input_specs_for
-from repro.core.grouping import encdec_grouping, lm_grouping
+from repro.configs.base import SHAPES, input_specs_for, skip_reason
+from repro.core.grouping import encdec_grouping
 from repro.core.precision import TriAccelConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch import sharding as shd
-from repro.models.encdec import (EncDecConfig, encdec_init, encdec_init_cache)
-from repro.models.lm import LMConfig, lm_init, lm_init_cache
-from repro.models.registry import get_arch_module, list_architectures
+from repro.models.encdec import EncDecConfig
+from repro.models.registry import get_arch_module, list_tasks
 from repro.roofline.analysis import (HW, dominant_term, model_flops,
                                      roofline_terms)
 from repro.roofline.hlo_parse import collective_bytes
 from repro.roofline import costmodel as cm
 from repro.train.schedules import warmup_cosine
-from repro.train.serve import make_decode_fn, make_prefill_fn
+from repro.train.serve import make_decode_fn, make_infer_fn, make_prefill_fn
 from repro.train.train_step import TrainState, make_train_step
 from repro.optim.optimizers import sgdm
 from repro.core.controller import init_control
-from repro.configs.base import ENCDEC_CROSS_LEN
 
 SDS = jax.ShapeDtypeStruct
 
@@ -80,9 +78,9 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
     specs = input_specs_for(cfg, shape_name)
     key_sds = SDS((2,), jnp.uint32)
 
-    init_fn = encdec_init if isinstance(cfg, EncDecConfig) else lm_init
-    from repro.nn.module import split_params
-    pshape_w = jax.eval_shape(lambda k: init_fn(k, cfg), key_sds)
+    from repro.train.task import task_for_config
+    task = task_for_config(cfg)
+    pshape_w, aux_shape = jax.eval_shape(task.init, key_sds)
     pvals_shape, paxes = (jax.tree.map(lambda p: p.value, pshape_w,
                                        is_leaf=lambda x: hasattr(x, "axes")),
                           jax.tree.map(lambda p: p.axes, pshape_w,
@@ -93,13 +91,27 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
     chips = mesh.size
     info = {"params_total": n_total, "params_active": n_active}
 
+    if shape.kind == "infer":
+        # cache-free batched inference (the vision testbed's serve shape)
+        infer = make_infer_fn(task)
+        aux_sh = jax.tree.map(lambda _: shd.replicated(mesh), aux_shape)
+        batch_sh = shd.batch_shardings(specs, mesh)
+        with mesh, shd.activation_mesh(mesh):
+            jitted = jax.jit(infer, in_shardings=(param_sh, aux_sh, batch_sh))
+            lowered = jitted.lower(pvals_shape, aux_shape, specs)
+        B = shape.global_batch
+        info["model_flops"] = model_flops(n_active, B, "serve")
+        # vision blocks are unrolled (no scan-over-layers), so XLA's
+        # cost_analysis is trip-count-exact here: run_cell reads the roofline
+        # inputs from the compiled module instead of the GEMM-enumeration model
+        info["exec_costs"] = None
+        from repro.train.paper_harness import activation_elems
+        info["hbm_per_device"] = (n_total * 4.0
+                                  + activation_elems(cfg) * 4.0 * B) / chips
+        return lowered, info
+
     if shape.kind == "train":
-        from repro.train.task import task_for_config
-        task = task_for_config(cfg)
-        if isinstance(cfg, EncDecConfig):
-            grouping = encdec_grouping(pvals_shape, cfg)
-        else:
-            grouping = lm_grouping(pvals_shape, cfg.stack)
+        grouping = task.grouping(pvals_shape)
         tac = TriAccelConfig(ladder="tpu", dynamic_precision=triaccel)
         opt = sgdm(momentum=0.9)
         compute_sh = None
@@ -133,12 +145,12 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
             n_total)
         return lowered, info
 
-    # --- serving paths use bf16 params ---
+    # --- serving paths use bf16 params, lowered through the task hooks ---
     pvals_bf16 = jax.tree.map(
         lambda s: SDS(s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
         pvals_shape)
     if shape.kind == "prefill":
-        prefill = make_prefill_fn(cfg)
+        prefill = make_prefill_fn(task)
         batch_sh = shd.batch_shardings(specs, mesh)
         with mesh, shd.activation_mesh(mesh):
             jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
@@ -154,13 +166,10 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
 
     # decode: one token against a seq_len cache
     B, S = shape.global_batch, shape.seq_len
-    if isinstance(cfg, EncDecConfig):
-        cache_shape = jax.eval_shape(
-            lambda: encdec_init_cache(cfg, B, S, ENCDEC_CROSS_LEN))
-    else:
-        cache_shape = jax.eval_shape(lambda: lm_init_cache(cfg, B, S))
+    cache_shape = jax.eval_shape(
+        lambda: task.init_cache({"tokens": SDS((B, 1), jnp.int32)}, S))
     cache_sh = shd.cache_shardings(cache_shape, mesh)
-    decode = make_decode_fn(cfg)
+    decode = make_decode_fn(task)
     tok_sds = SDS((B,), jnp.int32)
     idx_sds = SDS((), jnp.int32)
     with mesh, shd.activation_mesh(mesh):
@@ -200,10 +209,11 @@ def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.size
     mod = get_arch_module(arch)
-    skip = getattr(mod, "SKIP_SHAPES", {})
-    if shape_name in skip:
+    reason = skip_reason(mod.config(), shape_name,
+                         getattr(mod, "SKIP_SHAPES", {}))
+    if reason is not None:
         res = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-               "status": "skipped", "reason": skip[shape_name],
+               "status": "skipped", "reason": reason,
                "profile": profile}
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
@@ -251,11 +261,19 @@ def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
         coll = collective_bytes(hlo)
         coll_dev = float(sum(coll.values()))
 
-        # analytic executed flops / HBM traffic (global), then per device
+        # analytic executed flops / HBM traffic (global), then per device.
+        # Scan-free cells (vision infer) carry exec_costs=None: there XLA's
+        # cost_analysis is trip-count-exact and is used directly.
         shape = SHAPES[shape_name]
         ecosts = info["exec_costs"]
-        flops_dev = ecosts.flops / chips
-        bytes_dev = ecosts.bytes / chips
+        if ecosts is not None:
+            flops_dev = ecosts.flops / chips
+            bytes_dev = ecosts.bytes / chips
+            flops_global = ecosts.flops
+        else:
+            flops_dev = res["xla_flops_body_once"]
+            bytes_dev = res["xla_bytes_body_once"]
+            flops_global = flops_dev * chips
         res["flops_per_device"] = flops_dev
         res["bytes_per_device"] = bytes_dev
         res["collective_bytes_per_device"] = coll_dev
@@ -264,7 +282,7 @@ def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
         res.update(terms)
         res["dominant"] = dominant_term(terms)
         mf = info.get("model_flops", 0.0)
-        res["useful_flop_ratio"] = mf / ecosts.flops if ecosts.flops else None
+        res["useful_flop_ratio"] = mf / flops_global if flops_global else None
         # per-device HBM: analytic (params/opt/grads + activations + caches)
         res["hbm_per_device_bytes"] = info["hbm_per_device"]
         res["fits_hbm"] = bool(info["hbm_per_device"] < hw.hbm_bytes)
@@ -302,7 +320,7 @@ def main():
                     help="override MoE capacity factor")
     args = ap.parse_args()
 
-    archs = list_architectures() if (args.all or args.arch is None) \
+    archs = list_tasks() if (args.all or args.arch is None) \
         else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]

@@ -103,12 +103,16 @@ def encdec_init_cache(cfg: EncDecConfig, batch: int, length: int, enc_len: int,
 
 
 def encdec_decode_step(params, token, caches, index, cfg: EncDecConfig):
-    """One decoder token against self KV cache + frozen cross caches."""
+    """One decoder token against self KV cache + frozen cross caches.
+
+    ``index`` may be a scalar or a (B,) vector of per-request positions."""
+    from repro.nn.attention import decode_index
     B = token.shape[0]
     x = params["embed"]["table"].astype(cfg.compute_dtype)[token][:, None, :]
-    pos = jnp.full((B, 1), index, jnp.int32)
+    idx = decode_index(index, B)
+    pos = idx[:, None]
     x, caches, _ = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
-                             mode="decode", caches=caches, index=index)
+                             mode="decode", caches=caches, index=idx)
     x = rmsnorm(params["final_norm"], x, cfg.dec_stack.norm_eps)
     logits = x @ params["embed"]["table"].astype(x.dtype).T
     return logits[:, 0, :], caches

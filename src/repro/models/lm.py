@@ -158,14 +158,17 @@ def lm_init_cache(cfg: LMConfig, batch: int, length: int, dtype=jnp.bfloat16):
 
 def lm_decode_step(params, token, caches, index, cfg: LMConfig,
                    mrope_positions=None):
-    """One token decode. token: (B,) int32; index: scalar int32 position."""
+    """One token decode. token: (B,) int32; index: scalar int32 position or a
+    (B,) vector of per-request positions (continuous batching)."""
+    from repro.nn.attention import decode_index
     B = token.shape[0]
     x = params["embed"]["table"].astype(cfg.compute_dtype)[token][:, None, :]
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
-    pos = jnp.full((B, 1), index, jnp.int32)
+    idx = decode_index(index, B)
+    pos = idx[:, None]
     x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack, mode="decode",
-                             caches=caches, index=index, mrope=mrope_positions)
+                             caches=caches, index=idx, mrope=mrope_positions)
     x = rmsnorm(params["final_norm"], x, cfg.stack.norm_eps)
     logits = (x @ _readout_table(params, cfg).astype(x.dtype).T)
     return logits[:, 0, :], caches

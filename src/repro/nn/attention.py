@@ -66,6 +66,16 @@ class MLAConfig:
 
 
 # =========================================================== mask helpers ==
+def decode_index(index, batch: int) -> jax.Array:
+    """Normalize a decode index to per-request positions (B,) int32.
+
+    ``index`` may be a scalar (every request at the same position — the
+    dry-run serve shapes) or a (B,) vector (continuous batching: each slot
+    carries its own offset)."""
+    return jnp.broadcast_to(jnp.asarray(index, jnp.int32), (batch,))
+
+
+
 def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window) -> jax.Array:
     """Additive bias (0 / NEG_INF). q_pos: (B, Sq), k_pos: (B, Sk) -> (B, Sq, Sk).
 
@@ -279,23 +289,23 @@ def gqa_init_cache(cfg: AttnConfig, batch: int, length: int, dtype=jnp.bfloat16)
 
 def gqa_decode(p, x, cache, index, cfg: AttnConfig, window=None,
                mrope_positions=None):
-    """One decode step. x: (B, 1, d_model); index: scalar int32 (shared across
-    the batch — continuous batching with per-request offsets plugs in by
-    making index a (B,) vector and switching the cache update to a scatter).
+    """One decode step. x: (B, 1, d_model); index: scalar int32 OR a (B,)
+    vector of per-request positions (continuous batching — each slot advances
+    independently; the cache update is a per-row scatter).
 
     The cache ring-buffers when its length < the attended context (sliding
     window); with a full-length cache the slot is the absolute position.
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
-    pos = jnp.full((B, 1), index, jnp.int32)
+    idx = decode_index(index, B)
+    pos = idx[:, None]
     q, k_new, v_new = _gqa_qkv(p, x, pos, cfg, mrope_positions)
-    slot = jnp.asarray(index % L, jnp.int32)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, slot))
+    slot = idx % L
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[rows, slot].set(pos[:, 0])
     out = _naive_attention(q, k, v, pos, cpos, causal=True, window=window,
                            scale=cfg.scale)
     y = out_proj(p["wo"], out)
@@ -377,14 +387,17 @@ def mla_decode(p, x, cache, index, cfg: MLAConfig):
     """
     B = x.shape[0]
     H, R = cfg.num_heads, cfg.kv_lora_rank
-    pos = jnp.full((B, 1), index, jnp.int32)
+    L = cache["ckv"].shape[1]
+    idx = decode_index(index, B)
+    pos = idx[:, None]
     q_nope, q_rope = _mla_q(p, x, pos, cfg)                   # (B,1,H,nope/rope)
     ckv_new, kr_new = _mla_ckv(p, x, pos, cfg)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, index, 0))
-    kr = jax.lax.dynamic_update_slice(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, index, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, index))
+    slot = idx % L
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, slot].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kr = cache["kr"].at[rows, slot].set(kr_new[:, 0].astype(cache["kr"].dtype))
+    cpos = cache["pos"].at[rows, slot].set(pos[:, 0])
 
     wuk = p["wuk"]["kernel"]                                  # (R, H, nope)
     q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),

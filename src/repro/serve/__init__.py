@@ -1,0 +1,11 @@
+"""Task-level serving subsystem: elastic continuous batching over the
+ServableTask hooks (repro.train.task), AOT-warmed (rung, precision-tier)
+executables, and precision-adaptive decode weights. See DESIGN.md §6."""
+from repro.serve.batching import Request, RequestQueue, pick_rung
+from repro.serve.engine import ServeEngine, repack_caches, scatter_prefill, \
+    tier_params
+from repro.serve.session import ServeConfig, ServeSession
+
+__all__ = ["Request", "RequestQueue", "pick_rung", "ServeEngine",
+           "ServeConfig", "ServeSession", "repack_caches", "scatter_prefill",
+           "tier_params"]

@@ -1,0 +1,88 @@
+"""Continuous-batching primitives: requests, the FIFO admission queue, and
+the rung-admission rule.
+
+The serving batch is a fixed-width slot array at one of the configured batch
+rungs. Each slot holds at most one in-flight request with its own decode
+position (``Request.index``) — the decode step takes a (B,) index vector, so
+slots advance independently and a new request can be admitted mid-flight
+without disturbing its neighbours (token-level continuous batching).
+
+Admission rule (DESIGN.md §6): a queued request is admitted when
+  (i)  a slot is free at the current rung, or
+  (ii) the rung can grow to a larger configured rung that the §3.3 memory
+       controller (BatchScaler over the task's serve_memory_model, KV-cache
+       bytes included) says fits.
+The rung shrinks only when the surviving requests fit in the smaller rung —
+in-flight work is never evicted.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``inputs`` holds UNBATCHED arrays: ``tokens``
+    (P,), optionally ``frontend_embeds`` (Se, F) for enc-dec, or ``images``
+    (H, W, C) for the vision testbed."""
+
+    rid: int
+    inputs: Dict[str, np.ndarray]
+    max_new_tokens: int = 16
+    status: str = "queued"            # queued | active | done
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    result: Optional[int] = None      # vision: predicted class
+    slot: Optional[int] = None
+    index: int = 0                    # next decode position
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+
+class RequestQueue:
+    """FIFO queue with stable ids."""
+
+    def __init__(self):
+        self._q: collections.deque = collections.deque()
+        self._next_rid = 0
+
+    def submit(self, inputs: Dict[str, np.ndarray],
+               max_new_tokens: int = 16) -> Request:
+        req = Request(rid=self._next_rid,
+                      inputs={k: np.asarray(v) for k, v in inputs.items()},
+                      max_new_tokens=max_new_tokens)
+        self._next_rid += 1
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Optional[Request]:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+def pick_rung(rungs: Sequence[int], active: int, queued: int,
+              capacity_rung: int) -> int:
+    """The serving rung for the current load: the smallest configured rung
+    covering ``active + queued`` requests, capped by the memory controller's
+    ``capacity_rung`` — but never below the smallest rung that still holds
+    every in-flight request (no eviction)."""
+    want = max(active + queued, 1)
+    target = rungs[-1]
+    for r in rungs:
+        if r >= want:
+            target = r
+            break
+    target = min(target, capacity_rung)
+    for r in rungs:                      # floor: active requests must fit
+        if r >= active:
+            return max(target, r)
+    return rungs[-1]

@@ -1,0 +1,217 @@
+"""AOT executable layer for serving: per-(rung, precision-tier) compiled
+decode / admit / repack / infer steps + per-tier QDQ'd weight sets.
+
+Mirrors ``Trainer.warm_rungs()`` (DESIGN.md §1): every executable is built
+with ``jit(fn).lower(abstract_args).compile()`` and cached, so a batch-rung
+change or a precision-tier change at serve time is a dictionary lookup —
+zero XLA stalls after ``warm()``.
+
+Precision ladder for decode weights (the serving realization of §3.1):
+
+    tier 2  fp32   weights as trained
+    tier 1  bf16   cast
+    tier 0  fp8    QDQ through the fused Pallas cast kernel
+                   (repro.kernels.qdq_cast, per-tensor amax scaling on the
+                   tpu ladder; fp16 rounding on the gpu ladder), carried in
+                   a bf16 container
+
+Tier copies are value-level (dtype-stable within {fp32} vs {bf16, fp8}), so
+the KV caches — always ``cache_dtype`` — flow unchanged across tier
+switches and across rung repacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SDS = jax.ShapeDtypeStruct
+
+
+def tier_params(params, tier: int, ladder: str = "tpu"):
+    """Weight set for one serving precision tier (floating leaves only)."""
+    from repro.kernels import ops
+
+    def one(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        if tier == 2:
+            return x.astype(jnp.float32)
+        if tier == 1:
+            return x.astype(jnp.bfloat16)
+        # tier 0: round to the low-tier grid, keep a bf16 container
+        return ops.qdq_cast(x.astype(jnp.float32), jnp.asarray(0, jnp.int32),
+                            ladder=ladder).astype(jnp.bfloat16)
+    return jax.tree.map(one, params)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if key is not None:
+            return str(key)
+    return ""
+
+
+def scatter_prefill(caches, pre, slot):
+    """Scatter ONE request's prefill caches (leading batch dim 1) into row
+    ``slot`` of the batched decode caches.
+
+    Cache leaves are stacked per segment: (layers, B, ...). A leaf whose
+    per-row shape matches the decode cache (SSM/RG-LRU states, conv tails,
+    cross K/V) is written directly; a sequence-indexed leaf (self K/V,
+    positions) is ring-mapped — prefill wrote positions [0, P), the decode
+    cache holds L slots at position % L, and slots the prompt never reaches
+    are reset (position -1 = masked) so no state leaks from a previous
+    occupant of the row.
+    """
+    def write(path, c, p):
+        if p.shape[2:] == c.shape[2:]:
+            return c.at[:, slot].set(p[:, 0].astype(c.dtype))
+        P, L = p.shape[2], c.shape[2]
+        fill = -1 if _leaf_name(path) == "pos" else 0
+        row = jnp.full(c.shape[:1] + c.shape[2:], fill, c.dtype)
+        keep = list(range(max(0, P - L), P))
+        slots = jnp.asarray([q % L for q in keep], jnp.int32)
+        vals = jnp.take(p[:, 0], jnp.asarray(keep, jnp.int32), axis=1)
+        row = row.at[:, slots].set(vals.astype(c.dtype))
+        return c.at[:, slot].set(row)
+    return jax.tree_util.tree_map_with_path(write, caches, pre)
+
+
+def repack_caches(caches, src, valid):
+    """Re-batch caches onto a new rung: row j of the result is row ``src[j]``
+    of the input where ``valid[j]``, else the empty-slot value (pos=-1)."""
+    def one(path, c):
+        t = jnp.take(c, src, axis=1)
+        fill = -1 if _leaf_name(path) == "pos" else 0
+        mask = valid.reshape((1, valid.shape[0]) + (1,) * (t.ndim - 2))
+        return jnp.where(mask, t, jnp.asarray(fill, t.dtype))
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+class ServeEngine:
+    """Executable cache + precision ladder for one ServableTask."""
+
+    def __init__(self, task, params, aux_state=None, *, total_len: int,
+                 prompt_len: int, rungs: Sequence[int],
+                 tiers: Sequence[int] = (1,), ladder: str = "tpu",
+                 cache_dtype=jnp.bfloat16):
+        assert list(rungs) == sorted(set(rungs)) and rungs, rungs
+        self.task = task
+        self.total_len = int(total_len)
+        self.prompt_len = int(prompt_len)
+        self.rungs = tuple(int(r) for r in rungs)
+        self.tiers = tuple(sorted(set(int(t) for t in tiers)))
+        self.ladder = ladder
+        self.cache_dtype = cache_dtype
+        self.aux_state = aux_state if aux_state is not None else {}
+        self.params_by_tier = {t: tier_params(params, t, ladder)
+                               for t in self.tiers}
+        self.input_spec = task.serve_input_spec(self.prompt_len)
+        self._exe: Dict[Tuple, Any] = {}
+        self.compile_count = 0
+
+    # ------------------------------------------------------------ shapes --
+    def _batch_spec(self, rung: int) -> Dict[str, SDS]:
+        return {k: SDS((rung,) + v.shape[1:], v.dtype)
+                for k, v in self.input_spec.items()}
+
+    def _cache_sds(self, rung: int):
+        return jax.eval_shape(lambda: self.task.init_cache(
+            self._batch_spec(rung), self.total_len, dtype=self.cache_dtype))
+
+    def init_caches(self, rung: int):
+        """Concrete empty caches for ``rung`` slots."""
+        return self.task.init_cache(self._batch_spec(rung), self.total_len,
+                                    dtype=self.cache_dtype)
+
+    @staticmethod
+    def _abstract(tree):
+        return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+    # ------------------------------------------------------- executables --
+    def _get(self, key, fn, arg_sds, donate=()):
+        exe = self._exe.get(key)
+        if exe is None:
+            exe = jax.jit(fn, donate_argnums=donate).lower(*arg_sds).compile()
+            self._exe[key] = exe
+            self.compile_count += 1
+        return exe
+
+    def _decode_exe(self, rung: int, tier: int):
+        from repro.train.serve import make_decode_fn
+        args = (self._abstract(self.params_by_tier[tier]),
+                self._cache_sds(rung), SDS((rung,), jnp.int32),
+                SDS((rung,), jnp.int32))
+        return self._get(("decode", rung, tier), make_decode_fn(self.task),
+                         args, donate=(1,))
+
+    def _admit_exe(self, rung: int, tier: int):
+        task = self.task
+
+        def admit(params, caches, slot, batch1):
+            logits, pre = task.prefill(params, batch1)
+            caches = scatter_prefill(caches, pre, slot)
+            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), caches
+
+        args = (self._abstract(self.params_by_tier[tier]),
+                self._cache_sds(rung), SDS((), jnp.int32),
+                self._batch_spec(1))
+        return self._get(("admit", rung, tier), admit, args, donate=(1,))
+
+    def _repack_exe(self, r_from: int, r_to: int):
+        args = (self._cache_sds(r_from), SDS((r_to,), jnp.int32),
+                SDS((r_to,), jnp.bool_))
+        return self._get(("repack", r_from, r_to), repack_caches, args)
+
+    def _infer_exe(self, rung: int, tier: int):
+        from repro.train.serve import make_infer_fn
+        args = (self._abstract(self.params_by_tier[tier]),
+                self._abstract(self.aux_state), self._batch_spec(rung))
+        return self._get(("infer", rung, tier), make_infer_fn(self.task), args)
+
+    # --------------------------------------------------------- warm + run --
+    def warm(self):
+        """Pre-compile every executable the session can dispatch: decode and
+        admit per (rung, tier) — infer for cache-free tasks — plus repack for
+        every ordered rung pair. After this, serving triggers zero new XLA
+        compilations (probed in tests/test_serve.py)."""
+        for rung in self.rungs:
+            for tier in self.tiers:
+                if self.task.serves_tokens:
+                    self._decode_exe(rung, tier)
+                    self._admit_exe(rung, tier)
+                else:
+                    self._infer_exe(rung, tier)
+        if self.task.serves_tokens:
+            for a in self.rungs:
+                for b in self.rungs:
+                    if a != b:
+                        self._repack_exe(a, b)
+        return self.compile_count
+
+    def decode(self, rung, tier, caches, token, index):
+        exe = self._decode_exe(rung, tier)
+        return exe(self.params_by_tier[tier], caches,
+                   jnp.asarray(token, jnp.int32), jnp.asarray(index, jnp.int32))
+
+    def admit(self, rung, tier, caches, slot, batch1):
+        exe = self._admit_exe(rung, tier)
+        batch1 = {k: jnp.asarray(v, self.input_spec[k].dtype)
+                  for k, v in batch1.items()}
+        return exe(self.params_by_tier[tier], caches,
+                   jnp.asarray(slot, jnp.int32), batch1)
+
+    def repack(self, r_from, r_to, caches, src, valid):
+        exe = self._repack_exe(r_from, r_to)
+        return exe(caches, jnp.asarray(src, jnp.int32),
+                   jnp.asarray(valid, jnp.bool_))
+
+    def infer(self, rung, tier, batch):
+        exe = self._infer_exe(rung, tier)
+        batch = {k: jnp.asarray(v, self.input_spec[k].dtype)
+                 for k, v in batch.items()}
+        return exe(self.params_by_tier[tier], self.aux_state, batch)

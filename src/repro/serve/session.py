@@ -1,0 +1,260 @@
+"""ServeSession: elastic continuous-batching serving loop over any
+ServableTask (LM, enc-dec, or the vision testbed).
+
+One session owns a request queue, a slot array at the current batch rung,
+the batched decode caches, and a ``ServeEngine`` of AOT-warmed executables.
+Each ``step()``:
+
+  1. control cadence (every ``t_ctrl`` steps): the §3.3 BatchScaler over the
+     task's ``serve_memory_model`` (weights at the active tier + KV-cache
+     bytes) updates the memory-capacity rung, and — when ``auto_tier`` — the
+     decode-weight precision tier is re-picked: the highest-precision
+     configured tier whose modeled footprint fits under rho_high * cap;
+  2. rung resize: grow/shrink to the smallest configured rung covering the
+     load (never evicting in-flight requests), repacking cache rows through
+     a pre-compiled gather — in-flight outputs are bit-identical across the
+     transition (tests/test_serve.py);
+  3. admission: queued requests fill free slots — one compiled prefill
+     scatters the prompt's K/V into the slot's cache rows (ring-aware for
+     sliding-window layers);
+  4. one decode step for EVERY active slot, each at its own position
+     (token-level continuous batching: the decode index is a (B,) vector).
+
+Cache-free tasks (vision) skip 3–4 and serve whole requests per step
+through the batched ``infer`` executable at the same rung/tier rails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch_scaler import BatchScaler
+from repro.core.precision import TriAccelConfig
+from repro.nn.module import split_params
+from repro.serve.batching import Request, RequestQueue, pick_rung
+from repro.serve.engine import ServeEngine
+from repro.train.serve import as_task
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    prompt_len: int = 16
+    total_len: int = 48               # cache horizon: prompt + generation
+    rungs: Tuple[int, ...] = (2, 4)   # batch rung ladder (ascending)
+    tiers: Tuple[int, ...] = (1,)     # decode-weight precision tiers warmed
+    ladder: str = "tpu"               # fp8 (tpu) vs fp16 (gpu) low tier
+    cache_dtype: Any = jnp.bfloat16
+    max_new_tokens: int = 16          # per-request default
+    t_ctrl: int = 8                   # §3.4 control cadence, in decode steps
+    mem_cap_bytes: float = 16e9
+    auto_tier: bool = True
+    seed: int = 0
+
+
+class ServeSession:
+    """Task-level serving session (the API every arch in
+    ``repro.models.registry.list_tasks()`` serves through)."""
+
+    def __init__(self, task, cfg: Optional[ServeConfig] = None, params=None,
+                 aux_state=None, tac: Optional[TriAccelConfig] = None):
+        self.task = as_task(task)
+        cfg = cfg if cfg is not None else ServeConfig()
+        self.cfg = cfg
+        if params is None:
+            wrapped, aux_state = self.task.init(jax.random.PRNGKey(cfg.seed))
+            params, _ = split_params(wrapped)
+        self.tac = tac if tac is not None else TriAccelConfig(
+            ladder=cfg.ladder, mem_cap_bytes=cfg.mem_cap_bytes,
+            t_ctrl=cfg.t_ctrl)
+        tiers = tuple(sorted(set(cfg.tiers)))
+        self.tier = 1 if 1 in tiers else tiers[-1]
+        self._tier_locked = not cfg.auto_tier
+        self.mm = self.task.serve_memory_model(
+            params, cfg.total_len, ladder=cfg.ladder, weight_tier=self.tier,
+            enc_len=cfg.prompt_len)
+        self.scaler = BatchScaler(list(cfg.rungs),
+                                  self.task.tokens_per_sample(cfg.total_len),
+                                  self.mm, self.tac)
+        self.engine = ServeEngine(
+            self.task, params, aux_state, total_len=cfg.total_len,
+            prompt_len=cfg.prompt_len, rungs=cfg.rungs, tiers=tiers,
+            ladder=cfg.ladder, cache_dtype=cfg.cache_dtype)
+        self.rung = cfg.rungs[0]
+        self.slots: List[Optional[Request]] = [None] * self.rung
+        self.caches = (self.engine.init_caches(self.rung)
+                       if self.task.serves_tokens else None)
+        self.queue = RequestQueue()
+        self.requests: Dict[int, Request] = {}
+        self.steps = 0
+        self.decoded_tokens = 0
+        self.rung_history: List[Tuple[int, int]] = [(0, self.rung)]
+        self.tier_history: List[Tuple[int, int]] = [(0, self.tier)]
+
+    # ------------------------------------------------------------- public --
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    def warm(self) -> int:
+        """AOT-compile every (rung, tier) executable; returns compile count."""
+        return self.engine.warm()
+
+    def submit(self, inputs: Dict[str, np.ndarray],
+               max_new_tokens: Optional[int] = None) -> int:
+        """Queue one request (unbatched inputs); returns its id."""
+        n = max_new_tokens if max_new_tokens is not None \
+            else self.cfg.max_new_tokens
+        if self.task.serves_tokens:
+            p = int(np.asarray(inputs["tokens"]).shape[0])
+            assert p == self.cfg.prompt_len, (p, self.cfg.prompt_len)
+            assert p + n <= self.cfg.total_len, \
+                f"prompt {p} + gen {n} exceeds total_len {self.cfg.total_len}"
+        req = self.queue.submit(inputs, max_new_tokens=n)
+        self.requests[req.rid] = req
+        return req.rid
+
+    def set_tier(self, tier: int, lock: bool = True):
+        """Manually pin the decode-weight precision tier."""
+        assert tier in self.engine.tiers, (tier, self.engine.tiers)
+        if tier != self.tier:
+            self.tier_history.append((self.steps, tier))
+        self.tier = tier
+        self._tier_locked = lock
+
+    def step(self):
+        if self.steps % self.tac.t_ctrl == 0:
+            self._control()
+        self._resize()
+        if self.task.serves_tokens:
+            self._admit()
+            self._decode()
+        else:
+            self._infer()
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000) -> Dict[str, Any]:
+        """Step until the queue drains and every request completes."""
+        t0 = time.time()
+        while (len(self.queue) or self._active()) and self.steps < max_steps:
+            self.step()
+        dt = max(time.time() - t0, 1e-9)
+        return {"steps": self.steps, "decoded_tokens": self.decoded_tokens,
+                "wall_s": dt, "tok_s": self.decoded_tokens / dt,
+                "rung_history": list(self.rung_history),
+                "tier_history": list(self.tier_history),
+                "compile_count": self.compile_count}
+
+    def results(self) -> Dict[int, Request]:
+        return dict(self.requests)
+
+    # ----------------------------------------------------------- internals --
+    def _active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def _control(self):
+        """§3.3/§3.4 serve-side control: memory-capacity rung + precision
+        tier, both from the same serve memory model."""
+        self.mm.weight_tier = self.tier
+        self.scaler.observe(self.steps)
+        if self._tier_locked or len(self.engine.tiers) < 2:
+            return
+        cap = self.tac.rho_high * self.tac.mem_cap_bytes
+        tokens = self.rung * self.task.tokens_per_sample(self.cfg.total_len)
+        chosen = self.engine.tiers[0]
+        for tier in sorted(self.engine.tiers, reverse=True):
+            self.mm.weight_tier = tier
+            if self.mm.total(tokens) <= cap:
+                chosen = tier
+                break
+        self.mm.weight_tier = chosen
+        if chosen != self.tier:
+            self.tier = chosen
+            self.tier_history.append((self.steps, chosen))
+
+    def _resize(self):
+        active = self._active()
+        target = pick_rung(self.engine.rungs, len(active), len(self.queue),
+                           self.scaler.microbatch)
+        if target == self.rung:
+            return
+        if self.task.serves_tokens:
+            src = np.zeros((target,), np.int32)
+            valid = np.zeros((target,), bool)
+            for j, req in enumerate(active):
+                src[j], valid[j] = req.slot, True
+            self.caches = self.engine.repack(self.rung, target, self.caches,
+                                             src, valid)
+        self.slots = list(active) + [None] * (target - len(active))
+        for j, req in enumerate(active):
+            req.slot = j
+        self.rung = target
+        self.rung_history.append((self.steps, target))
+
+    def _finish(self, req: Request):
+        req.status = "done"
+        req.finished_step = self.steps
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+
+    def _admit(self):
+        for s in range(self.rung):
+            if self.slots[s] is not None or not len(self.queue):
+                continue
+            req = self.queue.pop()
+            batch1 = {k: v[None] for k, v in req.inputs.items()}
+            tok0, self.caches = self.engine.admit(self.rung, self.tier,
+                                                  self.caches, s, batch1)
+            req.status, req.slot = "active", s
+            req.index = self.cfg.prompt_len
+            req.tokens = [int(tok0)]
+            req.admitted_step = self.steps
+            self.slots[s] = req
+            self.decoded_tokens += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req)
+
+    def _decode(self):
+        if not self._active():
+            return
+        tokens = np.zeros((self.rung,), np.int32)
+        index = np.zeros((self.rung,), np.int32)
+        for s, req in enumerate(self.slots):
+            if req is not None:
+                tokens[s], index[s] = req.tokens[-1], req.index
+        out, self.caches = self.engine.decode(self.rung, self.tier,
+                                              self.caches, tokens, index)
+        out = np.asarray(out)
+        for s, req in enumerate(list(self.slots)):
+            if req is None:
+                continue
+            req.index += 1
+            if len(req.tokens) < req.max_new_tokens:
+                req.tokens.append(int(out[s]))
+                self.decoded_tokens += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req)
+
+    def _infer(self):
+        batch_reqs: List[Request] = []
+        while len(self.queue) and len(batch_reqs) < self.rung:
+            batch_reqs.append(self.queue.pop())
+        if not batch_reqs:
+            return
+        key = next(iter(self.engine.input_spec))
+        shape = self.engine.input_spec[key].shape[1:]
+        images = np.zeros((self.rung,) + tuple(shape), np.float32)
+        for j, req in enumerate(batch_reqs):
+            images[j] = np.asarray(req.inputs[key], np.float32)
+        preds, _ = self.engine.infer(self.rung, self.tier, {key: images})
+        preds = np.asarray(preds)
+        for j, req in enumerate(batch_reqs):
+            req.status = "active"
+            req.admitted_step = self.steps
+            req.result = int(preds[j])
+            self._finish(req)

@@ -1,35 +1,52 @@
-"""Serving steps: prefill and single-token greedy decode.
+"""Task-level serving steps: prefill, single-token greedy decode, and
+cache-free batched inference.
+
+These are thin wrappers over the ServableTask hooks (repro.train.task) — the
+task carries all model knowledge; there is no per-model dispatch here. The
+full serving engine (continuous batching, elastic rungs, precision-adaptive
+decode weights) lives in ``repro.serve``; these wrappers are what the
+dry-run lowers and what quick scripts jit directly.
 
 ``decode`` takes and returns the full cache pytree (donated under jit), so
 the lowered serve_step is exactly "one new token against a seq_len cache".
 """
 from __future__ import annotations
 
-from typing import Any
-
-import jax
 import jax.numpy as jnp
 
-from repro.models.encdec import (EncDecConfig, encdec_decode_step,
-                                 encdec_prefill)
-from repro.models.lm import LMConfig, lm_decode_step, lm_prefill
+from repro.train.task import TrainTask, task_for_config
 
 
-def make_prefill_fn(cfg):
+def as_task(task_or_cfg) -> TrainTask:
+    """Accept a TrainTask or a bare model config (wrapped via the registry's
+    ``task_for_config`` hook)."""
+    if isinstance(task_or_cfg, TrainTask):
+        return task_or_cfg
+    return task_for_config(task_or_cfg)
+
+
+def make_prefill_fn(task_or_cfg):
+    task = as_task(task_or_cfg)
+
     def prefill(params, batch):
-        if isinstance(cfg, EncDecConfig):
-            logits, caches = encdec_prefill(params, batch, cfg)
-        else:
-            logits, caches = lm_prefill(params, batch, cfg)
+        logits, caches = task.prefill(params, batch)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
     return prefill
 
 
-def make_decode_fn(cfg):
+def make_decode_fn(task_or_cfg):
+    task = as_task(task_or_cfg)
+
     def decode(params, caches, token, index):
-        if isinstance(cfg, EncDecConfig):
-            logits, caches = encdec_decode_step(params, token, caches, index, cfg)
-        else:
-            logits, caches = lm_decode_step(params, token, caches, index, cfg)
+        logits, caches = task.decode(params, caches, token, index)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
     return decode
+
+
+def make_infer_fn(task_or_cfg):
+    task = as_task(task_or_cfg)
+
+    def infer(params, aux_state, batch):
+        logits = task.infer(params, aux_state, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+    return infer

@@ -1,5 +1,5 @@
-"""Task-agnostic training interface — the seam between *what* is trained
-and the single Tri-Accel engine that trains it (DESIGN.md §1).
+"""Task-agnostic training AND serving interface — the seam between *what*
+runs and the single Tri-Accel engine that runs it (DESIGN.md §1, §6).
 
 A ``TrainTask`` bundles everything model-specific the engine needs:
 
@@ -20,6 +20,21 @@ workload. Model state that is carried but not differentiated (BatchNorm
 running statistics) rides in ``aux_state`` and is threaded through the
 generalized ``TrainState``.
 
+The same object is the *serving* seam (the ServableTask contract consumed
+by ``repro.serve``): token tasks expose
+
+    init_cache(batch, total_len)          empty decode caches for B slots
+    prefill(params, batch)                -> (last-position logits, caches)
+    decode(params, caches, token, index)  -> (logits, caches); ``index`` may
+                                          be per-request (B,) for continuous
+                                          batching
+    serve_memory_model(params, total_len) per-device HBM model incl. the
+                                          KV/state cache bytes (§3.3 rungs)
+
+while cache-free tasks (vision) expose ``infer(params, aux_state, batch)``.
+``serves_tokens`` distinguishes the two; ``serve_input_spec`` describes one
+request's inputs so serving engines can AOT-lower without model imports.
+
 Three implementations cover the repo's workloads: ``LMTask`` (decoder-only
 LMs, incl. MoE/SSM/hybrid/VLM stubs), ``EncDecTask`` (encoder-decoder),
 ``VisionTask`` (the paper's ResNet-18 / EfficientNet-B0 testbed).
@@ -36,9 +51,20 @@ from repro.core.grouping import (LayerGrouping, encdec_grouping, flat_grouping,
                                  lm_grouping)
 from repro.data.synthetic import (CIFARLikeStream, LMTaskStream,
                                   frontend_stub_batch)
-from repro.models.encdec import EncDecConfig, encdec_init, encdec_loss
-from repro.models.lm import LMConfig, lm_init, lm_loss
+from repro.models.encdec import (EncDecConfig, encdec_decode_step, encdec_init,
+                                 encdec_init_cache, encdec_loss, encdec_prefill)
+from repro.models.lm import (LMConfig, lm_decode_step, lm_init, lm_init_cache,
+                             lm_loss, lm_prefill)
 from repro.models.vision import VisionConfig, vision_apply, vision_init
+
+# encoder context cached for decode-only shapes when the batch carries no
+# frontend embeddings to measure
+from repro.configs.base import ENCDEC_CROSS_LEN as DEFAULT_CROSS_LEN
+
+
+def _serve_batch_size(batch) -> int:
+    """Leading dim of any batch leaf (works on arrays and ShapeDtypeStructs)."""
+    return int(jax.tree.leaves(batch)[0].shape[0])
 
 
 class TrainTask:
@@ -105,6 +131,57 @@ class TrainTask:
         """Scalar loss for §3.2 curvature probes (no QDQ, no loss scale)."""
         return self.loss(params, aux_state, batch, None, None)[0]
 
+    # --------------------------------------------------------- serving ----
+    #: True -> the task serves through init_cache/prefill/decode; False ->
+    #: cache-free batched inference through ``infer``.
+    serves_tokens: bool = True
+
+    def init_cache(self, batch, total_len: int, dtype=jnp.bfloat16):
+        """Empty decode caches for ``batch``'s leading dim slots, sized for
+        positions [0, total_len). ``batch`` may hold ShapeDtypeStructs."""
+        raise NotImplementedError(f"{type(self).__name__} has no decode cache")
+
+    def prefill(self, params, batch):
+        """Full-prompt forward -> (last-position logits (B, V), caches).
+
+        The returned caches cover the prompt positions only; serving engines
+        scatter them into full-length decode caches (repro.serve.engine)."""
+        raise NotImplementedError(f"{type(self).__name__} does not prefill")
+
+    def decode(self, params, caches, token, index):
+        """One greedy-decodable step -> (logits (B, V), new caches).
+
+        ``index`` is a scalar position or a (B,) vector of per-request
+        positions (continuous batching)."""
+        raise NotImplementedError(f"{type(self).__name__} does not decode")
+
+    def infer(self, params, aux_state, batch):
+        """Cache-free batched inference -> logits (vision testbed)."""
+        raise NotImplementedError(f"{type(self).__name__} does not infer")
+
+    def serve_input_spec(self, prompt_len: int) -> Dict[str, Any]:
+        """ShapeDtypeStructs for ONE request's inputs (leading dim 1)."""
+        raise NotImplementedError
+
+    def serve_memory_model(self, params, total_len: int, mesh_size: int = 1,
+                           ladder: str = "tpu", weight_tier: int = 1,
+                           spec_len: int = 1, **kw):
+        """Per-device HBM model for the serving rung controller: weights at
+        the active precision tier + decode-cache bytes per sequence slot.
+        ``spec_len`` sizes prompt-dependent cache pieces (enc-dec cross
+        K/V); the self-cache depends only on ``total_len``."""
+        from repro.core.batch_scaler import ServeMemoryModel
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        spec = self.serve_input_spec(spec_len)
+        cache = jax.eval_shape(lambda: self.init_cache(spec, total_len))
+        per_seq = float(sum(l.size * l.dtype.itemsize
+                            for l in jax.tree.leaves(cache)))
+        return ServeMemoryModel(
+            param_count=n / mesh_size, opt_slots=0,
+            act_bytes_per_token_layer=per_seq / max(total_len, 1),
+            num_layers=1, fixed_overhead=128e6, ladder=ladder,
+            weight_tier=weight_tier)
+
 
 # =========================================================== language =====
 @dataclasses.dataclass
@@ -136,6 +213,20 @@ class LMTask(TrainTask):
         return MemoryModel.for_transformer(
             n / mesh_size, self.cfg.d_model, self.cfg.num_layers,
             opt_slots=opt_slots, remat=self.cfg.stack.remat)
+
+    # --------------------------------------------------------- serving ----
+    def init_cache(self, batch, total_len, dtype=jnp.bfloat16):
+        return lm_init_cache(self.cfg, _serve_batch_size(batch), total_len,
+                             dtype=dtype)
+
+    def prefill(self, params, batch):
+        return lm_prefill(params, batch, self.cfg)
+
+    def decode(self, params, caches, token, index):
+        return lm_decode_step(params, token, caches, index, self.cfg)
+
+    def serve_input_spec(self, prompt_len):
+        return {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)}
 
 
 # ======================================================== enc-dec =========
@@ -195,6 +286,37 @@ class EncDecTask(TrainTask):
             n / mesh_size, self.cfg.d_model,
             self.cfg.enc_stack.num_layers + self.cfg.dec_stack.num_layers,
             opt_slots=opt_slots, remat=self.cfg.enc_stack.remat)
+
+    # --------------------------------------------------------- serving ----
+    def init_cache(self, batch, total_len, dtype=jnp.bfloat16):
+        """Decoder self-cache over [0, total_len) + cross cache sized to the
+        batch's encoder frames (DEFAULT_CROSS_LEN for frame-less decode
+        specs, e.g. the dry-run decode shapes)."""
+        fe = batch.get("frontend_embeds") if hasattr(batch, "get") else None
+        enc_len = int(fe.shape[1]) if fe is not None else DEFAULT_CROSS_LEN
+        return encdec_init_cache(self.cfg, _serve_batch_size(batch), total_len,
+                                 enc_len=enc_len, dtype=dtype)
+
+    def prefill(self, params, batch):
+        return encdec_prefill(params, batch, self.cfg)
+
+    def decode(self, params, caches, token, index):
+        return encdec_decode_step(params, token, caches, index, self.cfg)
+
+    def serve_input_spec(self, prompt_len):
+        return {
+            "frontend_embeds": jax.ShapeDtypeStruct(
+                (1, prompt_len, self.cfg.frontend_dim), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32),
+        }
+
+    def serve_memory_model(self, params, total_len, mesh_size=1,
+                           ladder="tpu", weight_tier=1, enc_len=None, **kw):
+        # the cross K/V cache scales with the encoder context, so size the
+        # spec by it; everything else is the shared base formula
+        return super().serve_memory_model(
+            params, total_len, mesh_size=mesh_size, ladder=ladder,
+            weight_tier=weight_tier, spec_len=enc_len or DEFAULT_CROSS_LEN)
 
 
 # ========================================================== vision ========
@@ -256,6 +378,30 @@ class VisionTask(TrainTask):
         # repro.train.paper_harness.vision_memory_model
         from repro.train.paper_harness import vision_memory_model
         return vision_memory_model(self.cfg, params)
+
+    # --------------------------------------------------------- serving ----
+    serves_tokens = False
+
+    def infer(self, params, aux_state, batch):
+        """Batched inference logits (BN in inference mode, stats untouched)."""
+        logits, _ = vision_apply(params, aux_state, batch["images"], False,
+                                 self.cfg)
+        return logits
+
+    def serve_input_spec(self, prompt_len):
+        del prompt_len  # no sequence dimension
+        return {"images": jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)}
+
+    def serve_memory_model(self, params, total_len, mesh_size=1,
+                           ladder="gpu", weight_tier=1, **kw):
+        from repro.core.batch_scaler import ServeMemoryModel
+        from repro.train.paper_harness import activation_elems
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        return ServeMemoryModel(
+            param_count=n / mesh_size, opt_slots=0,
+            act_bytes_per_token_layer=activation_elems(self.cfg) * 2.0,
+            num_layers=1, fixed_overhead=64e6, ladder=ladder,
+            weight_tier=weight_tier)
 
 
 # ========================================================= dispatch =======

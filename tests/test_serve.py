@@ -1,0 +1,168 @@
+"""Serving-seam guarantees (the ServableTask / ServeSession contract):
+
+(a) teacher-forced decode parity: greedy tokens from step-by-step
+    ``task.decode`` match ``task.prefill`` argmax logits at every prefix,
+    for one LM and one enc-dec arch (same naive-attention numerics, bf16
+    caches on both sides);
+(b) ServeSession rung transitions preserve in-flight request outputs
+    bit-exactly: a request served through a mid-flight 1->2 rung growth
+    generates the same tokens as the same request served at a fixed rung;
+(c) after ``warm()``, serving across every configured rung and precision
+    tier triggers ZERO new XLA compilations (compile-count probe +
+    jax.monitoring backend_compile events, as in test_task_parity.py);
+(d) every arch in ``registry.list_tasks()`` — vision included — serves
+    through the same ServeSession API.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_task, list_tasks
+from repro.nn.module import split_params
+from repro.serve import ServeConfig, ServeSession
+from repro.serve.engine import scatter_prefill
+
+
+def _bf16(params):
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def _request_inputs(task, n, prompt_len, seed=0):
+    batch = task.data_stream(n, seed=seed, seq_len=prompt_len).batch(0)
+    return [{k: np.asarray(v[i]) for k, v in batch.items() if k != "labels"}
+            for i in range(n)]
+
+
+# ======================================================================
+# (a) prefill / decode parity through the task hooks
+# ======================================================================
+@pytest.mark.parametrize("arch", ["smollm-135m", "seamless-m4t-large-v2"])
+def test_decode_matches_prefill_argmax(arch):
+    task = get_task(arch, reduced=True)
+    params = _bf16(split_params(task.init(jax.random.PRNGKey(0))[0])[0])
+    B, P, total = 2, 8, 16
+    batch = task.data_stream(B, seed=1, seq_len=P).batch(0)
+    batch.pop("labels", None)
+    toks = batch["tokens"]
+
+    # admit each row with a 1-token prompt, then teacher-force the rest
+    caches = task.init_cache(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch),
+        total)
+    for i in range(B):
+        b1 = {k: (v[i:i + 1, :1] if k == "tokens" else v[i:i + 1])
+              for k, v in batch.items()}
+        _, pre = task.prefill(params, b1)
+        caches = scatter_prefill(caches, pre, i)
+
+    for j in range(1, P):
+        logits, caches = task.decode(params, caches, toks[:, j],
+                                     jnp.full((B,), j, jnp.int32))
+        prefix = {k: (v[:, :j + 1] if k == "tokens" else v)
+                  for k, v in batch.items()}
+        ref_logits, _ = task.prefill(params, prefix)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(logits, -1)),
+            np.asarray(jnp.argmax(ref_logits, -1)),
+            err_msg=f"{arch} prefix {j + 1}")
+
+
+# ======================================================================
+# (b) rung transitions preserve in-flight outputs bit-exactly
+# ======================================================================
+def test_rung_transition_preserves_outputs():
+    def serve(rungs, second_request):
+        task = get_task("smollm-135m", reduced=True)
+        cfg = ServeConfig(prompt_len=8, total_len=24, rungs=rungs,
+                          max_new_tokens=10, t_ctrl=4)
+        sess = ServeSession(task, cfg)
+        sess.warm()
+        inputs = _request_inputs(task, 2, 8, seed=3)
+        r0 = sess.submit(inputs[0])
+        sess.step()
+        sess.step()
+        if second_request:
+            sess.submit(inputs[1])        # mid-flight arrival -> rung growth
+        sess.run(max_steps=50)
+        return sess, sess.results()[r0].tokens
+
+    fixed_sess, fixed = serve((1,), second_request=False)
+    grown_sess, grown = serve((1, 2), second_request=True)
+    rungs_seen = [r for _, r in grown_sess.rung_history]
+    assert 2 in rungs_seen and rungs_seen[0] == 1, rungs_seen  # grew mid-flight
+    assert len(fixed) == 10
+    assert fixed == grown                           # r0 unaffected by it
+
+
+# ======================================================================
+# (c) zero new XLA compiles after warm-up, across rungs AND tiers
+# ======================================================================
+def test_warm_serve_zero_recompiles():
+    task = get_task("smollm-135m", reduced=True)
+    cfg = ServeConfig(prompt_len=8, total_len=24, rungs=(1, 2), tiers=(0, 1),
+                      max_new_tokens=6, t_ctrl=4)
+    sess = ServeSession(task, cfg)
+    warmed = sess.warm()
+    # (rungs x tiers) x {decode, admit} + 2 repack directions
+    assert warmed == 2 * 2 * 2 + 2
+    inputs = _request_inputs(task, 3, 8, seed=5)
+
+    compile_events = []
+    active = [True]
+
+    def _listener(name, *args, **kw):
+        if active[0] and "backend_compile" in name:
+            compile_events.append(name)
+
+    # monitoring listeners are a private API; the compile_count probe below
+    # is authoritative, the XLA event check is best-effort
+    try:
+        from jax._src import monitoring as _mon
+        _mon.register_event_duration_secs_listener(_listener)
+    except (ImportError, AttributeError):
+        _mon = None
+    try:
+        sess.submit(inputs[0])
+        sess.step()                       # rung 1
+        sess.set_tier(0)                  # fp8 decode weights
+        sess.step()
+        sess.submit(inputs[1])            # grows to rung 2
+        sess.submit(inputs[2])
+        sess.set_tier(1)
+        sess.run(max_steps=40)
+    finally:
+        active[0] = False
+        unreg = getattr(_mon, "_unregister_event_duration_listener_by_callback",
+                        None) if _mon is not None else None
+        if unreg is not None:
+            unreg(_listener)
+    assert all(r.done for r in sess.results().values())
+    assert 2 in [r for _, r in sess.rung_history]   # both rungs exercised
+    assert {t for _, t in sess.tier_history} == {0, 1}
+    assert sess.compile_count == warmed             # cache untouched
+    assert compile_events == [], compile_events
+
+
+# ======================================================================
+# (d) every registered arch serves through the same session API
+# ======================================================================
+@pytest.mark.parametrize("arch", list_tasks())
+def test_session_serves_every_arch(arch):
+    task = get_task(arch, reduced=True)
+    cfg = ServeConfig(prompt_len=8, total_len=16, rungs=(2,), tiers=(1,),
+                      max_new_tokens=3, t_ctrl=4)
+    sess = ServeSession(task, cfg)
+    sess.warm()
+    for inputs in _request_inputs(task, 2, 8):
+        sess.submit(inputs)
+    sess.run(max_steps=30)
+    for req in sess.results().values():
+        assert req.done, arch
+        if task.serves_tokens:
+            assert len(req.tokens) == 3, (arch, req.tokens)
+            assert all(0 <= t < task.cfg.vocab_size for t in req.tokens), arch
+        else:
+            assert req.result is not None and 0 <= req.result < 10, arch
