@@ -7,11 +7,15 @@ tok/s is measured on THIS host over the reduced config's AOT-warmed decode
 executable (CPU wall numbers validate dispatch, not TPU perf); modeled HBM
 is the serve memory model of the FULL config — weights at the tier's byte
 width + the decode-cache bytes at ``--model-len`` context — the same model
-the ServeSession's rung controller runs on.
+the ServeSession's rung controller runs on. The measured column is the
+harvested ``memory_analysis()`` footprint of the reduced config's decode
+executable at that (rung, tier) — the controller's actual feedback signal —
+so modeled-vs-measured calibration drift is visible per rung x tier (on the
+production config the two columns describe the same executable).
 
 CSV (one section of benchmarks/run.py): serve:arch,rung,tier,tok_s,
-hbm_model_gb,fits. ``--out`` additionally writes one dry-run-style JSON
-artifact per cell.
+hbm_model_gb,hbm_meas_gb,fits. ``--out`` additionally writes one
+dry-run-style JSON artifact per cell.
 """
 from __future__ import annotations
 
@@ -63,20 +67,25 @@ def run(archs=ARCHS, rungs=RUNGS, tiers=TIERS, steps: int = 20,
                 mm = full.serve_memory_model(pvals, model_len,
                                              weight_tier=tier)
                 hbm = mm.total(rung * full.tokens_per_sample(model_len))
+                meas = engine.measured_bytes(rung, tier)
                 rows.append({"arch": arch, "rung": rung, "tier": tier,
                              "tok_s": steps * rung / dt,
                              "hbm_per_device_bytes": hbm,
+                             "measured_bytes_per_device": meas,
                              "fits_hbm": bool(hbm < hbm_cap)})
     return rows
 
 
 def main(steps: int = 20, out_dir=None):
     rows = run(steps=steps)
-    print("serve:arch,rung,tier,tok_s,hbm_model_gb,fits")
+    print("serve:arch,rung,tier,tok_s,hbm_model_gb,hbm_meas_gb,fits")
     for r in rows:
+        meas = r["measured_bytes_per_device"]
         print("serve:" + ",".join([
             r["arch"], str(r["rung"]), str(r["tier"]), f"{r['tok_s']:.1f}",
-            f"{r['hbm_per_device_bytes'] / 1e9:.2f}", str(r["fits_hbm"])]))
+            f"{r['hbm_per_device_bytes'] / 1e9:.2f}",
+            f"{meas / 1e9:.3f}" if meas is not None else "na",
+            str(r["fits_hbm"])]))
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         for r in rows:

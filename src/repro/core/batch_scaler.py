@@ -6,7 +6,13 @@ means a new executable, so the controller is re-based on two pieces:
 
   * ``MemoryModel`` — an analytic per-device HBM estimate
     (params + optimizer + gradient + activation(tokens, precision codes)),
-    cross-checked/calibrated against ``compiled.memory_analysis()``;
+    plus a rung-indexed MEASURED overlay harvested from
+    ``compiled.memory_analysis()`` of the AOT-warmed executables. Rung
+    predictions are measured-first: a rung that has been observed (warmed or
+    stepped) answers with its real footprint, an unobserved rung answers
+    with the analytic model re-fit (``calibration``) to the latest
+    measurement — the paper's closed loop over measured VRAM instead of an
+    open-loop analytic guess;
   * ``BatchScaler`` — the paper's hysteresis law over a discrete rung ladder
     of per-device microbatch sizes whose step functions are AOT-compiled
     once, so a rung change is a zero-stall dictionary lookup.
@@ -18,9 +24,30 @@ The control law is the paper's:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.precision import TriAccelConfig
+
+
+def measured_exe_bytes(compiled) -> Optional[float]:
+    """Per-host HBM footprint of one AOT executable from XLA's
+    ``memory_analysis()``: temp + argument + output + generated code, with
+    donated (aliased) buffers counted once. ``None`` when the backend
+    reports nothing (the caller falls back to the analytic model)."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return None
+    if mem is None:
+        return None
+    fields = ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "generated_code_size_in_bytes")
+    vals = [getattr(mem, f, None) for f in fields]
+    if all(v is None for v in vals):
+        return None
+    total = float(sum(v for v in vals if v is not None))
+    total -= float(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    return total
 
 # bytes per element of each precision tier (low tier: fp8=1 on tpu, fp16=2 on gpu)
 TIER_BYTES = {"gpu": (2.0, 2.0, 4.0), "tpu": (1.0, 2.0, 4.0)}
@@ -36,6 +63,11 @@ class MemoryModel:
     num_layers: int = 1
     fixed_overhead: float = 256e6
     calibration: float = 1.0           # fitted against memory_analysis()
+    #: rung-indexed measured overlay (``measured_key(rung)`` -> bytes),
+    #: populated from memory_analysis() of the warmed executables. The last
+    #: measurement per rung wins; entries are per the CURRENT precision codes
+    #: (a code change is folded in through ``calibration`` on re-measure).
+    measured: Dict[Any, float] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def for_transformer(cls, param_count, d_model, num_layers, opt_slots=2,
@@ -69,9 +101,40 @@ class MemoryModel:
 
     def calibrate(self, measured_bytes: float, tokens_per_device: float,
                   codes=None, ladder: str = "gpu") -> None:
+        # non-positive measurements carry no scale information and would
+        # zero the calibration factor (poisoning every later re-fit)
+        if measured_bytes <= 0:
+            return
         est = self.total(tokens_per_device, codes, ladder) / self.calibration
         if est > 0:
             self.calibration = measured_bytes / est
+
+    # ------------------------------------------- measured-bytes overlay ---
+    def measured_key(self, rung: int):
+        """Overlay key for one rung (subclasses add the precision tier)."""
+        return rung
+
+    def record_measured(self, rung: int, measured_bytes: float,
+                        tokens_per_device: float, codes=None,
+                        ladder: str = "gpu") -> None:
+        """Store the observed footprint for ``rung`` AND re-fit the analytic
+        calibration, so predictions for still-unmeasured rungs move
+        consistently with what was just measured (the climb guard can never
+        disagree with the observation that triggered it). Non-positive
+        observations carry no information and are dropped — a 0-byte overlay
+        entry would pin predict() below rho_low forever."""
+        if measured_bytes <= 0:
+            return
+        self.measured[self.measured_key(rung)] = float(measured_bytes)
+        self.calibrate(measured_bytes, tokens_per_device, codes, ladder)
+
+    def predict(self, rung: int, tokens_per_device: float, codes=None,
+                ladder: str = "gpu") -> float:
+        """Measured-first footprint for ``rung``: the overlay entry when this
+        rung has been observed, the calibrated analytic model otherwise."""
+        m = self.measured.get(self.measured_key(rung))
+        return m if m is not None else self.total(tokens_per_device, codes,
+                                                  ladder)
 
 
 @dataclasses.dataclass
@@ -87,6 +150,11 @@ class ServeMemoryModel(MemoryModel):
 
     def param_state_bytes(self) -> float:
         return self.param_count * TIER_BYTES[self.ladder][self.weight_tier]
+
+    def measured_key(self, rung: int):
+        """Serve footprints differ per decode-weight tier, so the overlay is
+        keyed (rung, tier) — matching the engine's AOT cache keys."""
+        return (rung, self.weight_tier)
 
 
 class BatchScaler:
@@ -110,20 +178,36 @@ class BatchScaler:
         return self.rungs[self.idx]
 
     def _mem(self, idx: int, codes=None) -> float:
-        return self.model.total(self.rungs[idx] * self.seq_len, codes,
-                                self.cfg.ladder)
+        """Measured-first footprint prediction for rung index ``idx``."""
+        return self.model.predict(self.rungs[idx],
+                                  self.rungs[idx] * self.seq_len, codes,
+                                  self.cfg.ladder)
 
     def observe(self, step: int, codes=None,
                 measured_bytes: Optional[float] = None) -> int:
-        """Apply the paper's hysteresis law; returns the (possibly new) rung."""
+        """Apply the paper's hysteresis law; returns the (possibly new) rung.
+
+        ``measured_bytes`` (harvested ``memory_analysis()`` of the current
+        rung's executable, max over hosts) closes the loop: it is recorded
+        into the model's rung overlay and re-fits the analytic calibration,
+        so the climb guard's next-rung prediction is CALIBRATED — measured
+        when the next rung was warmed, measurement-scaled analytic otherwise
+        — and can no longer disagree with the observation (the uncalibrated
+        guard oscillated: climb on optimistic analytic, back off on the
+        measurement, repeat)."""
         if not self.cfg.enable_batch:
             return self.microbatch
-        mem = measured_bytes if measured_bytes is not None \
-            else self._mem(self.idx, codes)
+        if measured_bytes is not None:
+            self.model.record_measured(self.rungs[self.idx], measured_bytes,
+                                       self.rungs[self.idx] * self.seq_len,
+                                       codes, self.cfg.ladder)
+            mem = float(measured_bytes)
+        else:
+            mem = self._mem(self.idx, codes)
         cap = self.cfg.mem_cap_bytes
         if mem < self.cfg.rho_low * cap and self.idx + 1 < len(self.rungs):
             nxt = min(self.idx + self.cfg.delta_up, len(self.rungs) - 1)
-            # only climb if the model predicts the next rung still fits
+            # only climb if the calibrated model predicts the next rung fits
             if self._mem(nxt, codes) <= self.cfg.rho_high * cap:
                 self.idx = nxt
         elif mem > self.cfg.rho_high * cap and self.idx > 0:

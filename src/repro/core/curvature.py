@@ -51,22 +51,25 @@ def _zeros_like(params):
 
 def _mask_to_layer(tree, select_fn):
     """Zero all leaves outside the selected layer (select_fn acts per path)."""
-    flat = jax.tree_util.tree_flatten_with_path(tree)
-    leaves, treedef = jax.tree.flatten(tree)
-    out = []
-    for (path, leaf) in jax.tree_util.tree_leaves_with_path(tree):
-        out.append(leaf if select_fn(path) else jnp.zeros_like(leaf))
-    return jax.tree.unflatten(treedef, out)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf if select_fn(path) else jnp.zeros_like(leaf),
+        tree)
+
+
+def _rademacher_tree(tree, key):
+    """Independent per-leaf Rademacher probes: one split of ``key`` over the
+    flattened tree, so same-shape leaves draw DISTINCT vectors (keying by
+    ``hash(shape)`` correlated probes across every same-shape layer)."""
+    return jax.tree.map(
+        lambda l, k: jax.random.rademacher(k, l.shape, dtype=jnp.float32
+                                           ).astype(l.dtype),
+        tree, _key_tree(tree, key))
 
 
 def power_iteration_layer(loss_fn: Callable, params, select_fn, key,
                           iters: int, *args) -> jax.Array:
     """Top eigenvalue of the block H_ll selected by ``select_fn`` (path pred)."""
-    v = jax.tree.map(
-        lambda l: jax.random.rademacher(
-            jax.random.fold_in(key, hash(l.shape) % (2**31)), l.shape,
-            dtype=jnp.float32).astype(l.dtype), params)
-    v = _mask_to_layer(v, select_fn)
+    v = _mask_to_layer(_rademacher_tree(params, key), select_fn)
     v = _normalize(v)
     lam = jnp.zeros((), jnp.float32)
     for _ in range(iters):
@@ -85,10 +88,7 @@ def hutchinson_layer_traces(loss_fn: Callable, params, layer_reduce: Callable,
     group and divides by the group's parameter count (mean-eigenvalue proxy).
     """
     def one(key):
-        z = jax.tree.map(
-            lambda l, k: jax.random.rademacher(k, l.shape, dtype=jnp.float32
-                                               ).astype(l.dtype),
-            params, _key_tree(params, key))
+        z = _rademacher_tree(params, key)
         hz = hvp(loss_fn, params, z, *args)
         prod = jax.tree.map(lambda a, b: a.astype(jnp.float32) * b.astype(jnp.float32),
                             z, hz)

@@ -6,8 +6,11 @@ validated everywhere while the BlockSpec tiling targets TPU.
 """
 from __future__ import annotations
 
+import operator
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import grad_stats as _gs
@@ -26,20 +29,60 @@ def grad_stats(x):
     return _gs.grad_stats(x, interpret=_interpret())
 
 
+def _static_window(window):
+    """Concrete integral window -> python int (0 = unwindowed); ``None`` for
+    a traced value the kernel cannot specialize on. ``operator.index`` keeps
+    numpy integers (np.int64 configs) intact — the old ``isinstance(window,
+    int)`` check silently turned them into 0 = no window on the kernel path
+    while the fallback paths windowed correctly."""
+    if window is None:
+        return 0
+    try:
+        return operator.index(window)
+    except TypeError:
+        return None
+
+
+def _is_std_arange(pos, batch: int, seqlen: int) -> bool:
+    """True when ``pos`` is STATICALLY known to be the standard arange the
+    kernel's iota-based mask hard-codes: None, or a concrete (B, S) array
+    equal to broadcast arange(S). A traced array can encode packed/offset
+    sequences, so it is never provably standard -> False (fallback)."""
+    if pos is None:
+        return True
+    if isinstance(pos, jax.core.Tracer):
+        return False
+    arr = np.asarray(pos)
+    if arr.shape != (batch, seqlen):
+        return False
+    return bool((arr == np.arange(seqlen, dtype=arr.dtype)[None]).all())
+
+
 def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
                     window=None, scale=None):
-    """Drop-in for repro.nn.attention.attention when positions are the
-    standard arange (train/prefill). Falls back to the chunked-jnp path for
-    unsupported configurations (ragged positions, tiny sequences)."""
-    S = q.shape[1]
-    win = int(window) if isinstance(window, int) and window else 0
-    if S % _fa.BQ or S % _fa.BK:
-        from repro.nn.attention import _chunked_attention, _naive_attention
-        if q_pos is None:
-            B = q.shape[0]
-            q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-            k_pos = q_pos
-        return _naive_attention(q, k, v, q_pos, k_pos, causal, window,
-                                scale if scale is not None else q.shape[-1] ** -0.5)
-    return _fa.flash_attention(q, k, v, causal=causal, window=win,
-                               scale=scale, interpret=_interpret())
+    """Drop-in for repro.nn.attention.attention that dispatches the Pallas
+    kernel ONLY for configurations it computes correctly: self-attention
+    (Sq == Sk) divisible by the block sizes, a static integral window, and
+    positions statically equal to the standard arange (train/prefill).
+    Everything else — ragged/offset/packed positions, traced windows, tiny
+    sequences — runs the chunked or naive jnp path with positions honored."""
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    win = _static_window(window)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if (win is not None and Sq == Sk and Sq % _fa.BQ == 0 and Sq % _fa.BK == 0
+            and _is_std_arange(q_pos, B, Sq) and _is_std_arange(k_pos, B, Sk)):
+        return _fa.flash_attention(q, k, v, causal=causal, window=win,
+                                   scale=scale, interpret=_interpret())
+    from repro.nn.attention import _chunked_attention, _naive_attention
+    if win is not None:                 # normalized static window (int or off)
+        window = win if win > 0 else None
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    if Sq % _fa.BQ == 0 and Sk % _fa.BK == 0:
+        return _chunked_attention(q, k, v, q_pos, k_pos, causal, window,
+                                  scale, _fa.BQ, _fa.BK)
+    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale)

@@ -249,6 +249,13 @@ def run_cell(arch, shape_name, mesh_kind, hw=HW(), out_dir=None,
                 v = getattr(mem, k, None)
                 if v is not None:
                     res[f"xla_{k}"] = int(v)
+        # measured executable footprint (the §3.3 controllers' signal) next
+        # to the analytic model, so calibration drift is visible per cell
+        from repro.core.batch_scaler import measured_exe_bytes
+        meas = measured_exe_bytes(compiled)
+        res["measured_bytes_per_device"] = meas
+        res["modeled_over_measured"] = (
+            round(info["hbm_per_device"] / meas, 3) if meas else None)
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):
             cost = cost[0]
@@ -337,7 +344,8 @@ def main():
                         ("arch", "shape", "mesh", "status", "lower_s",
                          "compile_s", "flops_per_device",
                          "collective_bytes_per_device", "dominant",
-                         "hbm_per_device_bytes", "fits_hbm")}
+                         "hbm_per_device_bytes", "measured_bytes_per_device",
+                         "modeled_over_measured", "fits_hbm")}
                 print(json.dumps(line), flush=True)
                 if r["status"] == "error":
                     failures += 1

@@ -41,6 +41,33 @@ def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def host_max(value: float) -> float:
+    """Max of a host-local scalar over all hosts.
+
+    Used to reduce per-host measured executable footprints
+    (``memory_analysis()`` is addressable-device-local) so the §3.3 rung
+    decision is safe on the MOST-loaded host of an uneven mesh. Single
+    process — every test/CPU run — is the identity, no device traffic."""
+    if jax.process_count() == 1:
+        return float(value)
+    from jax.experimental import multihost_utils
+    gathered = multihost_utils.process_allgather(
+        jnp.asarray(value, jnp.float32))
+    return float(np.max(np.asarray(gathered)))
+
+
+def harvested_exe_bytes(compiled) -> Optional[float]:
+    """``measured_exe_bytes`` + the host_max reduction, shared by
+    Trainer and ServeEngine so the harvest invariant lives once: EVERY
+    host enters the collective even when its local harvest came up empty
+    (a conditional all-gather deadlocks the mesh — hence the -1 sentinel),
+    and only a positive reduced footprint counts as a measurement."""
+    from repro.core.batch_scaler import measured_exe_bytes
+    mb = measured_exe_bytes(compiled)
+    mb = host_max(mb if mb is not None else -1.0)
+    return mb if mb > 0 else None
+
+
 # -------------------------------------------------- activation constraints -
 # XLA SPMD can replicate loop carries (the residual stream inside the layer
 # scan), turning every projection into a full-batch all-reduce. Production

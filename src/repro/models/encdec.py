@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.lm import chunked_xent
+from repro.nn.attention import std_positions
 from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
 from repro.nn.layers import dense, dense_init, embedding_init, rmsnorm, rmsnorm_init
 
@@ -56,8 +57,9 @@ def encode(params, frontend_embeds, cfg: EncDecConfig, codes=None, qdq_fn=None):
     B, Se, _ = frontend_embeds.shape
     x = dense(params["frontend_proj"], frontend_embeds.astype(cfg.compute_dtype))
     pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
-    x, _, _ = stack_fwd(params["encoder"], x, pos, cfg.enc_stack, mode="train",
-                        codes=codes, qdq_fn=qdq_fn)
+    with std_positions():              # built above -> provably standard
+        x, _, _ = stack_fwd(params["encoder"], x, pos, cfg.enc_stack,
+                            mode="train", codes=codes, qdq_fn=qdq_fn)
     return rmsnorm(params["enc_norm"], x, cfg.enc_stack.norm_eps)
 
 
@@ -72,8 +74,10 @@ def encdec_loss(params, batch, cfg: EncDecConfig, codes=None, qdq_fn=None):
     B, St = batch["tokens"].shape
     x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
     pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
-    x, _, aux = stack_fwd(params["decoder"], x, pos, cfg.dec_stack, mode="train",
-                          codes=dec_codes, qdq_fn=qdq_fn, enc_out=enc_out)
+    with std_positions():              # built above -> provably standard
+        x, _, aux = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
+                              mode="train", codes=dec_codes, qdq_fn=qdq_fn,
+                              enc_out=enc_out)
     x = rmsnorm(params["final_norm"], x, cfg.dec_stack.norm_eps)
     nll, cnt = chunked_xent(x, params["embed"]["table"], batch["labels"],
                             cfg.loss_chunk)
@@ -89,8 +93,9 @@ def encdec_prefill(params, batch, cfg: EncDecConfig):
     B, St = batch["tokens"].shape
     x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
     pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
-    x, caches, _ = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
-                             mode="prefill", enc_out=enc_out)
+    with std_positions():              # built above -> provably standard
+        x, caches, _ = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
+                                 mode="prefill", enc_out=enc_out)
     x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.dec_stack.norm_eps)
     logits = x @ params["embed"]["table"].astype(x.dtype).T
     return logits[:, 0, :], caches

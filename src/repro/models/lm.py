@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.nn.attention import std_positions
 from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
 from repro.nn.layers import embedding_init, rmsnorm, rmsnorm_init
 from repro.nn.module import split_params
@@ -83,12 +84,14 @@ def lm_hidden(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
     """Forward to final hidden states (B, S, d)."""
     B, S = batch["tokens"].shape
     pos = batch.get("positions")
+    std = pos is None                  # built below -> provably standard
     if pos is None:
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     mrope = batch.get("mrope_positions") if cfg.mrope else None
     x = _embed_inputs(params, batch, cfg)
-    x, _, aux = stack_fwd(params["stack"], x, pos, cfg.stack, mode="train",
-                          codes=codes, qdq_fn=qdq_fn, mrope=mrope)
+    with std_positions(std):
+        x, _, aux = stack_fwd(params["stack"], x, pos, cfg.stack, mode="train",
+                              codes=codes, qdq_fn=qdq_fn, mrope=mrope)
     x = rmsnorm(params["final_norm"], x, cfg.stack.norm_eps)
     return x, aux
 
@@ -141,12 +144,14 @@ def lm_prefill(params, batch, cfg: LMConfig):
     """Prefill: full-sequence forward returning last-position logits + caches."""
     B, S = batch["tokens"].shape
     pos = batch.get("positions")
+    std = pos is None                  # built below -> provably standard
     if pos is None:
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     mrope = batch.get("mrope_positions") if cfg.mrope else None
     x = _embed_inputs(params, batch, cfg)
-    x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack, mode="prefill",
-                             mrope=mrope)
+    with std_positions(std):
+        x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack,
+                                 mode="prefill", mrope=mrope)
     x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.stack.norm_eps)
     logits = (x @ _readout_table(params, cfg).astype(x.dtype).T)
     return logits[:, 0, :], caches

@@ -13,7 +13,9 @@ compressed-cache *absorbed* formulation (cache holds only (c_kv, k_rope)).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -23,6 +25,28 @@ from repro.nn.layers import (apply_mrope, apply_rope, dense, dense_init,
                              rmsnorm, rmsnorm_init)
 
 NEG_INF = -2.0e38
+
+# ----------------------------------------------- standard-positions hint ---
+# The Pallas flash kernel hard-codes the standard arange mask, so its
+# dispatcher must PROVE positions are standard — impossible from inside a
+# jit trace, where even arange-built arrays are tracers. The call site that
+# CONSTRUCTS the positions (lm_hidden/encdec: batch carried none -> built
+# from arange) has that knowledge statically; it declares it here so
+# impl="flash" still reaches the kernel under jit. Same thread-local
+# pattern as launch.sharding.activation_mesh.
+_STD_POS = threading.local()
+
+
+@contextlib.contextmanager
+def std_positions(flag: bool = True):
+    """Declare that positions flowing into ``attention()`` below are the
+    standard broadcast arange (train / prefill with no packed batch)."""
+    prev = getattr(_STD_POS, "flag", False)
+    _STD_POS.flag = bool(flag)
+    try:
+        yield
+    finally:
+        _STD_POS.flag = prev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,11 +212,16 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
 def attention(q, k, v, q_pos, k_pos, *, causal, window, scale,
               impl="chunked", q_chunk=512, k_chunk=512):
     if impl == "flash":
-        # TPU Pallas kernel path (repro.kernels.ops); falls back to chunked
-        # when the kernel does not support the configuration.
+        # TPU Pallas kernel path (repro.kernels.ops); falls back to chunked/
+        # naive when the kernel does not support the configuration. Dropping
+        # the position arrays is only sound for self-attention positions the
+        # constructor DECLARED standard (see std_positions above).
         from repro.kernels import ops as kops
-        return kops.flash_attention(q, k, v, q_pos, k_pos, causal=causal,
-                                    window=window, scale=scale)
+        std = getattr(_STD_POS, "flag", False) and q_pos is k_pos
+        return kops.flash_attention(q, k, v,
+                                    None if std else q_pos,
+                                    None if std else k_pos,
+                                    causal=causal, window=window, scale=scale)
     if impl == "chunked" and q.shape[1] % q_chunk == 0 and k.shape[1] % k_chunk == 0 \
             and q.shape[1] >= q_chunk and k.shape[1] >= k_chunk:
         return _chunked_attention(q, k, v, q_pos, k_pos, causal, window,

@@ -27,6 +27,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.launch.sharding import harvested_exe_bytes
+
 SDS = jax.ShapeDtypeStruct
 
 
@@ -112,6 +114,9 @@ class ServeEngine:
                                for t in self.tiers}
         self.input_spec = task.serve_input_spec(self.prompt_len)
         self._exe: Dict[Tuple, Any] = {}
+        # measured memory_analysis() bytes per executable, same keys as the
+        # AOT cache (("decode", rung, tier), ...), max over hosts
+        self.measured: Dict[Tuple, float] = {}
         self.compile_count = 0
 
     # ------------------------------------------------------------ shapes --
@@ -139,7 +144,31 @@ class ServeEngine:
             exe = jax.jit(fn, donate_argnums=donate).lower(*arg_sds).compile()
             self._exe[key] = exe
             self.compile_count += 1
+            self._harvest(key, exe)
         return exe
+
+    def _harvest(self, key, exe):
+        mb = harvested_exe_bytes(exe)
+        if mb is not None:
+            self.measured[key] = mb
+
+    def measured_bytes(self, rung: int, tier: int) -> Optional[float]:
+        """Measured per-host footprint live at (rung, tier): the max over the
+        steady-state executables that can dispatch there — decode and admit
+        for token tasks, infer for cache-free ones. (Repack executables are
+        transient rung-pair gathers and are not part of a rung's steady
+        state.) None until something at the key has been compiled."""
+        keys = (("decode", rung, tier), ("admit", rung, tier),
+                ("infer", rung, tier))
+        vals = [self.measured[k] for k in keys if k in self.measured]
+        return max(vals) if vals else None
+
+    def reharvest_measured(self):
+        """Re-read memory_analysis() for every cached executable — after an
+        elastic re-shard the cache keys survive but per-host footprints (and
+        the most-loaded host) change."""
+        for key, exe in self._exe.items():
+            self._harvest(key, exe)
 
     def _decode_exe(self, rung: int, tier: int):
         from repro.train.serve import make_decode_fn
@@ -178,7 +207,8 @@ class ServeEngine:
         """Pre-compile every executable the session can dispatch: decode and
         admit per (rung, tier) — infer for cache-free tasks — plus repack for
         every ordered rung pair. After this, serving triggers zero new XLA
-        compilations (probed in tests/test_serve.py)."""
+        compilations (probed in tests/test_serve.py) and ``measured`` holds
+        every executable's real memory_analysis() footprint."""
         for rung in self.rungs:
             for tier in self.tiers:
                 if self.task.serves_tokens:

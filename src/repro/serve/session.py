@@ -6,10 +6,14 @@ the batched decode caches, and a ``ServeEngine`` of AOT-warmed executables.
 Each ``step()``:
 
   1. control cadence (every ``t_ctrl`` steps): the §3.3 BatchScaler over the
-     task's ``serve_memory_model`` (weights at the active tier + KV-cache
-     bytes) updates the memory-capacity rung, and — when ``auto_tier`` — the
-     decode-weight precision tier is re-picked: the highest-precision
-     configured tier whose modeled footprint fits under rho_high * cap;
+     task's ``serve_memory_model`` updates the memory-capacity rung
+     MEASURED-FIRST — ``warm()`` harvests every (rung, tier) executable's
+     ``memory_analysis()`` bytes into the model's overlay, so both the
+     pressure signal and the climb guard run on real footprints (analytic
+     weights-at-tier + KV-bytes only for never-compiled combinations) — and,
+     when ``auto_tier``, the decode-weight precision tier is re-picked: the
+     highest-precision configured tier whose (measured-first) footprint fits
+     under rho_high * cap;
   2. rung resize: grow/shrink to the smallest configured rung covering the
      load (never evicting in-flight requests), repacking cache rows through
      a pre-compiled gather — in-flight outputs are bit-identical across the
@@ -101,8 +105,30 @@ class ServeSession:
         return self.engine.compile_count
 
     def warm(self) -> int:
-        """AOT-compile every (rung, tier) executable; returns compile count."""
-        return self.engine.warm()
+        """AOT-compile every (rung, tier) executable and harvest each one's
+        measured bytes into the rung controller; returns compile count."""
+        n = self.engine.warm()
+        self.sync_measured()
+        return n
+
+    def sync_measured(self) -> None:
+        """Refresh the engine's per-executable measured table and copy it
+        into the memory model's (rung, tier) overlay — called after warm()
+        and again after an elastic re-shard (the AOT keys survive, but
+        per-host footprints change with the mesh, so re-read them)."""
+        self.engine.reharvest_measured()
+        self._refresh_overlay()
+
+    def _refresh_overlay(self) -> None:
+        """Copy the engine's measured table into the model overlay (cheap
+        dict reads, no re-harvest). Run on every control tick so a session
+        serving WITHOUT warm() — executables lazily compiled and harvested
+        on first dispatch — still closes the loop."""
+        for rung in self.engine.rungs:
+            for tier in self.engine.tiers:
+                mb = self.engine.measured_bytes(rung, tier)
+                if mb is not None:
+                    self.mm.measured[(rung, tier)] = mb
 
     def submit(self, inputs: Dict[str, np.ndarray],
                max_new_tokens: Optional[int] = None) -> int:
@@ -158,9 +184,17 @@ class ServeSession:
 
     def _control(self):
         """§3.3/§3.4 serve-side control: memory-capacity rung + precision
-        tier, both from the same serve memory model."""
+        tier, both from the same serve memory model. After ``warm()`` every
+        (rung, tier) the controller can pick has a MEASURED footprint in the
+        model's overlay, so observe()'s pressure signal, its climb guard,
+        and the tier sweep below all run on harvested memory_analysis()
+        bytes (analytic fallback only for never-compiled combinations)."""
         self.mm.weight_tier = self.tier
-        self.scaler.observe(self.steps)
+        self._refresh_overlay()
+        # feed the harvested bytes for the controller's own (rung, tier)
+        # explicitly: record_measured also re-fits the analytic calibration
+        self.scaler.observe(self.steps, measured_bytes=self.mm.measured.get(
+            (self.scaler.microbatch, self.tier)))
         if self._tier_locked or len(self.engine.tiers) < 2:
             return
         cap = self.tac.rho_high * self.tac.mem_cap_bytes
@@ -168,7 +202,7 @@ class ServeSession:
         chosen = self.engine.tiers[0]
         for tier in sorted(self.engine.tiers, reverse=True):
             self.mm.weight_tier = tier
-            if self.mm.total(tokens) <= cap:
+            if self.mm.predict(self.rung, tokens) <= cap:
                 chosen = tier
                 break
         self.mm.weight_tier = chosen

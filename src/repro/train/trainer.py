@@ -107,6 +107,9 @@ class Trainer:
                                        seq_len=tcfg.seq_len)
         # AOT executable cache: (rung, state treedef) -> jax.stages.Compiled
         self._executables: Dict[Tuple[int, Any], Any] = {}
+        # measured memory_analysis() bytes per executable, same keys as the
+        # AOT cache (max over hosts); feeds the §3.3 controller's overlay
+        self.measured_bytes: Dict[Tuple[int, Any], float] = {}
         self.compile_count = 0
         self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir, tcfg.ckpt_keep)
                      if tcfg.ckpt_dir else None)
@@ -146,11 +149,37 @@ class Trainer:
                        .lower(state_sds, batch_sds).compile())
             self._executables[key] = exe
             self.compile_count += 1
+            self._harvest_measured(key, exe)
         return exe
+
+    def _harvest_measured(self, key, exe):
+        """Record the executable's measured per-host footprint (max over
+        hosts) into the trainer table and the controller's rung overlay."""
+        mb = shd.harvested_exe_bytes(exe)
+        if mb is None:
+            return
+        rung = key[0]
+        self.measured_bytes[key] = mb
+        self.scaler.model.record_measured(
+            rung, mb, rung * self.scaler.seq_len, ladder=self.tac.ladder)
+
+    def reharvest_measured(self):
+        """Re-read memory_analysis() for every cached executable — after an
+        elastic re-shard restore the (rung, treedef) keys survive but the
+        per-host footprint (and the most-loaded host) can change."""
+        for key, exe in self._executables.items():
+            self._harvest_measured(key, exe)
+
+    def _rung_measured(self, rung: int) -> Optional[float]:
+        """Harvested bytes for ``rung`` at the LIVE state treedef (None until
+        the rung's executable exists — analytic fallback in the scaler)."""
+        key = (rung, jax.tree_util.tree_structure(self.state))
+        return self.measured_bytes.get(key)
 
     def warm_rungs(self):
         """Pre-compile the train step for every configured rung; afterwards
-        a step on any rung triggers zero new XLA compilations."""
+        a step on any rung triggers zero new XLA compilations, and the
+        measured table holds every rung's real footprint."""
         for r in self.tcfg.rungs:
             self._get_step(r)
 
@@ -176,6 +205,7 @@ class Trainer:
         host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
         self.state = jax.tree.map(
             lambda h, cur: jax.device_put(h, cur.sharding), host, self.state)
+        self.reharvest_measured()
         return int(self.state.control.step)
 
     # -------------------------------------------------------------- run ---
@@ -199,10 +229,13 @@ class Trainer:
                 lam = self._curvature(step)
                 self.state = self.state._replace(
                     control=with_curvature(self.state.control, lam))
-            # §3.3 batch-rung cadence
+            # §3.3 batch-rung cadence: measured-first (the harvested
+            # memory_analysis() bytes of THIS rung's executable), analytic
+            # fallback when the backend reported nothing
             if step > 0 and step % self.tac.t_ctrl == 0:
                 codes = jax.device_get(self.state.control.codes)
-                self.scaler.observe(step, codes=list(codes))
+                self.scaler.observe(step, codes=list(codes),
+                                    measured_bytes=self._rung_measured(rung))
             if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0:
                 self.ckpt.save(step, self.state)
             if step % self.tcfg.log_every == 0:

@@ -64,3 +64,121 @@ def test_flash_matches_model_attention_path():
     a = ops.flash_attention(q, k, v, causal=True, window=0)
     b = _chunked_attention(q, k, v, pos, pos, True, None, D ** -0.5, 256, 256)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)
+
+
+# ------------------------------------------- dispatch regressions (ISSUE 3) -
+def _qkv(B=1, S=256, H=2, K=2, D=16):
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, 16)])
+def test_flash_dispatch_honors_packed_positions(causal, window):
+    """Non-arange positions (packed sequences: positions restart mid-row) on
+    a kernel-eligible shape MUST match the naive oracle — the old dispatch
+    sent them to the kernel, which rebuilt the mask from iota and silently
+    masked the wrong pairs."""
+    from repro.nn.attention import _naive_attention
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    pos = jnp.broadcast_to((jnp.arange(S, dtype=jnp.int32) % 128)[None],
+                           (B, S))
+    got = ops.flash_attention(q, k, v, pos, pos, causal=causal, window=window)
+    want = _naive_attention(q, k, v, pos, pos, causal, window, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+    # the mask genuinely differs from the arange one (the regression is real)
+    arange_path = ops.flash_attention(q, k, v, causal=causal, window=window)
+    assert not np.allclose(np.asarray(arange_path), np.asarray(want),
+                           atol=1e-3)
+
+
+def test_flash_dispatch_honors_masked_cache_slots():
+    """k_pos rows containing -1 (empty cache slots) must stay masked."""
+    from repro.nn.attention import _naive_attention
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kp = qp.at[:, -64:].set(-1)
+    got = ops.flash_attention(q, k, v, qp, kp, causal=True, window=None)
+    want = _naive_attention(q, k, v, qp, kp, True, None, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+
+def test_flash_dispatch_uses_kernel_for_concrete_arange():
+    """CONCRETE standard-arange positions still take the kernel path — the
+    guard only rejects positions it cannot prove standard."""
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None], (B, S))
+    got = ops.flash_attention(q, k, v, jnp.asarray(pos), jnp.asarray(pos),
+                              causal=True, window=16)
+    want = ops.flash_attention(q, k, v, causal=True, window=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("np_window", [np.int64(32), np.int32(32)])
+def test_flash_window_accepts_numpy_ints(np_window):
+    """A numpy-integer window must window the kernel path — the old
+    ``isinstance(window, int)`` coercion silently turned it into 0 (global
+    attention) while the fallback paths windowed correctly."""
+    q, k, v = _qkv()
+    got = ops.flash_attention(q, k, v, causal=True, window=np_window)
+    want = ops.flash_attention(q, k, v, causal=True, window=int(np_window))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    unwindowed = ops.flash_attention(q, k, v, causal=True, window=None)
+    assert not np.allclose(np.asarray(got), np.asarray(unwindowed),
+                           atol=1e-3)
+
+
+def test_flash_kernel_reachable_under_jit_via_std_positions():
+    """Under jit even arange-built positions are tracers, so the dispatch
+    guard alone would send EVERY jitted model to the fallback. The
+    ``std_positions`` hint (set by the code that constructs the positions —
+    models/lm.py, models/encdec.py) must restore the kernel path, and a
+    jitted call WITHOUT the hint must still fall back."""
+    from repro.kernels import flash_attention as _fa
+    from repro.nn.attention import attention, std_positions
+
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    calls = []
+    orig = _fa.flash_attention
+    _fa.flash_attention = lambda *a, **kw: calls.append(1) or orig(*a, **kw)
+    try:
+        @jax.jit
+        def f(q, k, v):
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S))
+            with std_positions():
+                return attention(q, k, v, pos, pos, causal=True, window=None,
+                                 scale=D ** -0.5, impl="flash")
+        out = f(q, k, v)
+        assert calls, "kernel not dispatched under jit despite std hint"
+
+        calls.clear()
+
+        @jax.jit
+        def g(q, k, v, pos):           # positions from outside: no hint
+            return attention(q, k, v, pos, pos, causal=True, window=None,
+                             scale=D ** -0.5, impl="flash")
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        out2 = g(q, k, v, pos)
+    finally:
+        _fa.flash_attention = orig
+    assert not calls, "unproven positions must not reach the kernel"
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=3e-6)
+
+
+def test_flash_window_numpy_int_on_fallback_path():
+    """Same numpy-int window on a non-kernel shape (S not divisible by the
+    block size) — both paths must agree with the windowed naive oracle."""
+    from repro.nn.attention import _naive_attention
+    B, S, D = 1, 64, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    got = ops.flash_attention(q, k, v, causal=True, window=np.int64(8))
+    want = _naive_attention(q, k, v, pos, pos, True, 8, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)

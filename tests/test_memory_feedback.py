@@ -1,0 +1,206 @@
+"""Closed-loop §3.3: harvested ``memory_analysis()`` bytes drive the rung
+controller (ISSUE 3 tentpole).
+
+(a) BatchScaler measured feedback: the calibrated climb guard converges
+    where the old uncalibrated analytic guard flip-flopped, and overlay
+    entries steer decisions even without an explicit measurement;
+(b) Trainer.warm_rungs() populates the measured table for every
+    (rung, treedef) key, run() feeds it to observe(), and the table is
+    re-harvested across an elastic re-shard restore;
+(c) ServeSession.warm() populates per-(rung, tier) measured bytes and the
+    rung decision follows measured over analytic when they disagree.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.batch_scaler import BatchScaler, MemoryModel
+from repro.core.precision import TriAccelConfig
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CAP = 10e9
+
+
+def _optimistic_scaler(rungs=(8, 16), start=8):
+    """Analytic model that predicts ~nothing — it always says the next rung
+    fits, so without measured feedback the guard never refuses a climb."""
+    tac = TriAccelConfig(mem_cap_bytes=CAP, rho_low=0.8, rho_high=0.92)
+    mm = MemoryModel(param_count=0, opt_slots=0,
+                     act_bytes_per_token_layer=1.0, num_layers=1,
+                     fixed_overhead=0)
+    return BatchScaler(list(rungs), 128, mm, tac, start_rung=start), tac
+
+
+# ======================================================================
+# (a) measured feedback + calibrated climb guard
+# ======================================================================
+def test_measured_feedback_converges_without_oscillation():
+    """True footprints: rung 8 underutilizes (wants to climb), rung 16
+    overflows. The old guard checked the UNCALIBRATED analytic prediction
+    for the next rung — here always ~0 bytes — so it climbed on every
+    underutilized observation and backed off on the next measurement,
+    forever (8, 16, 8, 16, ...). The calibrated guard re-fits the analytic
+    model to the first measurement, predicts rung 16 at ~1.0 x cap, and
+    refuses the climb: the rung pins to 8 immediately."""
+    sc, _ = _optimistic_scaler()
+    measured = {8: 0.50 * CAP, 16: 0.95 * CAP}
+    for i in range(20):
+        sc.observe(i, measured_bytes=measured[sc.microbatch])
+    rungs = [r for _, r, _ in sc.history]
+    assert set(rungs[2:]) == {8}, rungs
+
+
+def test_measured_feedback_converges_from_overloaded_start():
+    """Starting ON the overflowing rung: one measurement drops to 8 and the
+    overlay entry for 16 (0.95 x cap > rho_high) blocks every re-climb."""
+    sc, _ = _optimistic_scaler(start=16)
+    measured = {8: 0.50 * CAP, 16: 0.95 * CAP}
+    for i in range(20):
+        sc.observe(i, measured_bytes=measured[sc.microbatch])
+    rungs = [r for _, r, _ in sc.history]
+    assert rungs[0] == 8 and set(rungs) == {8}, rungs
+    # the overlay remembers the overflowing rung's real footprint
+    assert sc.model.measured[16] == pytest.approx(0.95 * CAP)
+
+
+def test_observe_consults_overlay_without_explicit_measurement():
+    """A recorded overlay entry changes the decision even when observe() is
+    called with no measured_bytes (the serve path: warm() pre-fills the
+    overlay, _control() just observes)."""
+    sc, _ = _optimistic_scaler(rungs=(4, 8, 16), start=8)
+    assert sc.observe(0) == 16          # analytic says tiny -> climbs
+    sc2, _ = _optimistic_scaler(rungs=(4, 8, 16), start=8)
+    sc2.model.record_measured(8, 0.95 * CAP, 8 * 128)
+    assert sc2.observe(0) == 4          # measured says overloaded -> drops
+
+
+def test_overlay_is_measured_first_with_analytic_fallback():
+    mm = MemoryModel(param_count=0, opt_slots=0,
+                     act_bytes_per_token_layer=1.0, num_layers=1,
+                     fixed_overhead=0)
+    analytic = mm.total(128)
+    assert mm.predict(8, 128) == analytic          # no overlay -> analytic
+    mm.measured[8] = 123456.0
+    assert mm.predict(8, 128) == 123456.0          # overlay wins
+    assert mm.predict(16, 256) == mm.total(256)    # other rungs: analytic
+
+
+# ======================================================================
+# (b) Trainer: warm -> harvest -> observe, surviving elastic re-shard
+# ======================================================================
+def _tiny_lm(vocab=64):
+    attn = AttnConfig(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      impl="naive")
+    sc = StackConfig(segments=(((BlockDef("gqa", "dense"),), 2),),
+                     d_model=64, d_ff=128, attn=attn, remat=False)
+    return LMConfig(name="tiny", family="dense", vocab_size=vocab, stack=sc,
+                    compute_dtype=jnp.float32)
+
+
+@pytest.mark.slow
+def test_trainer_harvests_and_consumes_measured_bytes(tmp_path):
+    tac = TriAccelConfig(ladder="tpu", t_ctrl=2, enable_curvature=False)
+    mk = lambda: TrainerConfig(total_steps=4, seq_len=16, rungs=(2, 4),
+                               ckpt_dir=str(tmp_path), ckpt_every=100,
+                               log_every=100, base_lr=1e-2)
+    tr = Trainer(_tiny_lm(), tac, mk())
+    tr.warm_rungs()
+
+    # every (rung, treedef) AOT key has a positive harvested footprint, and
+    # the controller overlay covers every configured rung
+    assert set(tr.measured_bytes) == set(tr._executables)
+    assert all(v > 0 for v in tr.measured_bytes.values())
+    assert set(tr.scaler.model.measured) == set(mk().rungs)
+
+    # run(): the §3.3 observe() cadence records the HARVESTED bytes as its
+    # pressure signal (measured-first), not the analytic estimate
+    tr.run(4)
+    assert tr.scaler.history, "observe() never ran"
+    harvested = set(tr.measured_bytes.values())
+    for _, _, mem in tr.scaler.history:
+        assert mem in harvested, (mem, harvested)
+    tr.ckpt.wait()
+
+    # elastic re-shard: a fresh trainer restores the checkpoint; the AOT
+    # keys survive, and maybe_restore() re-harvests the measured table
+    tr2 = Trainer(_tiny_lm(), tac, mk())
+    tr2.warm_rungs()
+    tr2.measured_bytes.clear()
+    tr2.scaler.model.measured.clear()
+    assert tr2.maybe_restore() == 4
+    assert set(tr2.measured_bytes) == set(tr2._executables)
+    assert all(v > 0 for v in tr2.measured_bytes.values())
+    assert set(tr2.scaler.model.measured) == set(mk().rungs)
+
+
+# ======================================================================
+# (c) ServeSession: warm -> per-(rung, tier) overlay -> rung decision
+# ======================================================================
+@pytest.mark.slow
+def test_serve_warm_populates_measured_per_rung_tier():
+    from repro.models.registry import get_task
+    from repro.serve import ServeConfig, ServeSession
+
+    task = get_task("smollm-135m", reduced=True)
+    cfg = ServeConfig(prompt_len=8, total_len=16, rungs=(1, 2), tiers=(0, 1),
+                      max_new_tokens=2, t_ctrl=2)
+    sess = ServeSession(task, cfg)
+    sess.warm()
+
+    # engine table keyed like the AOT cache; session overlay per (rung, tier)
+    for rung in cfg.rungs:
+        for tier in cfg.tiers:
+            assert ("decode", rung, tier) in sess.engine.measured
+            assert ("admit", rung, tier) in sess.engine.measured
+            assert sess.mm.measured[(rung, tier)] > 0
+            assert sess.mm.measured[(rung, tier)] == \
+                sess.engine.measured_bytes(rung, tier)
+
+    # rung decision follows measured over analytic when they disagree: the
+    # analytic model says everything fits in 16 GB, a planted measurement
+    # says rung 2 at the active tier overflows -> controller drops to 1
+    sess.scaler.idx = sess.scaler.rungs.index(2)
+    true_bytes = dict(sess.engine.measured)
+    sess.engine.measured[("decode", 2, sess.tier)] = \
+        0.95 * sess.tac.mem_cap_bytes
+    sess._control()
+    assert sess.scaler.microbatch == 1
+
+    # and with the true (tiny) measurements back in place it climbs again
+    sess.engine.measured = true_bytes
+    sess._control()
+    assert sess.scaler.microbatch == 2
+
+
+def test_unwarmed_session_still_closes_the_loop():
+    """A session that never calls warm() lazily compiles executables on
+    first dispatch; the control tick must still pull those harvested bytes
+    into the overlay (no permanent open-loop fallback)."""
+    import numpy as np
+
+    from repro.models.registry import get_task
+    from repro.serve import ServeConfig, ServeSession
+
+    task = get_task("smollm-135m", reduced=True)
+    cfg = ServeConfig(prompt_len=8, total_len=16, rungs=(1,), tiers=(1,),
+                      max_new_tokens=6, t_ctrl=1)
+    sess = ServeSession(task, cfg)          # note: no warm()
+    b = task.data_stream(1, seed=0, seq_len=8).batch(0)
+    sess.submit({k: np.asarray(v[0]) for k, v in b.items() if k != "labels"})
+    sess.run(max_steps=10)
+    assert sess.mm.measured.get((1, 1), 0) > 0
+
+
+@pytest.mark.slow
+def test_serve_infer_task_harvests_measured():
+    from repro.models.registry import get_task
+    from repro.serve import ServeConfig, ServeSession
+
+    task = get_task("resnet18", reduced=True)
+    cfg = ServeConfig(rungs=(2,), tiers=(1,), t_ctrl=2)
+    sess = ServeSession(task, cfg)
+    sess.warm()
+    assert ("infer", 2, 1) in sess.engine.measured
+    assert sess.mm.measured[(2, 1)] == sess.engine.measured_bytes(2, 1) > 0

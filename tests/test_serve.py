@@ -73,6 +73,7 @@ def test_decode_matches_prefill_argmax(arch):
 # ======================================================================
 # (b) rung transitions preserve in-flight outputs bit-exactly
 # ======================================================================
+@pytest.mark.slow
 def test_rung_transition_preserves_outputs():
     def serve(rungs, second_request):
         task = get_task("smollm-135m", reduced=True)
@@ -100,6 +101,7 @@ def test_rung_transition_preserves_outputs():
 # ======================================================================
 # (c) zero new XLA compiles after warm-up, across rungs AND tiers
 # ======================================================================
+@pytest.mark.slow
 def test_warm_serve_zero_recompiles():
     task = get_task("smollm-135m", reduced=True)
     cfg = ServeConfig(prompt_len=8, total_len=24, rungs=(1, 2), tiers=(0, 1),
@@ -149,6 +151,7 @@ def test_warm_serve_zero_recompiles():
 # ======================================================================
 # (d) every registered arch serves through the same session API
 # ======================================================================
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_tasks())
 def test_session_serves_every_arch(arch):
     task = get_task(arch, reduced=True)

@@ -176,6 +176,7 @@ def test_checkpoint_roundtrip_unified(kind, tmp_path):
 # ======================================================================
 # (c) warm_rungs(): zero new compilations on any configured rung
 # ======================================================================
+@pytest.mark.slow
 def test_warm_rungs_precompiles_every_rung():
     task = VisionTask(_tiny_vision())
     tac = TriAccelConfig(ladder="gpu", t_ctrl=1000, enable_curvature=False,

@@ -96,6 +96,33 @@ def test_hutchinson_matches_trace_on_quadratic():
     np.testing.assert_allclose(float(tr[0]), 5.0, rtol=0.05)
 
 
+def test_curvature_probes_distinct_across_same_shape_layers():
+    """Regression: per-leaf Rademacher draws keyed ``hash(l.shape)`` gave
+    every same-shape layer the IDENTICAL probe vector (fully correlated
+    estimates). Probes must be independent per leaf."""
+    params = {"a": jnp.ones((64,)), "b": jnp.ones((64,)), "c": jnp.ones((64,))}
+    v = curv._rademacher_tree(params, jax.random.PRNGKey(0))
+    for x, y in [("a", "b"), ("a", "c"), ("b", "c")]:
+        assert not np.array_equal(np.asarray(v[x]), np.asarray(v[y])), (x, y)
+
+
+def test_power_iteration_per_layer_blocks_same_shape():
+    """Two same-shape blocks with different spectra: each per-layer power
+    iteration must recover ITS block's top eigenvalue (with correlated
+    probes both blocks started from the same vector)."""
+    da, db = jnp.array([1.0, 4.0, 9.0]), jnp.array([25.0, 2.0, 3.0])
+    params = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    loss = lambda p: 0.5 * (jnp.sum(da * p["a"] ** 2)
+                            + jnp.sum(db * p["b"] ** 2))
+    key = jax.random.PRNGKey(0)
+    lam_a = curv.power_iteration_layer(
+        loss, params, lambda path: path[0].key == "a", key, 30)
+    lam_b = curv.power_iteration_layer(
+        loss, params, lambda path: path[0].key == "b", key, 30)
+    np.testing.assert_allclose(float(lam_a), 9.0, rtol=1e-4)
+    np.testing.assert_allclose(float(lam_b), 25.0, rtol=1e-4)
+
+
 def test_lr_scales_law():
     tac = TriAccelConfig(alpha=0.5)
     ctl = with_curvature(init_control(3, tac), jnp.array([0.0, 2.0, 10.0]))
