@@ -2,6 +2,12 @@
 CPU — wall numbers are NOT TPU perf, they validate dispatch overhead and
 give the jnp-reference ratio) plus the jnp oracle for comparison.
 
+Flash attention is timed forward-only AND forward+backward (jax.grad
+through the custom_vjp backward kernels) over a seqlen sweep, against the
+chunked-jnp oracle that training used before the kernel path — the
+fwd+bwd rows are the training-step numbers the roofline's flash skip flags
+model.
+
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
@@ -13,14 +19,48 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
+ATTN_SEQ_SWEEP = (256, 512, 1024)
+
 
 def _time(fn, *args, iters=5):
-    fn(*args)  # compile
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6
+
+
+def _attn_rows(key, causal=True, window=0):
+    """flash vs chunked-jnp oracle, fwd and fwd+bwd, over ATTN_SEQ_SWEEP."""
+    from repro.nn.attention import _chunked_attention
+    rows = []
+    B, H, K, D = 1, 4, 2, 64
+    for S in ATTN_SEQ_SWEEP:
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def flash(q, k, v):
+            return ops.flash_attention(q, k, v, causal=causal, window=window)
+
+        def chunked(q, k, v):
+            return _chunked_attention(q, k, v, pos, pos, causal,
+                                      window or None, D ** -0.5, 256, 256)
+
+        for name, fn in (("flash", flash), ("chunked", chunked)):
+            fwd = jax.jit(fn)
+            loss = jax.jit(jax.grad(
+                lambda q, k, v, f=fn: jnp.sum(jnp.square(f(q, k, v))),
+                argnums=(0, 1, 2)))
+            rows.append((f"attn_{name}_fwd_S{S}", _time(fwd, q, k, v),
+                         "interpret-mode" if name == "flash" else "jnp oracle"))
+            rows.append((f"attn_{name}_fwdbwd_S{S}", _time(loss, q, k, v),
+                         "custom_vjp bwd kernels" if name == "flash"
+                         else "jnp autodiff"))
+    return rows
 
 
 def main():
@@ -29,22 +69,14 @@ def main():
     code = jnp.asarray(1)
     rows = []
     rows.append(("qdq_cast_pallas_1M", _time(ops.qdq_cast, x, code),
-                 "interpret-mode"))
+                 "interpret-mode, fused amax"))
     rows.append(("qdq_cast_ref_1M",
                  _time(jax.jit(ref.qdq_cast_ref), x, code), "jnp oracle"))
     rows.append(("grad_stats_pallas_1M", _time(ops.grad_stats, x),
                  "interpret-mode"))
     rows.append(("grad_stats_ref_1M",
                  _time(jax.jit(ref.grad_stats_ref), x), "jnp oracle"))
-    B, S, H, K, D = 1, 512, 4, 2, 64
-    q = jax.random.normal(key, (B, S, H, D))
-    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
-    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
-    fa = lambda: ops.flash_attention(q, k, v, causal=True)
-    rows.append(("flash_attn_pallas_512", _time(lambda *_: fa()),
-                 "interpret-mode"))
-    fr = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
-    rows.append(("flash_attn_ref_512", _time(fr, q, k, v), "jnp oracle"))
+    rows.extend(_attn_rows(key))
     for name, us, derived in rows:
         print(f"kernels:{name},{us:.1f},{derived}")
 

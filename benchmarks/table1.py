@@ -11,7 +11,10 @@ from __future__ import annotations
 from repro.train.paper_harness import run_method
 
 ARCHS = ("resnet18", "efficientnet_b0")
-METHODS = ("fp32", "amp", "triaccel")
+# triaccel_fp8: the full method on the tpu precision ladder (low tier =
+# per-tensor-amax fp8_e4m3 QDQ instead of fp16) — the Table-1 column for
+# the fp8 ladder on the vision testbed
+METHODS = ("fp32", "amp", "triaccel", "triaccel_fp8")
 
 
 def run(steps: int = 80, seeds=(0,), archs=ARCHS, num_classes: int = 10):

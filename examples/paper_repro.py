@@ -28,7 +28,7 @@ def main():
 
     print(f"{'method':>10} {'acc%':>6} {'wall s/ep':>10} {'model-t':>8} "
           f"{'mem GB':>7} {'eff':>7} {'B_end':>6} {'lo/hi codes':>12}")
-    for method in ("fp32", "amp", "triaccel"):
+    for method in ("fp32", "amp", "triaccel", "triaccel_fp8"):
         ckpt_dir = (os.path.join(args.ckpt, f"{args.arch}_{method}")
                     if args.ckpt else None)
         r = run_method(method, arch=args.arch, steps=args.steps,

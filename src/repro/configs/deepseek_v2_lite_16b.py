@@ -12,7 +12,7 @@ SKIP_SHAPES = {"long_500k": "full-attention arch (MLA-compressed cache, "
 
 
 def _make(L, d, H, kv_lora, n_exp, top_k, ff_exp, ff_dense, vocab,
-          impl="chunked", cap=1.25):
+          impl="flash", cap=1.25):
     mla = MLAConfig(d_model=d, num_heads=H, q_lora_rank=None,
                     kv_lora_rank=kv_lora, qk_nope_dim=128, qk_rope_dim=64,
                     v_head_dim=128, impl=impl)

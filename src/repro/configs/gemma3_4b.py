@@ -17,7 +17,7 @@ SKIP_SHAPES = {}
 WINDOW = 1024
 
 
-def _make(L_periods, tail, d, H, kv, hd, ff, vocab, window, impl="chunked"):
+def _make(L_periods, tail, d, H, kv, hd, ff, vocab, window, impl="flash"):
     attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
                       rope_theta=1e6, qk_norm=True, impl=impl)
     loc = BlockDef("gqa", "dense", window=window)

@@ -16,7 +16,7 @@ SKIP_SHAPES = {"long_500k": "pure full-attention arch: excluded per "
 MROPE_SECTIONS = (16, 24, 24)
 
 
-def _make(L, d, H, kv, hd, ff, vocab, impl="chunked", sections=MROPE_SECTIONS):
+def _make(L, d, H, kv, hd, ff, vocab, impl="flash", sections=MROPE_SECTIONS):
     attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
                       rope_theta=1e6, mrope_sections=sections, impl=impl)
     stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),

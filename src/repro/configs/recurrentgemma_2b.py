@@ -17,7 +17,7 @@ WINDOW = 2048
 
 
 def _make(periods, tail, d, H, kv, hd, ff, lru_w, vocab, window,
-          impl="chunked", conv_width=4):
+          impl="flash", conv_width=4):
     attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
                       rope_theta=10000.0, impl=impl)
     rg = RGLRUConfig(d_model=d, lru_width=lru_w, conv_width=conv_width)

@@ -16,7 +16,7 @@ SKIP_SHAPES = {"long_500k": "full-attention enc-dec: excluded per "
                             "assignment rule"}
 
 
-def _make(L, d, H, kv, hd, ff, vocab, frontend, impl="chunked"):
+def _make(L, d, H, kv, hd, ff, vocab, frontend, impl="flash"):
     enc_attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
                           rope_theta=10000.0, causal=False, impl=impl)
     dec_attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,

@@ -12,7 +12,7 @@ SKIP_SHAPES = {"long_500k": "pure full-attention arch: excluded per "
                             "assignment rule (quadratic attention)"}
 
 
-def _make(L, d, H, kv, hd, ff, vocab, impl="chunked"):
+def _make(L, d, H, kv, hd, ff, vocab, impl="flash"):
     attn = AttnConfig(d_model=d, num_heads=H, num_kv_heads=kv, head_dim=hd,
                       rope_theta=10000.0, impl=impl)
     stack = StackConfig(segments=(((BlockDef("gqa", "dense"),), L),),

@@ -1,13 +1,18 @@
 """Pallas TPU kernels for Tri-Accel's compute hot spots.
 
-qdq_cast.py        — fused per-tensor scale + round-to-tier + cast (the
-                     paper's Triton precision kernel, TPU-tiled)
+qdq_cast.py        — fused per-tensor amax + round-to-tier + cast in one
+                     launch (the paper's Triton precision kernel, TPU-tiled;
+                     two-phase grid folds the amax reduction in)
 grad_stats.py      — one-pass fused sum / sum-of-squares / absmax reduction
                      (feeds the per-layer gradient-variance EMA)
 flash_attention.py — block-tiled online-softmax attention with causal +
-                     sliding-window block skipping (the LM hot spot)
+                     sliding-window block skipping (the LM hot spot),
+                     forward AND backward (dO·O / dQ / dK-dV kernels)
+layout.py          — shared (rows, BLOCK_N) folding with an alignment fast
+                     path (no pad copy for block-aligned tensors)
 
-ops.py exposes jit'd wrappers (interpret=True off-TPU); ref.py holds the
-pure-jnp oracles the tests sweep against.
+ops.py exposes jit'd wrappers (interpret=True off-TPU) and binds the flash
+kernels into one differentiable op (jax.custom_vjp) behind the dispatch
+gate; ref.py holds the pure-jnp oracles the tests sweep against.
 """
 from repro.kernels import ops, ref

@@ -1,4 +1,5 @@
-"""Block-tiled flash attention (fwd) with causal + sliding-window skipping.
+"""Block-tiled flash attention: Pallas forward AND backward kernels with
+causal + sliding-window block skipping.
 
 TPU-native tiling of the online-softmax algorithm: (BQ, D) query tiles and
 (BK, D) key/value tiles resident in VMEM, fp32 accumulators in VMEM scratch
@@ -9,8 +10,25 @@ and ~S*W for windowed attention, unlike the chunked-jnp path which computes
 every pair and masks. GQA is handled in the k/v index_map (q head h reads
 kv head h // rep) so k/v are never materialized per q-head.
 
+Training runs four kernels (FlashAttention-2 style; DESIGN.md §8):
+
+  * forward (``flash_attention_fwd``) — the inference forward plus one
+    (B, H, S) fp32 logsumexp residual, the ONLY extra tensor the backward
+    needs beyond q/k/v/o (no (S, S) probabilities are ever materialized);
+  * ``_delta_kernel`` — preprocessing pass D_i = sum_d dO_id * O_id;
+  * ``_dq_kernel`` — dQ, one q-tile accumulator swept over k-blocks
+    (same grid walk as the forward, same block skipping);
+  * ``_dkv_kernel`` — dK and dV, one k-tile accumulator pair swept over the
+    GQA head group x q-blocks, so grouped q-heads accumulate into their
+    shared kv head without materializing per-q-head k/v gradients.
+
+All four share ``_block_needed``/``_tile_mask``, so forward and backward
+skip exactly the same blocks. ``kernels.ops`` binds fwd+bwd into one
+differentiable op with ``jax.custom_vjp`` behind the dispatch gate.
+
 Shapes: q (B, S, H, D); k, v (B, S, K, D); H % K == 0; S % BQ == S % BK == 0.
-VMEM at defaults (BQ=BK=256, D<=256 fp32): ~1.5 MiB tiles + 0.5 MiB scratch.
+VMEM at defaults (BQ=BK=256, D<=256 fp32): ~1.5 MiB tiles + 0.5 MiB scratch
+(backward: ~2 MiB tiles + 1 MiB dk/dv scratch).
 """
 from __future__ import annotations
 
@@ -26,8 +44,33 @@ BQ = 256
 BK = 256
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  causal: bool, window: int, scale: float, nk: int):
+def _block_needed(q_start, k_start, causal: bool, window: int):
+    """Does tile (q_start, k_start) contain ANY unmasked (q, k) pair? Shared
+    by forward and both backward kernels so all skip identical blocks."""
+    needed = jnp.asarray(True)
+    if causal:
+        needed = needed & (k_start <= q_start + BQ - 1)
+    if window and window > 0:
+        needed = needed & (k_start + BK - 1 >= q_start - (window - 1))
+    return needed
+
+
+def _tile_mask(q_start, k_start, causal: bool, window: int):
+    """(BQ, BK) bool mask of valid pairs inside one tile."""
+    qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    d = qp - kp
+    ok = jnp.ones((BQ, BK), jnp.bool_)
+    if causal:
+        ok = ok & (d >= 0)
+    if window and window > 0:
+        ok = ok & (d < window)
+    return ok
+
+
+# ================================================================ forward ==
+def _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+              causal: bool, window: int, scale: float, nk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -39,27 +82,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     q_start = qi * BQ
     k_start = ki * BK
-    needed = jnp.asarray(True)
-    if causal:
-        needed = needed & (k_start <= q_start + BQ - 1)
-    if window and window > 0:
-        needed = needed & (k_start + BK - 1 >= q_start - (window - 1))
 
-    @pl.when(needed)
+    @pl.when(_block_needed(q_start, k_start, causal, window))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (BQ, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)              # (BK, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)              # (BK, Dv)
         s = q @ k.T                                            # (BQ, BK)
-        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
-        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
-        d = qp - kp
-        ok = jnp.ones((BQ, BK), jnp.bool_)
-        if causal:
-            ok = ok & (d >= 0)
-        if window and window > 0:
-            ok = ok & (d < window)
-        s = jnp.where(ok, s, NEG_INF)
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
@@ -72,12 +102,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        if lse_ref is not None:
+            # logsumexp over the row's valid scores: the one residual the
+            # backward rebuilds p from (p = exp(s - lse))
+            lse_ref[0, 0, :] = m_ref[...] + jnp.log(l)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
-                                             "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    scale: float = None, interpret: bool = False):
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, **kw):
+    _fwd_body(q_ref, k_ref, v_ref, o_ref, None, acc_ref, m_ref, l_ref, **kw)
+
+
+def _flash_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                      l_ref, **kw):
+    _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, **kw)
+
+
+def _fwd_call(q, k, v, *, causal, window, scale, interpret, with_lse):
     B, S, H, D = q.shape
     K = k.shape[2]
     rep = H // K
@@ -86,10 +126,17 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         scale = D ** -0.5
     nq, nk = S // BQ, S // BK
     grid = (B, H, nq, nk)
-    kern = functools.partial(_flash_kernel, causal=causal,
-                             window=int(window or 0), scale=float(scale),
-                             nk=nk)
-    return pl.pallas_call(
+    kw = dict(causal=causal, window=int(window or 0), scale=float(scale),
+              nk=nk)
+    kern = functools.partial(
+        _flash_kernel_lse if with_lse else _flash_kernel, **kw)
+    out_shape = [jax.ShapeDtypeStruct((B, S, H, D), q.dtype)]
+    out_specs = [pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0))]
+    if with_lse:
+        out_shape.append(jax.ShapeDtypeStruct((B, H, S), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, BQ),
+                                      lambda b, h, qi, ki: (b, h, qi)))
+    res = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -99,9 +146,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, BK, 1, D),
                          lambda b, h, qi, ki: (b, ki, h // rep, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BQ, 1, D),
-                               lambda b, h, qi, ki: (b, qi, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((BQ, D), jnp.float32),
             pltpu.VMEM((BQ,), jnp.float32),
@@ -109,3 +155,181 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
+    return tuple(res) if with_lse else (res[0],)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = None, interpret: bool = False):
+    """Inference/primal forward: no residual write."""
+    return _fwd_call(q, k, v, causal=causal, window=window, scale=scale,
+                     interpret=interpret, with_lse=False)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float = None, interpret: bool = False):
+    """Training forward: returns (o, lse) with lse (B, H, S) fp32."""
+    return _fwd_call(q, k, v, causal=causal, window=window, scale=scale,
+                     interpret=interpret, with_lse=True)
+
+
+# =============================================================== backward ==
+def _delta_kernel(o_ref, do_ref, delta_ref):
+    o = o_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    delta_ref[0, 0, :] = jnp.sum(o * do, axis=1)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, causal: bool, window: int, scale: float, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * BQ
+    k_start = ki * BK
+
+    @pl.when(_block_needed(q_start, k_start, causal, window))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k.T
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0, :][:, None])     # masked pairs -> 0
+        dp = do @ v.T
+        ds = p * (dp - delta_ref[0, 0, :][:, None])
+        acc_ref[...] += ds @ k
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # s was taken against scale*q, so d/dq carries one more factor
+        dq_ref[0, :, 0, :] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, dk_acc, dv_acc, *, causal: bool, window: int,
+                scale: float, rep: int, nq: int):
+    ki = pl.program_id(2)
+    r = pl.program_id(3)       # q head within the GQA group of this kv head
+    qi = pl.program_id(4)
+
+    @pl.when((r == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qi * BQ
+    k_start = ki * BK
+
+    @pl.when(_block_needed(q_start, k_start, causal, window))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k.T                                    # (BQ, BK)
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0, :][:, None])
+        dv_acc[...] += p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta_ref[0, 0, :][:, None])
+        dk_acc[...] += ds.T @ q                        # q pre-scaled: dk done
+
+    @pl.when((r == rep - 1) & (qi == nq - 1))
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret"))
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
+                        window: int = 0, scale: float = None,
+                        interpret: bool = False):
+    """(dq, dk, dv) from the saved (q, k, v, o, lse) residuals."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    rep = H // K
+    assert S % BQ == 0 and S % BK == 0, (S, BQ, BK)
+    if scale is None:
+        scale = D ** -0.5
+    nq, nk = S // BQ, S // BK
+    kw = dict(causal=causal, window=int(window or 0), scale=float(scale))
+
+    delta = pl.pallas_call(
+        _delta_kernel,
+        grid=(B, H, nq),
+        in_specs=[
+            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi: (b, qi, h, 0)),
+            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi: (b, qi, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BQ), lambda b, h, qi: (b, h, qi)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        interpret=interpret,
+    )(o, do)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, nk=nk, **kw),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
+            pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((BQ, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv: one (BK, D) accumulator pair per kv head, swept over the GQA
+    # head group (r) and all q-blocks (qi) — grouped q-heads reduce into the
+    # shared kv head inside VMEM, never through HBM
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, rep=rep, nq=nq, **kw),
+        grid=(B, K, nk, rep, nq),
+        in_specs=[
+            pl.BlockSpec((1, BQ, 1, D),
+                         lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
+            pl.BlockSpec((1, BQ, 1, D),
+                         lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
+            pl.BlockSpec((1, 1, BQ),
+                         lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
+            pl.BlockSpec((1, 1, BQ),
+                         lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
+            pl.BlockSpec((1, BK, 1, D),
+                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, K, D), k.dtype),
+            jax.ShapeDtypeStruct((B, S, K, D), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((BK, D), jnp.float32),
+            pltpu.VMEM((BK, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

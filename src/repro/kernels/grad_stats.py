@@ -4,7 +4,8 @@ Feeds Tri-Accel's per-layer gradient-variance EMA (§3.1). The jnp fallback
 reads the gradient three times; this kernel reads each VMEM tile once and
 accumulates all three moments in fp32. The output block index_map is
 constant, so the (1, 3) accumulator stays resident across the sequential
-TPU grid; iteration 0 initializes it.
+TPU grid; iteration 0 initializes it. Block-aligned sizes reshape in place;
+only ragged tails take the zero-pad copy (kernels.layout.fold2d).
 """
 from __future__ import annotations
 
@@ -13,6 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.layout import fold2d
 
 BLOCK_M = 256
 BLOCK_N = 512
@@ -41,16 +44,11 @@ def _stats_kernel(x_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def grad_stats(x: jax.Array, interpret: bool = False):
     """Returns (sum, sum_sq, absmax) of ``x`` as fp32 scalars."""
-    n = x.size
-    cols = BLOCK_N
-    rows = -(-n // cols)
-    pad_rows = max(BLOCK_M, -(-rows // BLOCK_M) * BLOCK_M)
-    xf = jnp.zeros((pad_rows * cols,), x.dtype).at[:n].set(x.reshape(-1))
-    x2 = xf.reshape(pad_rows, cols)
+    x2 = fold2d(x, BLOCK_M, BLOCK_N, min_rows=BLOCK_M)
     out = pl.pallas_call(
         _stats_kernel,
-        grid=(pad_rows // BLOCK_M,),
-        in_specs=[pl.BlockSpec((BLOCK_M, cols), lambda i: (i, 0))],
+        grid=(x2.shape[0] // BLOCK_M,),
+        in_specs=[pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
         interpret=interpret,

@@ -1,0 +1,26 @@
+"""Shared HBM->tile folding for the elementwise/reduction kernels.
+
+``qdq_cast`` and ``grad_stats`` view any-shaped tensors as (rows, BLOCK_N)
+fp tiles. The original padding path — ``jnp.zeros(...).at[:n].set(...)`` —
+copies EVERY tensor through a scatter, even when the size is already
+block-aligned (the common case for weight matrices, whose trailing dims are
+powers of two). ``fold2d`` keeps the zero-pad only for ragged sizes and
+turns the aligned case into a pure metadata reshape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fold2d(x: jax.Array, block_m: int, cols: int,
+           min_rows: int = 0) -> jax.Array:
+    """Flatten ``x`` to (rows, cols) with rows a multiple of ``block_m``
+    (and >= ``min_rows``), zero-padding the tail only when needed."""
+    n = x.size
+    rows = -(-n // cols)
+    pad_rows = max(-(-rows // block_m) * block_m, min_rows)
+    if n == pad_rows * cols:
+        return x.reshape(pad_rows, cols)        # aligned: no pad copy
+    xf = jnp.zeros((pad_rows * cols,), x.dtype).at[:n].set(x.reshape(-1))
+    return xf.reshape(pad_rows, cols)

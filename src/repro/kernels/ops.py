@@ -3,10 +3,24 @@
 Off-TPU (this CPU container, unit tests) the kernels execute in interpret
 mode — the same kernel body traced with jnp semantics — so correctness is
 validated everywhere while the BlockSpec tiling targets TPU.
+
+``flash_attention`` here is a DIFFERENTIABLE op: the kernel path is bound
+to the Pallas backward kernels with ``jax.custom_vjp`` (forward emits the
+logsumexp residual; backward runs the dO·O preprocess, dQ, and dK/dV
+kernels), and the dispatch gate guards the whole differentiable op — a
+configuration the kernel cannot handle falls back to the chunked/naive jnp
+paths, which JAX differentiates natively. One asymmetry of custom_vjp:
+forward-mode AD (jax.jvp, used by the §3.2 curvature HVPs) cannot pass
+through it — trace-time callers that need jvp wrap themselves in
+``flash_fallback()`` (repro.train.task.curvature_loss does), which pins
+dispatch to the jnp paths.
 """
 from __future__ import annotations
 
+import contextlib
+import functools
 import operator
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +35,31 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def qdq_cast(x, code, ladder: str = "tpu"):
-    return _qc.qdq_cast(x, code, ladder=ladder, interpret=_interpret())
+def qdq_cast(x, code, ladder: str = "tpu", amax=None):
+    return _qc.qdq_cast(x, code, ladder=ladder, interpret=_interpret(),
+                        amax=amax)
 
 
 def grad_stats(x):
     return _gs.grad_stats(x, interpret=_interpret())
+
+
+# ------------------------------------------------------------ dispatch -----
+_FALLBACK = threading.local()
+
+
+@contextlib.contextmanager
+def flash_fallback(flag: bool = True):
+    """Trace-time escape hatch: force ``flash_attention`` below onto the jnp
+    fallback paths even when the kernel gate holds. Needed wherever the op
+    must support forward-mode AD (custom_vjp has no jvp rule) — the §3.2
+    curvature probes differentiate the loss with jvp-of-grad."""
+    prev = getattr(_FALLBACK, "flag", False)
+    _FALLBACK.flag = bool(flag)
+    try:
+        yield
+    finally:
+        _FALLBACK.flag = prev
 
 
 def _static_window(window):
@@ -58,23 +91,60 @@ def _is_std_arange(pos, batch: int, seqlen: int) -> bool:
     return bool((arr == np.arange(seqlen, dtype=arr.dtype)[None]).all())
 
 
+def kernel_shape_gate(q_shape, k_shape, v_shape) -> bool:
+    """Static part of the dispatch gate, shared with the roofline cost model
+    (roofline.costmodel.flash_skip_flags): self-attention with Sq == Sk
+    divisible by both block sizes, and matching q/k/v head dims (the kernels
+    tile one D; MLA training, whose qk dim != v dim, falls back)."""
+    Sq, Sk = q_shape[1], k_shape[1]
+    return (Sq == Sk and Sq % _fa.BQ == 0 and Sq % _fa.BK == 0
+            and q_shape[-1] == k_shape[-1] == v_shape[-1])
+
+
+# ----------------------------------------------- differentiable kernel op --
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_diff(q, k, v, causal, window, scale, interpret):
+    # primal (no differentiation): forward kernel without the residual write
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=interpret)
+
+
+def _flash_diff_fwd(q, k, v, causal, window, scale, interpret):
+    o, lse = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                     scale=scale, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_diff_bwd(causal, window, scale, interpret, res, do):
+    q, k, v, o, lse = res
+    return _fa.flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                   window=window, scale=scale,
+                                   interpret=interpret)
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
 def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
                     window=None, scale=None):
     """Drop-in for repro.nn.attention.attention that dispatches the Pallas
     kernel ONLY for configurations it computes correctly: self-attention
-    (Sq == Sk) divisible by the block sizes, a static integral window, and
-    positions statically equal to the standard arange (train/prefill).
-    Everything else — ragged/offset/packed positions, traced windows, tiny
-    sequences — runs the chunked or naive jnp path with positions honored."""
+    (Sq == Sk) divisible by the block sizes, matching head dims, a static
+    integral window, and positions statically equal to the standard arange
+    (train/prefill). Everything else — ragged/offset/packed positions,
+    traced windows, tiny sequences — runs the chunked or naive jnp path with
+    positions honored. BOTH paths are differentiable: the kernel through its
+    custom_vjp backward kernels, the fallbacks through JAX AD."""
     B, Sq = q.shape[0], q.shape[1]
     Sk = k.shape[1]
     win = _static_window(window)
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    if (win is not None and Sq == Sk and Sq % _fa.BQ == 0 and Sq % _fa.BK == 0
+    if (win is not None and not getattr(_FALLBACK, "flag", False)
+            and kernel_shape_gate(q.shape, k.shape, v.shape)
             and _is_std_arange(q_pos, B, Sq) and _is_std_arange(k_pos, B, Sk)):
-        return _fa.flash_attention(q, k, v, causal=causal, window=win,
-                                   scale=scale, interpret=_interpret())
+        return _flash_diff(q, k, v, bool(causal), win, float(scale),
+                           _interpret())
     from repro.nn.attention import _chunked_attention, _naive_attention
     if win is not None:                 # normalized static window (int or off)
         window = win if win > 0 else None

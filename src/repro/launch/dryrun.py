@@ -137,7 +137,10 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
             lowered = jitted.lower(state_sds, specs)
         tokens = shape.global_batch * shape.seq_len
         info["model_flops"] = model_flops(n_active, tokens, "train")
-        ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len)
+        # executed FLOPs follow the kernel path: impl="flash" configs skip
+        # fully-masked blocks in forward AND backward when the gate holds
+        ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len,
+                            **cm.flash_skip_flags(cfg, shape.seq_len))
         ec += cm.opt_traffic(n_total, slots=1)
         info["exec_costs"] = ec
         info["hbm_per_device"] = cm.hbm_estimate(
@@ -157,8 +160,9 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
             lowered = jitted.lower(pvals_bf16, specs)
         tokens = shape.global_batch * shape.seq_len
         info["model_flops"] = model_flops(n_active, tokens, "serve")
-        info["exec_costs"] = cm.prefill_costs(cfg, shape.global_batch,
-                                              shape.seq_len)
+        info["exec_costs"] = cm.prefill_costs(
+            cfg, shape.global_batch, shape.seq_len,
+            **cm.flash_skip_flags(cfg, shape.seq_len))
         info["hbm_per_device"] = cm.hbm_estimate(
             cfg, "prefill", shape.global_batch, shape.seq_len, chips, 1,
             n_total)

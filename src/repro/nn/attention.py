@@ -4,9 +4,16 @@ Three execution paths:
   * ``naive``   — materializes (Sq, Sk) scores; reference, tests, decode.
   * ``chunked`` — flash-style online-softmax double scan over (q, k) chunks;
                   pure jnp, lowers on any backend, O(q_chunk*k_chunk) score
-                  memory. This is what the dry-run lowers for 32k prefill.
+                  memory. The fallback when the kernel gate fails.
   * Pallas flash kernel (repro.kernels.flash_attention) — TPU target,
-    selected with impl="flash" (validated in interpret mode in tests).
+    selected with impl="flash" (the default for LM/enc-dec training
+    configs; validated in interpret mode in tests). Differentiable
+    end-to-end: kernels.ops binds the Pallas backward kernels with
+    jax.custom_vjp, so training runs the kernel in BOTH directions with
+    only the (B, H, S) logsumexp residual saved — no O(S*S/chunk)
+    score residuals. Configurations outside the dispatch gate (packed
+    positions, ragged lengths, MLA's split qk/v dims, traced windows)
+    fall back to chunked/naive, which JAX differentiates natively.
 
 Decode paths use full or ring (sliding-window) KV caches; MLA decode uses the
 compressed-cache *absorbed* formulation (cache holds only (c_kv, k_rope)).

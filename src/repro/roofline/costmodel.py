@@ -89,12 +89,17 @@ def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
             ctx = decode_ctx
             if bd.window:
                 ctx = min(float(bd.window), ctx)
+        elif bd.window and window_skip:
+            # flash kernel: masked blocks are skipped, executed ctx ~ window
+            ctx = min(float(bd.window), S)
         elif bd.window:
             # the chunked path executes a static band for static windows
             band = -(-(bd.window - 1 + a.q_chunk) // a.k_chunk) * a.k_chunk
             ctx = min(float(band), S)
         else:
-            ctx = _exec_ctx(S, 0, causal_skip, window_skip)
+            # causal block skipping only halves genuinely causal attention
+            # (enc-dec encoders are bidirectional even under the kernel)
+            ctx = _exec_ctx(S, 0, causal_skip and a.causal, window_skip)
         c += attn_core(T, ctx, H, D, D, K)
     elif bd.kind == "mla":
         m = sc.mla
@@ -201,6 +206,33 @@ def encdec_fwd_costs(cfg: EncDecConfig, B: float, S_enc: float, S_dec: float,
     c += gemm(T_dec, cfg.d_model, cfg.vocab_size)
     c += Costs(4 * T_dec * cfg.vocab_size, 0)
     return c
+
+
+def flash_skip_flags(cfg, seq_len: int) -> dict:
+    """Block-skip flags matching the kernels.ops dispatch gate: train and
+    prefill self-attention run the Pallas flash kernel — which SKIPS fully
+    masked blocks in forward AND backward — when the config selects
+    impl='flash' and the static gate holds (block-divisible S, matching
+    qk/v head dims; MLA training splits them, so it stays on chunked).
+    Feed the result to train_costs/prefill_costs so the roofline reflects
+    the kernel path's executed FLOPs."""
+    from repro.kernels.flash_attention import BK, BQ
+    if isinstance(cfg, EncDecConfig):
+        sc, S = cfg.dec_stack, seq_len // 2     # per-stack length
+    else:
+        sc, S = getattr(cfg, "stack", None), seq_len
+    if sc is None:                              # stackless (vision) configs
+        return {"causal_skip": False, "window_skip": False}
+    if sc.attn is not None:
+        eligible = sc.attn.impl == "flash"
+    elif sc.mla is not None:
+        m = sc.mla
+        eligible = (m.impl == "flash"
+                    and m.qk_nope_dim + m.qk_rope_dim == m.v_head_dim)
+    else:
+        eligible = False
+    eligible = eligible and S >= max(BQ, BK) and S % BQ == 0 and S % BK == 0
+    return {"causal_skip": eligible, "window_skip": eligible}
 
 
 # ------------------------------------------------------------- top level ---

@@ -34,9 +34,14 @@ from repro.train.task import VisionTask
 from repro.train.trainer import Trainer, TrainerConfig
 
 PAPER_FP32_GB = {"resnet18": 0.35, "efficientnet_b0": 0.301}
-# per-tier relative matmul throughput of the paper's target (T4-class):
-# fp16 tensor-core ~4x fp32; bf16 treated like fp16 tier for timing
-TIER_SPEED = {0: 4.0, 1: 4.0, 2: 1.0}
+# Per-tier relative matmul throughput, calibrated per precision LADDER for
+# the vision testbed. gpu (paper's T4-class target): fp16 tensor-core ~4x
+# fp32, bf16 treated like the fp16 tier. tpu (fp8_e4m3 QDQ ladder,
+# v5e-class): the MXU runs fp8 matmuls at ~2x the bf16 rate, bf16 ~4x the
+# fp32-emulation rate — the low tier buys speed AND the 1-byte activations
+# TIER_BYTES["tpu"] models for the §3.3 rung controller.
+TIER_SPEED = {"gpu": {0: 4.0, 1: 4.0, 2: 1.0},
+              "tpu": {0: 8.0, 1: 4.0, 2: 1.0}}
 
 
 def activation_elems(cfg: VisionConfig) -> float:
@@ -72,6 +77,10 @@ def _tac_for(method: str, mem_cap_gb: float) -> TriAccelConfig:
                 tau_low=3e-9, tau_high=1e-5, alpha=0.05, tau_curv=50.0,
                 mem_cap_bytes=mem_cap_gb * 1e9, rho_low=0.80, rho_high=0.92,
                 curvature_method="fisher")
+    if method == "triaccel_fp8":
+        # full method on the tpu ladder: low tier = per-tensor-amax
+        # fp8_e4m3 QDQ (core.precision._qdq_fp8) instead of fp16
+        return TriAccelConfig(**dict(base, ladder="tpu"))
     if method == "fp32":
         fp32 = dict(base, tau_high=-1.0)  # every layer above tau_high: fp32
         return TriAccelConfig(**fp32, enable_precision=False,
@@ -105,7 +114,8 @@ def vision_memory_model(cfg: VisionConfig, params) -> MemoryModel:
 _memory_model = vision_memory_model
 
 
-def _trajectory_time(metrics_log, method: str, steps: int) -> float:
+def _trajectory_time(metrics_log, method: str, steps: int,
+                     ladder: str = "gpu") -> float:
     """Integrate the tier-speed model over the ACTUAL (rung, codes)
     trajectory: modeled time for step t is rung_t / speed_t, where speed_t
     is the layer-weighted mean tier throughput at that step. Returns the
@@ -113,16 +123,17 @@ def _trajectory_time(metrics_log, method: str, steps: int) -> float:
 
     (Earlier revisions used only the FINAL rung/codes, so Table 1/2 numbers
     ignored the elastic schedule entirely.)"""
+    spd = TIER_SPEED[ladder]
     total = 0.0
     for m in metrics_log:
         if method == "fp32":
-            speed = TIER_SPEED[2]
+            speed = spd[2]
         elif method == "amp":
-            speed = TIER_SPEED[1]
+            speed = spd[1]
         else:
             lo, hi = m["frac_low"], m["frac_fp32"]
             mid = max(0.0, 1.0 - lo - hi)
-            speed = lo * TIER_SPEED[0] + mid * TIER_SPEED[1] + hi * TIER_SPEED[2]
+            speed = lo * spd[0] + mid * spd[1] + hi * spd[2]
         total += m["rung"] / max(speed, 1e-9)
     # metrics_log covers every step (log_every=1); guard anyway
     covered = max(len(metrics_log), 1)
@@ -178,8 +189,8 @@ def run_method(method: str, arch: str = "resnet18", steps: int = 60,
         codes = [2] * len(codes)
     elif method == "amp":
         codes = [1] * len(codes)
-    model_time = _trajectory_time(log, method, steps) / max(steps, 1)
-    mem_gb = mm.total(scaler.microbatch, codes=codes, ladder="gpu") / 1e9
+    model_time = _trajectory_time(log, method, steps, tac.ladder) / max(steps, 1)
+    mem_gb = mm.total(scaler.microbatch, codes=codes, ladder=tac.ladder) / 1e9
     # wall only covers the steps actually run THIS process (resume-aware)
     wall_epoch = wall * epoch_steps / max(ran, 1)
     mem_pct = mem_gb / (tac.mem_cap_bytes / 1e9)

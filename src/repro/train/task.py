@@ -128,8 +128,15 @@ class TrainTask:
         return MemoryModel(param_count=n / mesh_size, opt_slots=opt_slots)
 
     def curvature_loss(self, params, aux_state, batch) -> jax.Array:
-        """Scalar loss for §3.2 curvature probes (no QDQ, no loss scale)."""
-        return self.loss(params, aux_state, batch, None, None)[0]
+        """Scalar loss for §3.2 curvature probes (no QDQ, no loss scale).
+
+        Pinned to the jnp attention paths: the hutchinson/power probes
+        differentiate this with jvp-of-grad, and forward-mode AD cannot
+        cross the flash kernel's custom_vjp (repro.kernels.ops). The probe
+        batches are b_curv-sized, so the fallback costs nothing."""
+        from repro.kernels.ops import flash_fallback
+        with flash_fallback():
+            return self.loss(params, aux_state, batch, None, None)[0]
 
     # --------------------------------------------------------- serving ----
     #: True -> the task serves through init_cache/prefill/decode; False ->

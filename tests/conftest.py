@@ -1,5 +1,29 @@
+import contextlib
 import os
 import sys
 
 # tests run on 1 CPU device (the dry-run, and ONLY the dry-run, forces 512)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@contextlib.contextmanager
+def count_flash_kernel_calls():
+    """Patch the Pallas flash fwd/bwd entry points with counting wrappers;
+    yields a {"fwd": n, "bwd": n} dict updated per (trace-time) call."""
+    from repro.kernels import flash_attention as _fa
+    calls = {"fwd": 0, "bwd": 0}
+    orig_fwd, orig_bwd = _fa.flash_attention_fwd, _fa.flash_attention_bwd
+
+    def _count(name, orig):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return orig(*a, **kw)
+        return wrapper
+
+    _fa.flash_attention_fwd = _count("fwd", orig_fwd)
+    _fa.flash_attention_bwd = _count("bwd", orig_bwd)
+    try:
+        yield calls
+    finally:
+        _fa.flash_attention_fwd = orig_fwd
+        _fa.flash_attention_bwd = orig_bwd

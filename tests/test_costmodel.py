@@ -32,6 +32,33 @@ def test_train_flops_bracket_model_flops(arch):
     assert 0.9 * model <= exec_ <= 6.0 * model, (arch, exec_ / model)
 
 
+def test_flash_skip_flags_follow_dispatch_gate():
+    """The roofline skip flags mirror kernels.ops: causal block skipping
+    cuts executed train FLOPs for flash-impl attention archs, while MLA
+    (split qk/v dims) and attention-free archs stay on the full-sweep
+    numbers."""
+    s = get_arch_module("smollm-135m").config()
+    fl = cm.flash_skip_flags(s, 4096)
+    assert fl["causal_skip"] and fl["window_skip"]
+    assert cm.train_costs(s, 8, 4096, **fl).flops < \
+        cm.train_costs(s, 8, 4096).flops
+    # non-block-divisible S fails the gate
+    assert not cm.flash_skip_flags(s, 100)["causal_skip"]
+    for arch in ("deepseek-v2-lite-16b", "mamba2-370m"):
+        cfg = get_arch_module(arch).config()
+        fl = cm.flash_skip_flags(cfg, 4096)
+        assert not fl["causal_skip"]
+        assert cm.train_costs(cfg, 8, 4096, **fl).flops == \
+            cm.train_costs(cfg, 8, 4096).flops
+    # enc-dec: decoder-causal skipping must NOT halve the bidirectional
+    # encoder, so the saving stays below a pure-causal arch's
+    e = get_arch_module("seamless-m4t-large-v2").config()
+    fl = cm.flash_skip_flags(e, 4096)
+    assert fl["causal_skip"]
+    assert cm.train_costs(e, 8, 4096, **fl).flops < \
+        cm.train_costs(e, 8, 4096).flops
+
+
 def test_decode_costs_scale_with_cache():
     cfg = get_arch_module("stablelm-1.6b").config()
     a = cm.decode_costs(cfg, 128, 1024).flops

@@ -1,0 +1,104 @@
+"""Training on the flash-kernel path (ISSUE 4): LM configs default to
+impl="flash"; the trainer must reach the Pallas forward/backward kernels
+under jit, stay zero-recompile across precision-code changes, and keep the
+curvature probes (forward-mode AD) working via the fallback context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import TriAccelConfig
+from repro.models.lm import LMConfig, lm_init, lm_loss
+from repro.nn.attention import AttnConfig
+from repro.nn.blocks import BlockDef, StackConfig
+from repro.train.task import LMTask
+from repro.train.trainer import Trainer, TrainerConfig
+
+SEQ = 256                        # one flash block: the kernel gate holds
+
+
+def _flash_lm(impl="flash", window=0):
+    attn = AttnConfig(d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                      rope_theta=10000.0, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("gqa", "dense", window=window),),
+                                   2),),
+                        d_model=32, d_ff=64, attn=attn, act="silu")
+    return LMConfig(name="flash-tiny", family="dense", vocab_size=64,
+                    stack=stack, tie_embeddings=True)
+
+
+def _trainer(tac_kw=None, tcfg_kw=None):
+    tac = TriAccelConfig(**{**dict(ladder="tpu", t_ctrl=2,
+                                   enable_curvature=False,
+                                   enable_batch=False, mem_cap_bytes=8e9),
+                            **(tac_kw or {})})
+    tcfg = TrainerConfig(total_steps=4, seq_len=SEQ, rungs=(2,),
+                         log_every=1000, base_lr=1e-3, b_curv=2,
+                         **(tcfg_kw or {}))
+    return Trainer(LMTask(_flash_lm()), tac, tcfg)
+
+
+def test_configs_default_to_flash_impl():
+    """Every full LM/enc-dec attention config selects the kernel path."""
+    from repro.models.registry import get_arch_module, list_architectures
+    from repro.models.encdec import EncDecConfig
+    for arch in list_architectures():
+        cfg = get_arch_module(arch).config()
+        if isinstance(cfg, EncDecConfig):
+            assert cfg.enc_stack.attn.impl == "flash", arch
+            assert cfg.dec_stack.attn.impl == "flash", arch
+        elif getattr(cfg, "stack", None) is None:
+            continue                             # vision
+        elif cfg.stack.attn is not None:
+            assert cfg.stack.attn.impl == "flash", arch
+        elif cfg.stack.mla is not None:
+            assert cfg.stack.mla.impl == "flash", arch
+
+
+def test_flash_loss_grads_match_chunked_impl():
+    """End-to-end through models/lm: gradients on the kernel path equal the
+    chunked-impl gradients (same dtypes, same graph otherwise)."""
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (2, SEQ), 0, 64),
+             "labels": jax.random.randint(key, (2, SEQ), 0, 64)}
+    grads = {}
+    for impl in ("flash", "chunked"):
+        cfg = _flash_lm(impl=impl)
+        params = lm_init(jax.random.PRNGKey(1), cfg)
+        from repro.nn.module import split_params
+        pvals, _ = split_params(params)
+        loss = lambda p: lm_loss(p, batch, cfg)[0]
+        grads[impl] = jax.jit(jax.grad(loss))(pvals)
+    for a, b in zip(jax.tree.leaves(grads["flash"]),
+                    jax.tree.leaves(grads["chunked"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_trainer_flash_zero_recompile_across_code_changes():
+    """AOT-warmed flash-impl training: precision-code changes (the §3.1
+    lax.switch actuation) dispatch into the SAME executable — and the
+    Pallas fwd/bwd kernels are what the executable was traced from."""
+    from conftest import count_flash_kernel_calls
+    with count_flash_kernel_calls() as calls:
+        tr = _trainer()
+        tr.warm_rungs()
+    assert calls["fwd"] >= 1 and calls["bwd"] >= 1, calls
+    assert tr.compile_count == 1
+
+    tr.run(2)
+    for codes in (0, 2):                  # force both precision extremes
+        tr.state = tr.state._replace(control=tr.state.control._replace(
+            codes=jnp.full_like(tr.state.control.codes, codes)))
+        tr.run(1)
+    assert tr.compile_count == 1          # zero post-warm recompiles
+    assert all(np.isfinite(m["loss"]) for m in tr.metrics_log)
+
+
+def test_curvature_probes_cross_flash_impl():
+    """hutchinson curvature = jvp(grad): must not crash on a flash-impl
+    model — curvature_loss pins itself to the jnp fallback paths."""
+    tr = _trainer(tac_kw=dict(enable_curvature=True,
+                              curvature_method="hutchinson", t_curv=2))
+    tr.run(3)                             # crosses the t_curv cadence
+    lam = np.asarray(jax.device_get(tr.state.control.lam))
+    assert np.isfinite(lam).all()

@@ -172,6 +172,167 @@ def test_flash_kernel_reachable_under_jit_via_std_positions():
     np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=3e-6)
 
 
+# --------------------------------------- backward kernels / custom_vjp -----
+def _grad_pair(fn_got, fn_want, q, k, v, atol):
+    loss_g = lambda q, k, v: jnp.sum(jnp.square(
+        fn_got(q, k, v).astype(jnp.float32)))
+    loss_w = lambda q, k, v: jnp.sum(jnp.square(
+        fn_want(q, k, v).astype(jnp.float32)))
+    got = jax.grad(loss_g, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_w, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        assert g.dtype == w.dtype
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), atol=atol,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("HK", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_grad(HK, causal, window, dtype):
+    """jax.grad through the kernel path (Pallas bwd kernels via custom_vjp)
+    matches the jnp reference gradients across causal x window x GQA x
+    dtype."""
+    H, K = HK
+    B, S, D = 2, 256, 32
+    q = jax.random.normal(KEY, (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, D)).astype(dtype)
+    atol = 5e-5 if dtype == jnp.float32 else 1.2e-1
+    _grad_pair(
+        lambda q, k, v: ops.flash_attention(q, k, v, causal=causal,
+                                            window=window),
+        lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                window=window),
+        q, k, v, atol)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100),
+                                           (False, 300)])
+def test_flash_attention_grad_multiblock(causal, window):
+    """S > BQ: the dQ k-block sweep, the dK/dV q-block x head-group
+    accumulation, and backward block skipping all cross tile boundaries
+    (S=512 -> nq=nk=2), which the S=256 grid above never exercises."""
+    B, S, H, K, D = 1, 512, 4, 2, 32
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, D))
+    _grad_pair(
+        lambda q, k, v: ops.flash_attention(q, k, v, causal=causal,
+                                            window=window),
+        lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                window=window),
+        q, k, v, 1e-4)
+
+
+def test_flash_grad_fallback_packed_positions():
+    """Packed positions stay on the jnp fallback AND are differentiable —
+    gradients match the naive oracle with the same positions."""
+    from repro.nn.attention import _naive_attention
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    pos = jnp.broadcast_to((jnp.arange(S, dtype=jnp.int32) % 128)[None],
+                           (B, S))
+    _grad_pair(
+        lambda q, k, v: ops.flash_attention(q, k, v, pos, pos, causal=True,
+                                            window=16),
+        lambda q, k, v: _naive_attention(q, k, v, pos, pos, True, 16,
+                                         D ** -0.5),
+        q, k, v, 5e-5)
+
+
+def test_flash_bwd_kernels_reached_under_jit():
+    """Under jit + grad with the std-positions hint, the Pallas forward
+    (residual-emitting) and backward kernels are the ones executing."""
+    from conftest import count_flash_kernel_calls
+    from repro.nn.attention import attention, std_positions
+
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+    with count_flash_kernel_calls() as calls:
+        @jax.jit
+        def g(q, k, v):
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S))
+            with std_positions():
+                out = attention(q, k, v, pos, pos, causal=True, window=None,
+                                scale=D ** -0.5, impl="flash")
+            return jnp.sum(jnp.square(out))
+
+        jax.grad(g)(q, k, v)
+    assert calls["fwd"] >= 1 and calls["bwd"] >= 1, calls
+
+
+def test_flash_fallback_context_supports_jvp():
+    """flash_fallback() pins dispatch to the jnp paths, which DO support
+    forward-mode AD (the §3.2 curvature hvp = jvp of grad); without it the
+    kernel path's custom_vjp rejects jvp."""
+    B, S, D = 1, 256, 16
+    q, k, v = _qkv(B=B, S=S, D=D)
+
+    def loss(q):
+        with ops.flash_fallback():
+            return jnp.sum(jnp.square(ops.flash_attention(q, k, v)))
+
+    g = lambda q: jax.grad(loss)(q)
+    _, hv = jax.jvp(g, (q,), (jnp.ones_like(q),))
+    assert np.isfinite(np.asarray(hv)).all()
+    # without the context the kernel path rejects forward-mode (TypeError
+    # from custom_vjp, or the Pallas jvp rule giving up first)
+    with pytest.raises((TypeError, AssertionError, NotImplementedError)):
+        bad = lambda q: jax.grad(
+            lambda q: jnp.sum(jnp.square(ops.flash_attention(q, k, v))))(q)
+        jax.jvp(bad, (q,), (jnp.ones_like(q),))
+
+
+# ----------------------------------------------- fused qdq amax / padding --
+def test_qdq_amax_argument_matches_fused():
+    """Callers holding the grad_stats absmax skip the in-kernel reduction
+    phase and get bit-identical output."""
+    x = jax.random.normal(KEY, (300, 300)) * 2
+    _, _, amax = ops.grad_stats(x)
+    got = ops.qdq_cast(x, jnp.asarray(0), "tpu", amax=amax)
+    want = ops.qdq_cast(x, jnp.asarray(0), "tpu")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("op", ["qdq", "stats"])
+def test_block_aligned_fold_skips_pad_copy(op):
+    """Block-aligned tensors (the weight-matrix common case) must reshape in
+    place — no zeros+scatter pad; ragged tails still pad."""
+    if op == "qdq":
+        fn = lambda x: ops.qdq_cast(x, jnp.asarray(1), "tpu")
+    else:
+        fn = lambda x: ops.grad_stats(x)
+    aligned = str(jax.make_jaxpr(fn)(jnp.ones((1024, 512))))
+    ragged = str(jax.make_jaxpr(fn)(jnp.ones((1000, 37))))
+    assert "scatter" not in aligned
+    assert "scatter" in ragged
+
+
+# ------------------------------------------------------- bench smoke (CI) --
+@pytest.mark.slow
+def test_kernels_bench_emits_all_rows(capsys):
+    """benchmarks/kernels_bench.py as a CI smoke leg: every CSV row —
+    including the new fwd+bwd timings over the seqlen sweep — must be
+    emitted (interpret mode)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import kernels_bench
+    kernels_bench.main()
+    out = capsys.readouterr().out
+    expected = ["qdq_cast_pallas_1M", "qdq_cast_ref_1M",
+                "grad_stats_pallas_1M", "grad_stats_ref_1M"]
+    for S in kernels_bench.ATTN_SEQ_SWEEP:
+        for impl in ("flash", "chunked"):
+            expected += [f"attn_{impl}_fwd_S{S}", f"attn_{impl}_fwdbwd_S{S}"]
+    for name in expected:
+        assert f"kernels:{name}," in out, name
+
+
 def test_flash_window_numpy_int_on_fallback_path():
     """Same numpy-int window on a non-kernel shape (S not divisible by the
     block size) — both paths must agree with the windowed naive oracle."""
