@@ -8,6 +8,13 @@ chunked-jnp oracle that training used before the kernel path — the
 fwd+bwd rows are the training-step numbers the roofline's flash skip flags
 model.
 
+The update-phase sweep times the fused slab kernels (stats + apply: the
+whole post-backward path incl. the next-step cast) against the jnp
+reference chain (finite + norm + clip + moments + momentum update + apply
++ cast) per param count; the derived column carries each side's modeled
+HBM bytes (roofline.costmodel.update_phase_bytes — 2 gradient reads fused
+vs 7 on the reference) and the measured speedup.
+
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
@@ -18,8 +25,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.kernels.fused_update import OptSpec
+from repro.kernels.layout import SLAB_M, SLAB_N
+from repro.roofline.costmodel import update_phase_bytes
 
 ATTN_SEQ_SWEEP = (256, 512, 1024)
+UPDATE_PARAM_SWEEP = (1 << 18, 1 << 20, 1 << 22)
 
 
 def _time(fn, *args, iters=5):
@@ -63,6 +74,56 @@ def _attn_rows(key, causal=True, window=0):
     return rows
 
 
+def _update_rows(key):
+    """Fused slab update (stats + apply) vs the jnp reference chain, per
+    param count."""
+    spec = OptSpec(kind="sgdm", momentum=0.9, weight_decay=1e-4)
+    rows = []
+    for n in UPDATE_PARAM_SWEEP:
+        R = n // SLAB_N
+        g = jax.random.normal(key, (R, SLAB_N))
+        p = jax.random.normal(jax.random.fold_in(key, 1), (R, SLAB_N))
+        mu = jnp.zeros((R, SLAB_N))
+        row_layer = jnp.zeros((R // SLAB_M, SLAB_M), jnp.int32)
+        ones_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.float32)
+        code_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.int32)
+
+        @jax.jit
+        def fused(g, p, mu):
+            _, ss, _, nf = ops.fused_stats(g, row_layer, 1)
+            gn = jnp.sqrt(jnp.sum(ss))
+            clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+            scalars = jnp.stack([clip, (jnp.sum(nf) == 0).astype(jnp.float32),
+                                 jnp.float32(1.0), jnp.float32(1.0)])
+            return ops.fused_apply(
+                g, p, mu, None, scalars, row_layer, ones_r * 1e-3, code_r,
+                ones_r, spec=spec, ladder="tpu", cp_dtype=jnp.bfloat16,
+                num_layers=1)[0]
+
+        @jax.jit
+        def reference(g, p, mu):
+            finite = jnp.all(jnp.isfinite(g))
+            gn = jnp.sqrt(jnp.sum(jnp.square(g)))
+            clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+            g2 = g * clip
+            s, ss = jnp.sum(g2), jnp.sum(jnp.square(g2))      # moments
+            mu2 = 0.9 * mu + (g2 + 1e-4 * p)
+            p2 = jnp.where(finite, p - 1e-3 * mu2, p)
+            cp = p2.astype(jnp.bfloat16)                      # next-step cast
+            return p2, (s, ss, cp)
+
+        t_f = _time(fused, g, p, mu)
+        t_r = _time(reference, g, p, mu)
+        mb_f = update_phase_bytes(n, 1, fused=True) / 1e6
+        mb_r = update_phase_bytes(n, 1, fused=False) / 1e6
+        rows.append((f"update_fused_{n}", t_f,
+                     f"model {mb_f:.1f}MB (2 grad reads); "
+                     f"speedup x{t_r / max(t_f, 1e-9):.2f} vs jnp"))
+        rows.append((f"update_ref_{n}", t_r,
+                     f"model {mb_r:.1f}MB (7 grad reads), jnp oracle"))
+    return rows
+
+
 def main():
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (1024, 1024))
@@ -77,6 +138,7 @@ def main():
     rows.append(("grad_stats_ref_1M",
                  _time(jax.jit(ref.grad_stats_ref), x), "jnp oracle"))
     rows.extend(_attn_rows(key))
+    rows.extend(_update_rows(key))
     for name, us, derived in rows:
         print(f"kernels:{name},{us:.1f},{derived}")
 

@@ -1,9 +1,11 @@
 """§Roofline table: reads the dry-run artifacts and emits, per
 (arch x shape x mesh): the three roofline terms, dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPs ratio, and HBM fit.
+MODEL_FLOPS/HLO_FLOPs ratio, HBM fit, and — for train cells — the
+update-phase byte model (fused slab sweep: 2 gradient reads + 2 writes;
+reference: >= 6 reads; repro.roofline.costmodel.update_phase_bytes).
 
 CSV: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,
-     useful_ratio,hbm_gb,fits
+     useful_ratio,hbm_gb,fits,upd_gb,upd_fused
 """
 from __future__ import annotations
 
@@ -28,15 +30,18 @@ def rows(mesh: str = None):
 
 def main():
     print("roofline:arch,shape,mesh,profile,compute_s,memory_s,collective_s,"
-          "dominant,useful_ratio,hbm_gb,fits")
+          "dominant,useful_ratio,hbm_gb,fits,upd_gb,upd_fused")
     for d in rows():
+        upd = d.get("update_phase_bytes")
         print("roofline:" + ",".join([
             d["arch"], d["shape"], d["mesh"], d.get("profile", "baseline"),
             f"{d['compute_s']:.4g}", f"{d['memory_s']:.4g}",
             f"{d['collective_s']:.4g}", d["dominant"],
             f"{(d.get('useful_flop_ratio') or 0):.3f}",
             f"{d['hbm_per_device_bytes'] / 1e9:.2f}",
-            str(d["fits_hbm"])]))
+            str(d["fits_hbm"]),
+            f"{upd / 1e9:.2f}" if upd else "-",
+            str(d.get("update_fused", "-"))]))
     skipped = [json.load(open(fn)) for fn in
                sorted(glob.glob(os.path.join(ART, "*.json")))]
     nsk = sum(1 for d in skipped if d.get("status") == "skipped")

@@ -1,0 +1,296 @@
+"""Fused update phase: one Pallas slab sweep for stats + clip + optimizer +
+master update + next-step cast (DESIGN.md §9).
+
+The reference post-backward path is six independent HBM passes over the
+full gradient footprint (``_tree_finite``, ``global_norm``, clip,
+``grouping.moments``, ``opt.update``, ``apply_updates`` in
+repro.train.train_step) plus a seventh full read in the next step's
+``cast_params``. This module replaces all of them with TWO slab sweeps
+over the ``SlabView`` layout (kernels.layout):
+
+  phase 1  ``stats_kernel``   — reads each gradient tile once, reduces
+           per-row (sum, sum_sq, absmax, nonfinite) and segment-combines
+           them into per-LAYER accumulators in-kernel via a one-hot matmul
+           against the static per-row layer ids (subsuming grad_stats,
+           _tree_finite and global_norm: the global sq-norm is the sum of
+           the per-layer sum_sq, the finite gate is nonfinite == 0).
+
+  (scalar combine, jnp, O(L))  — loss-scale/accum unscale, global clip
+           coefficient, variance-EMA control update, curvature-scaled lr
+           table, next codes, fp8 cast scales from the carried per-layer
+           param absmax.
+
+  phase 2  ``apply_kernel``   — reads each gradient tile a second (final)
+           time together with the master/momentum tiles and applies
+           unscale -> clip -> momentum/Adam moment update -> per-row
+           curvature-scaled lr step -> fp32 master write -> and, in the
+           same tile, the next step's low-precision compute copy (the
+           qdq_cast tier-select math with per-row cast scales), while
+           max-accumulating the per-layer absmax of the fresh compute
+           copy — next step's fp8 scales, one step delayed (standard
+           delayed-scaling semantics; the reference path re-reduces a
+           fresh per-tensor amax instead).
+
+Per-layer control scalars reach the kernels as per-row (1, SLAB_M) vectors
+gathered outside (footprint/SLAB_N elements — negligible), so precision
+codes, lr scales and cast scales are all runtime values: one compiled
+kernel serves every control decision with zero recompiles.
+
+Gradient-footprint traffic: 2 reads + 2 writes (master + compute copy)
+versus >= 6 reads + 4 writes on the reference path —
+``roofline.costmodel.update_phase_bytes`` is the shared byte model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.layout import SLAB_M, SLAB_N, SlabView
+
+FP8_MAX = 448.0
+
+# add-accumulated stat columns (phase-1 output)
+COL_SUM, COL_SQ, COL_NF = 0, 1, 2
+
+
+def _l_pad(num_layers: int) -> int:
+    return max(8, -(-num_layers // 8) * 8)
+
+
+def _one_hot(ids, l_pad: int):
+    """(l_pad, SLAB_M) float mask from a (SLAB_M,) int32 layer-id vector."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (l_pad, SLAB_M), 0)
+    return (iota == ids[None, :]).astype(jnp.float32)
+
+
+# =============================================================== phase 1 ===
+def _stats_kernel(layer_ref, x_ref, add_ref, max_ref, *, l_pad: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                       # (SLAB_M, SLAB_N)
+    ok = jnp.isfinite(x)
+    # non-finite lanes are COUNTED (rnf drives the global skip gate) but
+    # excluded from the moments: a raw inf/nan would turn the one-hot
+    # segment matmul into 0*inf = NaN for EVERY layer and permanently
+    # poison the whole var_ema (the jnp reference merely NaNs the
+    # offending layer; the fused path keeps even that layer's EMA alive
+    # across overflow steps — the skipped step contributes its finite
+    # lanes only)
+    xf = jnp.where(ok, x, 0.0)
+    rs = jnp.sum(xf, axis=1, keepdims=True)                  # (SLAB_M, 1)
+    rss = jnp.sum(jnp.square(xf), axis=1, keepdims=True)
+    rnf = jnp.sum(jnp.where(ok, 0.0, 1.0), axis=1, keepdims=True)
+    rmx = jnp.max(jnp.abs(xf), axis=1)                       # (SLAB_M,)
+
+    onehot = _one_hot(layer_ref[0, :], l_pad)
+    stacked = jnp.concatenate(
+        [rs, rss, rnf, jnp.zeros((SLAB_M, 128 - 3), jnp.float32)], axis=1)
+    add_up = jnp.dot(onehot, stacked, preferred_element_type=jnp.float32)
+    mx_up = jnp.max(jnp.where(onehot > 0, rmx[None, :], 0.0), axis=1)
+    mx_up = jnp.broadcast_to(mx_up[:, None], (l_pad, 128))
+
+    @pl.when(i == 0)
+    def _init():
+        add_ref[...] = add_up
+        max_ref[...] = mx_up
+
+    @pl.when(i > 0)
+    def _acc():
+        add_ref[...] += add_up
+        max_ref[...] = jnp.maximum(max_ref[...], mx_up)
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers", "interpret"))
+def fused_stats(g_slab: jax.Array, row_layer: jax.Array, num_layers: int,
+                interpret: bool = False):
+    """One gradient read -> per-layer (sum, sum_sq, absmax, nonfinite).
+
+    ``row_layer`` is the SlabView's static (n_tiles, SLAB_M) layer-id
+    blocks. Returns four (num_layers,) fp32 vectors."""
+    l_pad = _l_pad(num_layers)
+    nb = g_slab.shape[0] // SLAB_M
+    add, mx = pl.pallas_call(
+        functools.partial(_stats_kernel, l_pad=l_pad),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, SLAB_M), lambda i: (i, 0)),     # layer ids
+            pl.BlockSpec((SLAB_M, SLAB_N), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((l_pad, 128), lambda i: (0, 0)),
+                   pl.BlockSpec((l_pad, 128), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((l_pad, 128), jnp.float32),
+                   jax.ShapeDtypeStruct((l_pad, 128), jnp.float32)],
+        interpret=interpret,
+    )(row_layer, g_slab)
+    L = num_layers
+    return add[:L, COL_SUM], add[:L, COL_SQ], mx[:L, 0], add[:L, COL_NF]
+
+
+# =============================================================== phase 2 ===
+class OptSpec(NamedTuple):
+    """Static optimizer hyperparameters the kernel specializes on (carried
+    on ``Optimizer.spec`` by repro.optim.optimizers)."""
+    kind: str                   # "sgdm" | "adamw"
+    momentum: float = 0.9
+    nesterov: bool = False
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def _tier_select(cwf, code, qs, ladder: str):
+    """qdq_cast's tier math with a per-ROW fp8 scale column ``qs``."""
+    if ladder == "tpu":
+        low = (cwf * qs).astype(jnp.float8_e4m3fn).astype(jnp.float32) / qs
+    else:
+        low = cwf.astype(jnp.float16).astype(jnp.float32)
+    mid = cwf.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.where(code == 0, low, jnp.where(code == 1, mid, cwf))
+
+
+def _apply_kernel(scal_ref, layer_ref, lr_ref, code_ref, qs_ref,
+                  g_ref, p_ref, m_ref, v_ref,
+                  p_out, m_out, v_out, cp_out, pmax_ref,
+                  *, spec: OptSpec, ladder: str, l_pad: int):
+    """(scalars) = [gscale, keep, c1, c2]; ``v_ref``/``v_out`` are None for
+    sgdm (momentum rides in ``m``)."""
+    i = pl.program_id(0)
+    gscale = scal_ref[0]
+    keep = scal_ref[1] > 0.0
+    g = g_ref[...].astype(jnp.float32) * gscale              # unscale + clip
+    p = p_ref[...].astype(jnp.float32)
+
+    if spec.kind == "sgdm":
+        if spec.weight_decay:
+            g = g + spec.weight_decay * p
+        m2 = spec.momentum * m_ref[...] + g
+        step = (spec.momentum * m2 + g) if spec.nesterov else m2
+        v2 = None
+    else:                                                    # adamw
+        m2 = spec.b1 * m_ref[...] + (1.0 - spec.b1) * g
+        v2 = spec.b2 * v_ref[...] + (1.0 - spec.b2) * jnp.square(g)
+        step = (m2 / scal_ref[2]) / (jnp.sqrt(v2 / scal_ref[3]) + spec.eps)
+        if spec.weight_decay:
+            step = step + spec.weight_decay * p
+
+    lr = lr_ref[...].reshape(SLAB_M, 1)
+    pn = p - lr * step
+    pn = jnp.where(keep, pn, p)                              # non-finite skip
+    m2 = jnp.where(keep, m2, m_ref[...])
+    p_out[...] = pn
+    m_out[...] = m2
+    if v2 is not None:
+        v_out[...] = jnp.where(keep, v2, v_ref[...])
+
+    # ---- next-step compute copy: container cast + tier rounding ----------
+    cwf = pn.astype(cp_out.dtype).astype(jnp.float32)
+    code = code_ref[...].reshape(SLAB_M, 1)
+    qs = qs_ref[...].reshape(SLAB_M, 1)
+    cp_out[...] = _tier_select(cwf, code, qs, ladder).astype(cp_out.dtype)
+
+    # per-layer absmax of the fresh compute copy (next step's fp8 scales)
+    onehot = _one_hot(layer_ref[0, :], l_pad)
+    rmx = jnp.max(jnp.abs(cwf), axis=1)
+    mx_up = jnp.broadcast_to(
+        jnp.max(jnp.where(onehot > 0, rmx[None, :], 0.0), axis=1)[:, None],
+        (l_pad, 128))
+
+    @pl.when(i == 0)
+    def _init():
+        pmax_ref[...] = mx_up
+
+    @pl.when(i > 0)
+    def _acc():
+        pmax_ref[...] = jnp.maximum(pmax_ref[...], mx_up)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "ladder", "cp_dtype",
+                                             "num_layers", "interpret"))
+def fused_apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
+                lr_rows, code_rows, qs_rows, *, spec: OptSpec, ladder: str,
+                cp_dtype, num_layers: int, interpret: bool = False):
+    """Second (final) gradient read: optimizer + master write + cast.
+
+    Returns (p_new, m_new, v_new | None, compute_copy, p_amax(L,))."""
+    l_pad = _l_pad(num_layers)
+    nb = g_slab.shape[0] // SLAB_M
+    adam = spec.kind == "adamw"
+
+    def kernel(scal, layer, lr, code, qs, g, p, m, *rest):
+        if adam:
+            v, p_o, m_o, v_o, cp_o, pmax = rest
+        else:
+            p_o, m_o, cp_o, pmax = rest
+            v, v_o = None, None
+        _apply_kernel(scal, layer, lr, code, qs, g, p, m, v,
+                      p_o, m_o, v_o, cp_o, pmax,
+                      spec=spec, ladder=ladder, l_pad=l_pad)
+
+    row_spec = pl.BlockSpec((1, SLAB_M), lambda i: (i, 0))
+    slab_spec = pl.BlockSpec((SLAB_M, SLAB_N), lambda i: (i, 0))
+    acc_spec = pl.BlockSpec((l_pad, 128), lambda i: (0, 0))
+    slab_sds = jax.ShapeDtypeStruct(p_slab.shape, jnp.float32)
+
+    in_specs = [pl.BlockSpec((4,), lambda i: (0,)),          # scalars
+                row_spec, row_spec, row_spec, row_spec,
+                slab_spec, slab_spec, slab_spec]
+    args = [scalars, row_layer, lr_rows, code_rows, qs_rows,
+            g_slab, p_slab, m_slab]
+    out_specs = [slab_spec, slab_spec]
+    out_shape = [slab_sds, slab_sds]
+    if adam:
+        in_specs.append(slab_spec)
+        args.append(v_slab)
+        out_specs.append(slab_spec)
+        out_shape.append(slab_sds)
+    out_specs += [slab_spec, acc_spec]
+    out_shape += [jax.ShapeDtypeStruct(p_slab.shape, cp_dtype),
+                  jax.ShapeDtypeStruct((l_pad, 128), jnp.float32)]
+
+    outs = pl.pallas_call(
+        kernel, grid=(nb,), in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*args)
+    if adam:
+        p_new, m_new, v_new, cp, pmax = outs
+    else:
+        (p_new, m_new, cp, pmax), v_new = outs, None
+    return p_new, m_new, v_new, cp, pmax[:num_layers, 0]
+
+
+# ===================================================== jnp-side helpers ===
+def cast_scales(p_amax: jax.Array) -> jax.Array:
+    """Per-layer fp8 cast scales from the carried param absmax (identical to
+    qdq_cast's in-kernel derivation)."""
+    return jnp.where(p_amax > 0, FP8_MAX / p_amax, 1.0)
+
+
+def seed_compute(view: SlabView, params, codes: jax.Array, ladder: str,
+                 cp_dtype) -> Dict[str, Any]:
+    """Init/reseed the carried compute state: the compute copy the FIRST
+    fused step's forward consumes, plus the per-layer param absmax table.
+    One-off jnp pass (trainer init only — every subsequent copy is emitted
+    in-tile by the apply kernel)."""
+    cw = view.pack(params, cp_dtype).astype(jnp.float32)
+    rmx = jnp.max(jnp.abs(cw), axis=1)
+    p_amax = jax.ops.segment_max(rmx, jnp.asarray(view.row_layer),
+                                 num_segments=view.num_layers)
+    p_amax = jnp.maximum(p_amax, 0.0)           # empty segments -> 0, not -inf
+    code_r = view.gather_rows(codes).reshape(-1, 1)
+    qs_r = view.gather_rows(cast_scales(p_amax)).reshape(-1, 1)
+    cp = _tier_select(cw, code_r, qs_r, ladder).astype(cp_dtype)
+    return {"tree": view.unpack(cp, like=params), "p_amax": p_amax}
+
+
+def compute_sds(view: SlabView, params_sds, num_layers: int, cp_dtype):
+    """abstract ``TrainState.compute`` for AOT lowering (launch.dryrun)."""
+    tree = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, cp_dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), params_sds)
+    return {"tree": tree,
+            "p_amax": jax.ShapeDtypeStruct((num_layers,), jnp.float32)}

@@ -5,7 +5,10 @@ reads the gradient three times; this kernel reads each VMEM tile once and
 accumulates all three moments in fp32. The output block index_map is
 constant, so the (1, 3) accumulator stays resident across the sequential
 TPU grid; iteration 0 initializes it. Block-aligned sizes reshape in place;
-only ragged tails take the zero-pad copy (kernels.layout.fold2d).
+only ragged tails take the zero-pad copy (kernels.layout.fold2d), and
+sub-block tensors (biases, norm scales) take a SMALL single tile
+(kernels.layout.small_blocks) instead of being zero-padded to the full
+256x512 = 128K-element block.
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.layout import fold2d
+from repro.kernels.layout import fold2d, small_blocks
 
 BLOCK_M = 256
 BLOCK_N = 512
@@ -44,11 +47,12 @@ def _stats_kernel(x_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def grad_stats(x: jax.Array, interpret: bool = False):
     """Returns (sum, sum_sq, absmax) of ``x`` as fp32 scalars."""
-    x2 = fold2d(x, BLOCK_M, BLOCK_N, min_rows=BLOCK_M)
+    bm, bn = small_blocks(x.size, BLOCK_M, BLOCK_N)
+    x2 = fold2d(x, bm, bn, min_rows=bm)
     out = pl.pallas_call(
         _stats_kernel,
-        grid=(x2.shape[0] // BLOCK_M,),
-        in_specs=[pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0))],
+        grid=(x2.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
         interpret=interpret,

@@ -1,4 +1,5 @@
-"""Shared HBM->tile folding for the elementwise/reduction kernels.
+"""Shared HBM->tile folding for the elementwise/reduction kernels, plus the
+``SlabView`` layout layer the fused update phase sweeps over.
 
 ``qdq_cast`` and ``grad_stats`` view any-shaped tensors as (rows, BLOCK_N)
 fp tiles. The original padding path — ``jnp.zeros(...).at[:n].set(...)`` —
@@ -6,11 +7,28 @@ copies EVERY tensor through a scatter, even when the size is already
 block-aligned (the common case for weight matrices, whose trailing dims are
 powers of two). ``fold2d`` keeps the zero-pad only for ragged sizes and
 turns the aligned case into a pure metadata reshape.
+
+``SlabView`` generalizes the fold to a whole parameter tree: every
+floating leaf of a ``LayerGrouping``-shaped tree is assigned a contiguous
+row range of ONE (rows, SLAB_N) fp slab, with stacked segment leaves
+(leading layer axis) split so each layer's elements start on a row
+boundary.  The index metadata — row offsets and a per-row int32 layer-id
+vector — is built once (numpy, cached on treedef+shapes) so the per-step
+slab assembly is a reshape per block-aligned leaf plus one concatenate;
+per-layer control scalars (lr scale, precision code, cast scale) reach the
+kernels as tiny gathered per-row vectors instead of in-kernel gathers.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+SLAB_M = 256    # tile rows of the fused-update sweep
+SLAB_N = 512    # slab width (lanes): matches the qdq/grad_stats tiles
 
 
 def fold2d(x: jax.Array, block_m: int, cols: int,
@@ -24,3 +42,175 @@ def fold2d(x: jax.Array, block_m: int, cols: int,
         return x.reshape(pad_rows, cols)        # aligned: no pad copy
     xf = jnp.zeros((pad_rows * cols,), x.dtype).at[:n].set(x.reshape(-1))
     return xf.reshape(pad_rows, cols)
+
+
+def small_blocks(n: int, block_m: int = SLAB_M,
+                 block_n: int = SLAB_N) -> Tuple[int, int]:
+    """(rows, cols) tile for an ``n``-element reduction: full tiles for
+    tensors that fill one, a single small tile otherwise — sub-block leaves
+    (biases, norm scales) must not pay a block_m*block_n zero-pad."""
+    if n >= block_m * block_n:
+        return block_m, block_n
+    cols = block_n if n >= 8 * block_n else 128
+    rows = -(-n // cols)
+    rows = -(-rows // 16) * 16                  # sublane-multiple (bf16-safe)
+    return min(block_m, max(rows, 16)), cols
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafSlot:
+    shape: Tuple[int, ...]
+    floating: bool
+    stack: int = 1          # leading stacked-layer extent (1 = unstacked)
+    elems: int = 0          # elements per stacked entry
+    rows_per: int = 0       # slab rows per stacked entry (lane-padded)
+    row_off: int = 0        # first slab row of this leaf
+    layers: Tuple[int, ...] = ()   # layer id per stacked entry
+
+
+class SlabView:
+    """One (rows, SLAB_N) slab view over a params-shaped tree.
+
+    Rows are ordered leaf-major (stacked entries contiguous within a leaf);
+    a layer's rows therefore need not be physically contiguous across
+    leaves — per-row ``row_layer`` metadata carries the grouping instead,
+    which avoids a permutation copy at every assembly.
+    """
+
+    def __init__(self, treedef, slots: List[_LeafSlot], rows: int,
+                 row_layer: np.ndarray, num_layers: int):
+        self.treedef = treedef
+        self.slots = slots
+        self.rows = rows                        # padded to SLAB_M
+        self.row_layer = row_layer              # (rows,) int32
+        self.num_layers = num_layers
+
+    # ---------------------------------------------------------- build -----
+    @staticmethod
+    def build(tree, grouping, block_m: int = SLAB_M,
+              lane: int = SLAB_N) -> "SlabView":
+        """Index metadata for ``tree`` under ``grouping``'s layer map.
+
+        Works on concrete arrays, tracers, or ShapeDtypeStructs (only
+        shapes/dtypes are read). Layer ids come from broadcasting
+        ``arange(L)`` through the grouping — the same path the controller
+        uses for per-layer learning rates — so every floating leaf (and
+        every stacked row of a segment leaf) lands in exactly one layer.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        # the groupings build their id maps with jnp ops; evaluate them
+        # eagerly (metadata, not graph) even when called mid-trace, over a
+        # shape-only tree so no tracer can leak in
+        sds = jax.tree_util.tree_unflatten(treedef, [
+            jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves])
+        with jax.ensure_compile_time_eval():
+            ids_leaves = jax.tree_util.tree_flatten(
+                grouping.broadcast(jnp.arange(grouping.num_layers), sds))[0]
+        slots: List[_LeafSlot] = []
+        row_layer: List[np.ndarray] = []
+        off = 0
+        for leaf, ids in zip(leaves, ids_leaves):
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                slots.append(_LeafSlot(tuple(leaf.shape), False))
+                continue
+            ids = np.asarray(ids)
+            stack = int(ids.shape[0]) if ids.ndim else 1
+            per = (ids.reshape(stack, -1)[:, 0].astype(np.int32)
+                   if ids.ndim else np.asarray([int(ids)], np.int32))
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            elems = n // stack
+            rows_per = -(-elems // lane)
+            slots.append(_LeafSlot(tuple(leaf.shape), True, stack, elems,
+                                   rows_per, off, tuple(int(i) for i in per)))
+            row_layer.append(np.repeat(per, rows_per))
+            off += stack * rows_per
+        rows = -(-off // block_m) * block_m if off else block_m
+        ids_full = np.zeros((rows,), np.int32)   # tail pad rows -> layer 0
+        if off:
+            ids_full[:off] = np.concatenate(row_layer)
+        return SlabView(treedef, slots, rows, ids_full, grouping.num_layers)
+
+    # ---------------------------------------------------- pack / unpack ---
+    def pack(self, tree, dtype=jnp.float32) -> jax.Array:
+        """Assemble the (rows, SLAB_N) slab. Lane-aligned leaves fold with a
+        metadata-only reshape; ragged trailing dims pad with zeros (zeros
+        are absorbing for every fused-update statistic and stay zero under
+        both optimizers, so pad rows never pollute real rows)."""
+        leaves = jax.tree_util.tree_flatten(tree)[0]
+        parts = []
+        used = 0
+        for slot, x in zip(self.slots, leaves):
+            if not slot.floating:
+                continue
+            y = jnp.reshape(x, (slot.stack, slot.elems))
+            width = slot.rows_per * SLAB_N
+            if slot.elems != width:
+                y = jnp.pad(y, ((0, 0), (0, width - slot.elems)))
+            parts.append(y.astype(dtype).reshape(slot.stack * slot.rows_per,
+                                                 SLAB_N))
+            used += slot.stack * slot.rows_per
+        if used < self.rows:
+            parts.append(jnp.zeros((self.rows - used, SLAB_N), dtype))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+    def unpack(self, slab: jax.Array, like) -> Any:
+        """Slice the slab back into a ``like``-shaped tree (non-floating
+        leaves pass through from ``like``; floating leaves take the slab's
+        dtype)."""
+        ref_leaves = jax.tree_util.tree_flatten(like)[0]
+        out = []
+        for slot, ref in zip(self.slots, ref_leaves):
+            if not slot.floating:
+                out.append(ref)
+                continue
+            rows = slot.stack * slot.rows_per
+            y = jax.lax.slice_in_dim(slab, slot.row_off, slot.row_off + rows)
+            y = y.reshape(slot.stack, slot.rows_per * SLAB_N)[:, :slot.elems]
+            out.append(y.reshape(slot.shape))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    # ------------------------------------------------- per-row metadata ---
+    def row_blocks(self, block_m: int = SLAB_M) -> jax.Array:
+        """Static per-row layer ids as (n_tiles, block_m) int32 — one block
+        per fused-update grid step."""
+        return jnp.asarray(self.row_layer).reshape(-1, block_m)
+
+    def gather_rows(self, table: jax.Array,
+                    block_m: int = SLAB_M) -> jax.Array:
+        """Per-row values of a per-layer (L,) table, shaped (n_tiles,
+        block_m) for the kernels' (1, block_m) row-metadata blocks. O(rows)
+        = footprint/SLAB_N elements — negligible traffic."""
+        return jnp.take(table, jnp.asarray(self.row_layer),
+                        axis=0).reshape(-1, block_m)
+
+    def amax_tree(self, table: jax.Array, like) -> Any:
+        """Per-leaf scalar absmax from a per-layer (L,) table (max over the
+        layers a stacked leaf spans) — feeds ``qdq_cast(amax=...)`` on the
+        chunked/fallback cast paths and the serving precision ladder."""
+        ref_leaves = jax.tree_util.tree_flatten(like)[0]
+        out = []
+        for slot, ref in zip(self.slots, ref_leaves):
+            if not slot.floating:
+                out.append(jnp.zeros(()))       # placeholder, never used
+                continue
+            out.append(jnp.max(jnp.take(table, jnp.asarray(slot.layers,
+                                                           jnp.int32))))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+_VIEW_CACHE = {}
+
+
+def slab_view(tree, grouping) -> SlabView:
+    """``SlabView.build`` cached on (treedef, leaf shapes/dtypes, grouping
+    identity) — the metadata is numpy-only, so one build serves every trace
+    of every rung. The cache entry pins the grouping object, so its id()
+    can never be recycled by a different grouping while the key is live."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                          for l in leaves), id(grouping))
+    hit = _VIEW_CACHE.get(key)
+    if hit is None:
+        hit = (SlabView.build(tree, grouping), grouping)
+        _VIEW_CACHE[key] = hit
+    return hit[0]

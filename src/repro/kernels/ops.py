@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_update as _fu
 from repro.kernels import grad_stats as _gs
 from repro.kernels import qdq_cast as _qc
 
@@ -42,6 +43,24 @@ def qdq_cast(x, code, ladder: str = "tpu", amax=None):
 
 def grad_stats(x):
     return _gs.grad_stats(x, interpret=_interpret())
+
+
+def fused_stats(g_slab, row_layer, num_layers: int):
+    """Phase 1 of the fused update: one gradient read -> per-layer
+    (sum, sum_sq, absmax, nonfinite_count)."""
+    return _fu.fused_stats(g_slab, row_layer, num_layers,
+                           interpret=_interpret())
+
+
+def fused_apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
+                lr_rows, code_rows, qs_rows, *, spec, ladder, cp_dtype,
+                num_layers):
+    """Phase 2 of the fused update: final gradient read -> optimizer step,
+    fp32 master write, next-step compute copy, per-layer param absmax."""
+    return _fu.fused_apply(g_slab, p_slab, m_slab, v_slab, scalars,
+                           row_layer, lr_rows, code_rows, qs_rows, spec=spec,
+                           ladder=ladder, cp_dtype=cp_dtype,
+                           num_layers=num_layers, interpret=_interpret())
 
 
 # ------------------------------------------------------------ dispatch -----

@@ -36,7 +36,7 @@ from repro.roofline.hlo_parse import collective_bytes
 from repro.roofline import costmodel as cm
 from repro.train.schedules import warmup_cosine
 from repro.train.serve import make_decode_fn, make_infer_fn, make_prefill_fn
-from repro.train.train_step import TrainState, make_train_step
+from repro.train.train_step import TrainState, make_train_step, resolve_fused
 from repro.optim.optimizers import sgdm
 from repro.core.controller import init_control
 
@@ -114,6 +114,7 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         grouping = task.grouping(pvals_shape)
         tac = TriAccelConfig(ladder="tpu", dynamic_precision=triaccel)
         opt = sgdm(momentum=0.9)
+        fused = resolve_fused(opt, tac)
         compute_sh = None
         if profile == "zero1":
             # ZeRO-1: bf16 compute copy replicated over the data axes (one
@@ -123,13 +124,25 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
                                                         "mlp2": ()})
         step_fn = make_train_step(task, tac, opt, grouping,
                                   warmup_cosine(3e-4, 100, 10000), accum=accum,
-                                  compute_shardings=compute_sh)
+                                  compute_shardings=compute_sh,
+                                  fused_update=fused)
         opt_shape = jax.eval_shape(opt.init, pvals_shape)
         opt_sh = shd.state_shardings_like(param_sh, opt_shape)
         ctl_shape = jax.eval_shape(lambda: init_control(grouping.num_layers, tac))
         ctl_sh = jax.tree.map(lambda _: shd.replicated(mesh), ctl_shape)
-        state_sds = TrainState(pvals_shape, {}, opt_shape, ctl_shape)
-        state_sh = TrainState(param_sh, {}, opt_sh, ctl_sh)
+        compute_sds, compute_sh_tree = (), ()
+        if fused:
+            from repro.kernels.fused_update import compute_sds as _csds
+            from repro.kernels.layout import slab_view
+            view = slab_view(pvals_shape, grouping)
+            compute_sds = _csds(view, pvals_shape, grouping.num_layers,
+                                task.compute_dtype)
+            compute_sh_tree = {
+                "tree": compute_sh if compute_sh is not None else param_sh,
+                "p_amax": shd.replicated(mesh)}
+        state_sds = TrainState(pvals_shape, {}, opt_shape, ctl_shape,
+                               compute_sds)
+        state_sh = TrainState(param_sh, {}, opt_sh, ctl_sh, compute_sh_tree)
         batch_sh = shd.batch_shardings(specs, mesh)
         with mesh, shd.activation_mesh(mesh):
             jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
@@ -138,11 +151,16 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         tokens = shape.global_batch * shape.seq_len
         info["model_flops"] = model_flops(n_active, tokens, "train")
         # executed FLOPs follow the kernel path: impl="flash" configs skip
-        # fully-masked blocks in forward AND backward when the gate holds
+        # fully-masked blocks in forward AND backward when the gate holds;
+        # the update phase prices the fused slab sweep's 2-read model
         ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len,
                             **cm.flash_skip_flags(cfg, shape.seq_len))
-        ec += cm.opt_traffic(n_total, slots=1)
+        ec += cm.opt_traffic(n_total, slots=1, fused=fused)
         info["exec_costs"] = ec
+        info["update_phase_bytes"] = cm.update_phase_bytes(n_total, 1, fused)
+        info["update_assembly_bytes"] = (
+            cm.update_assembly_bytes(n_total, 1) if fused else 0.0)
+        info["update_fused"] = fused
         info["hbm_per_device"] = cm.hbm_estimate(
             cfg, "train", shape.global_batch, shape.seq_len, chips, accum,
             n_total)

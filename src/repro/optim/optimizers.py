@@ -6,7 +6,7 @@ are broadcast to leaves via repro.core.grouping.LayerGrouping.broadcast).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +16,9 @@ class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[..., Any]   # (grads, state, params, lr) -> (updates, state)
     slots: int                   # fp32 state slots per param (memory model)
+    #: static hyperparameters for the fused update kernel
+    #: (kernels.fused_update.OptSpec); None = jnp reference path only
+    spec: Optional[Any] = None
 
 
 def _lr_leaf(lr, leaf_path_idx, lr_tree_leaves):
@@ -52,7 +55,11 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
         mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
         return updates, {"mu": mu}
 
-    return Optimizer(init, update, slots=1)
+    from repro.kernels.fused_update import OptSpec
+    return Optimizer(init, update, slots=1,
+                     spec=OptSpec(kind="sgdm", momentum=momentum,
+                                  nesterov=nesterov,
+                                  weight_decay=weight_decay))
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -85,7 +92,10 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                                       is_leaf=lambda x: isinstance(x, tuple))
         return pick(0), {"m": pick(1), "v": pick(2), "t": t}
 
-    return Optimizer(init, update, slots=2)
+    from repro.kernels.fused_update import OptSpec
+    return Optimizer(init, update, slots=2,
+                     spec=OptSpec(kind="adamw", b1=b1, b2=b2, eps=eps,
+                                  weight_decay=weight_decay))
 
 
 def apply_updates(params, updates):

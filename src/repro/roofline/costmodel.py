@@ -254,9 +254,55 @@ def train_costs(cfg, global_batch: int, seq_len: int,
     return Costs(fwd.flops * factor, fwd.bytes * factor)
 
 
-def opt_traffic(n_params: float, slots: int = 1) -> Costs:
-    # grads f32 r+w, master f32 r+w, slots f32 r+w
-    return Costs(6 * n_params, (4 + 4 + 4 * slots) * 2 * n_params)
+def update_phase_bytes(n_params: float, slots: int = 1, fused: bool = False,
+                       cp_bytes: float = 2.0) -> float:
+    """HBM bytes of the post-backward *update phase* per step.
+
+    reference (repro.train.train_step reference path): the gradient
+    footprint is read SEVEN times — finite check, global norm, clip in,
+    per-layer moments (sum + sum_sq passes), opt.update, apply_updates —
+    and written twice (clipped grads, updates), plus master/momentum
+    read+write and the NEXT step's ``cast_params`` (master read + compute
+    copy write).
+
+    fused (kernels.fused_update): the gradient is read exactly TWICE (the
+    stats sweep and the apply sweep); master and momentum slots are read
+    and written once each; the compute copy is written in the same tile
+    (no separate cast pass); the per-row control tables add footprint/512
+    of metadata traffic.
+    """
+    f32 = 4.0
+    if fused:
+        reads = (2 + 1 + slots) * f32            # grads x2, master, slots
+        writes = (1 + slots) * f32 + cp_bytes    # master, slots, compute copy
+        meta = 4 * f32 / 512.0                   # lr/code/scale/layer rows
+        return (reads + writes + meta) * n_params
+    grad_rw = (7 + 2) * f32                      # 7 reads + 2 writes
+    state_rw = 2 * (1 + slots) * f32             # master + slots, r+w
+    cast = f32 + cp_bytes                        # next-step cast_params
+    return (grad_rw + state_rw + cast) * n_params
+
+
+def update_assembly_bytes(n_params: float, slots: int = 1,
+                          cp_bytes: float = 2.0) -> float:
+    """Slab pack/unpack traffic the CURRENT fused implementation pays per
+    step around the kernel sweeps: packing grads (compute dtype) and
+    master + momentum slots (f32) into slabs, and unpacking master, slots
+    and the compute copy back to tree leaves. Aligned-leaf folds are
+    metadata-only but the concatenate/slice copies are real; persistent
+    slab residency for master/momentum (the ROADMAP follow-up) removes the
+    f32 terms and leaves only the gradient pack + copy unpack."""
+    f32 = 4.0
+    pack = 2 * cp_bytes + 2 * f32 * (1 + slots)     # g + master + slots r+w
+    unpack = 2 * f32 * (1 + slots) + 2 * cp_bytes   # master + slots + copy
+    return (pack + unpack) * n_params
+
+
+def opt_traffic(n_params: float, slots: int = 1, fused: bool = False) -> Costs:
+    b = update_phase_bytes(n_params, slots, fused)
+    if fused:
+        b += update_assembly_bytes(n_params, slots)
+    return Costs(6 * n_params, b)
 
 
 def prefill_costs(cfg, global_batch: int, seq_len: int, **kw) -> Costs:

@@ -32,11 +32,16 @@ from repro.launch.sharding import harvested_exe_bytes
 SDS = jax.ShapeDtypeStruct
 
 
-def tier_params(params, tier: int, ladder: str = "tpu"):
-    """Weight set for one serving precision tier (floating leaves only)."""
+def tier_params(params, tier: int, ladder: str = "tpu", amax_tree=None):
+    """Weight set for one serving precision tier (floating leaves only).
+
+    ``amax_tree`` (optional, params-shaped scalar tree — e.g. from
+    ``Trainer.serving_amax_tree()``, the fused update phase's per-layer
+    slab absmax table): known per-leaf absmax for the tier-0 cast, which
+    then skips the qdq kernel's in-kernel amax reduction phase."""
     from repro.kernels import ops
 
-    def one(x):
+    def one(x, amax=None):
         if not jnp.issubdtype(x.dtype, jnp.floating):
             return x
         if tier == 2:
@@ -45,7 +50,9 @@ def tier_params(params, tier: int, ladder: str = "tpu"):
             return x.astype(jnp.bfloat16)
         # tier 0: round to the low-tier grid, keep a bf16 container
         return ops.qdq_cast(x.astype(jnp.float32), jnp.asarray(0, jnp.int32),
-                            ladder=ladder).astype(jnp.bfloat16)
+                            ladder=ladder, amax=amax).astype(jnp.bfloat16)
+    if amax_tree is not None:
+        return jax.tree.map(one, params, amax_tree)
     return jax.tree.map(one, params)
 
 
@@ -100,7 +107,7 @@ class ServeEngine:
     def __init__(self, task, params, aux_state=None, *, total_len: int,
                  prompt_len: int, rungs: Sequence[int],
                  tiers: Sequence[int] = (1,), ladder: str = "tpu",
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, amax_tree=None):
         assert list(rungs) == sorted(set(rungs)) and rungs, rungs
         self.task = task
         self.total_len = int(total_len)
@@ -110,7 +117,8 @@ class ServeEngine:
         self.ladder = ladder
         self.cache_dtype = cache_dtype
         self.aux_state = aux_state if aux_state is not None else {}
-        self.params_by_tier = {t: tier_params(params, t, ladder)
+        self.params_by_tier = {t: tier_params(params, t, ladder,
+                                              amax_tree=amax_tree)
                                for t in self.tiers}
         self.input_spec = task.serve_input_spec(self.prompt_len)
         self._exe: Dict[Tuple, Any] = {}

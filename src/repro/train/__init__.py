@@ -1,5 +1,6 @@
 from repro.train.train_step import (TrainState, make_train_step, make_loss_fn,
-                                    cast_params)
+                                    cast_params, init_compute,
+                                    split_microbatches)
 from repro.train.task import (TrainTask, LMTask, EncDecTask, VisionTask,
                               task_for_config)
 from repro.train.trainer import Trainer, TrainerConfig

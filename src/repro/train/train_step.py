@@ -11,9 +11,30 @@ device-side loop:
   * optimizer update over fp32 master params with non-finite-step skipping,
   * aux-state threading (e.g. BatchNorm running stats for vision tasks).
 
+Two implementations of the post-backward *update phase* sit behind the
+``fused_update`` gate (DESIGN.md §9):
+
+  reference (``fused_update=False``) — the jnp oracle: six independent
+  passes over the gradient footprint (finite check, global norm, clip,
+  per-layer moments, ``opt.update``, ``apply_updates``) plus the next
+  step's ``cast_params`` + in-loss QDQ.
+
+  fused (default) — kernels.fused_update: a two-sweep Pallas slab kernel
+  over the ``SlabView`` layout that reads each gradient tile exactly twice
+  (stats, then apply) and emits the fp32 master write AND the next step's
+  low-precision compute copy in the same tile. The compute copy (and the
+  per-layer param-absmax table that prices its fp8 scales) is carried in
+  ``TrainState.compute``, so the forward consumes it directly —
+  ``cast_params`` and the in-loss QDQ switch disappear from the fused
+  graph. Pallas runs the real kernel on TPU and interpret mode elsewhere,
+  so the gate defaults ON wherever the optimizer publishes a kernel spec.
+
 Gradient accumulation scans over microbatches (the memory-elastic batch
 scaler selects the rung = microbatch size; the global batch and therefore
 convergence semantics stay fixed unless the paper's true-B mode is chosen).
+The per-device batch must split evenly into ``accum`` microbatches — an
+uneven split raises at trace time (it used to be silently
+``broadcast_to``-duplicated, inflating the effective batch).
 """
 from __future__ import annotations
 
@@ -25,6 +46,8 @@ import jax.numpy as jnp
 from repro.core.controller import ControlState, lr_scales, update_control
 from repro.core.grouping import LayerGrouping
 from repro.core.precision import TriAccelConfig, make_qdq_fn
+from repro.kernels.fused_update import cast_scales, seed_compute
+from repro.kernels.layout import slab_view
 from repro.models.encdec import EncDecConfig, encdec_loss
 from repro.models.lm import lm_loss
 from repro.optim.optimizers import Optimizer, apply_updates, global_norm
@@ -35,6 +58,10 @@ class TrainState(NamedTuple):
     aux_state: Any       # non-differentiated model state (BN stats); {} if none
     opt_state: Any
     control: ControlState
+    #: fused-update carry: {"tree": next-step compute copy, "p_amax": (L,)}
+    #: — () on the reference path (kept last + defaulted so 4-field
+    #: constructors and old checkpoints stay valid)
+    compute: Any = ()
 
 
 def cast_params(params, dtype):
@@ -56,10 +83,81 @@ def _tree_finite(tree) -> jax.Array:
     return jnp.all(jnp.stack([jnp.all(jnp.isfinite(x)) for x in leaves]))
 
 
+def split_microbatches(batch, accum: int):
+    """(accum, B/accum, ...) microbatch stack for the grad-accum scan.
+
+    Raises at trace time when the per-device batch does not divide evenly —
+    the old path silently ``broadcast_to``-duplicated the whole batch into
+    every microbatch, inflating the effective batch by ``accum``x."""
+    def split(path, x):
+        if x.ndim < 1:
+            return jnp.broadcast_to(x[None], (accum,) + x.shape)
+        if x.shape[0] % accum != 0:
+            raise ValueError(
+                f"batch leaf {jax.tree_util.keystr(path)} has leading dim "
+                f"{x.shape[0]}, not divisible by accum={accum}; pick a "
+                f"global batch that is a multiple of accum (the batch used "
+                f"to be silently duplicated across microbatches here, "
+                f"inflating the effective batch)")
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+    rest = {k: v for k, v in batch.items() if k != "mrope_positions"}
+    mb0 = jax.tree_util.tree_map_with_path(split, rest)
+    if "mrope_positions" in batch:
+        mp = batch["mrope_positions"]          # batch rides on axis 1
+        if mp.shape[1] % accum != 0:
+            raise ValueError(
+                f"mrope_positions batch dim {mp.shape[1]} is not divisible "
+                f"by accum={accum}")
+        mb0["mrope_positions"] = mp.reshape(
+            (3, accum, mp.shape[1] // accum) + mp.shape[2:]
+        ).transpose(1, 0, *range(2, mp.ndim + 1))
+    return mb0
+
+
+def _float_dtype(tree):
+    for l in jax.tree.leaves(tree):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return l.dtype
+    return jnp.float32
+
+
+def resolve_fused(opt: Optimizer, tac: TriAccelConfig) -> bool:
+    """The ONE auto-resolution rule for the fused-update gate (shared by
+    make_train_step, Trainer and launch.dryrun): the optimizer must publish
+    a kernel spec, and dynamic precision must be active (the true-static
+    baselines need the reference path's exact no-rounding semantics)."""
+    return opt.spec is not None and tac.dynamic_precision
+
+
+def _cast_codes(task, grouping, codes: jax.Array) -> jax.Array:
+    """Codes the next-step CAST actuates: the loss applies QDQ only to the
+    layers ``task.loss_codes`` exposes (the LM stack — embed/head
+    pseudo-layers only get the container cast), so layers beyond that slice
+    cast at code 2 (container dtype, no tier rounding)."""
+    n_act = task.loss_codes(jnp.zeros((grouping.num_layers,),
+                                      jnp.int32)).shape[0]
+    if n_act >= grouping.num_layers:
+        return codes
+    return jnp.where(jnp.arange(grouping.num_layers) < n_act, codes, 2)
+
+
+def init_compute(task, params, grouping, control: ControlState,
+                 tac: TriAccelConfig):
+    """Seed ``TrainState.compute`` for the fused path: the compute copy the
+    first step's forward consumes + the per-layer param absmax table. A
+    one-off jnp pass — every later copy is emitted in-tile by the kernel."""
+    view = slab_view(params, grouping)
+    return seed_compute(view, params, _cast_codes(task, grouping,
+                                                  control.codes),
+                        tac.ladder, task.compute_dtype)
+
+
 def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
                     grouping: LayerGrouping, schedule: Callable,
                     accum: int = 1, grad_clip: float = 0.0,
-                    compute_shardings=None):
+                    compute_shardings=None,
+                    fused_update: Optional[bool] = None):
     """Returns train_step(state, batch) -> (state, metrics) for any
     ``TrainTask``.
 
@@ -69,7 +167,19 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
     axes (one bf16 all-gather + one grad reduce-scatter per microstep at
     the cast boundary) instead of per-layer FSDP gathers + full-size grad
     all-reduces inside the layer scan.
+
+    ``fused_update``: None (default) resolves to the fused Pallas update
+    phase whenever the optimizer publishes a kernel spec (TPU kernel /
+    interpret elsewhere); False pins the jnp reference path — the oracle
+    the fused path is parity-tested against, and the home of trace-level
+    features the kernel does not carry (true static precision, custom
+    optimizers).
     """
+    if fused_update is None:
+        fused_update = resolve_fused(opt, tac)
+    if fused_update and opt.spec is None:
+        raise ValueError("fused_update=True needs an optimizer with a "
+                         "kernel spec (repro.optim.optimizers.sgdm/adamw)")
     qdq_fn = make_qdq_fn(tac)
 
     def loss_at(params32, aux_state, microbatch, codes, loss_scale):
@@ -83,37 +193,61 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
                                             codes, qdq_fn)
         return total * loss_scale, (new_aux, metrics)
 
-    def train_step(state: TrainState, batch):
-        params32, aux_state, opt_state, control = state
-        codes = task.loss_codes(control.codes)
-        ls = control.loss_scale
+    def loss_fused(cp, aux_state, microbatch, loss_scale):
+        """Fused-path forward: consumes the compute copy carried in
+        ``TrainState.compute`` — no cast, no in-loss QDQ (both already
+        applied in-tile by the previous step's apply kernel)."""
+        from repro.launch.sharding import constrain_tree_batch
+        microbatch = constrain_tree_batch(microbatch)
+        if compute_shardings is not None:
+            cp = jax.tree.map(jax.lax.with_sharding_constraint, cp,
+                              compute_shardings)
+        total, new_aux, metrics = task.loss(cp, aux_state, microbatch,
+                                            None, None)
+        return total * loss_scale, (new_aux, metrics)
 
+    def _grads(loss_fn, wrt, aux_state, batch, *extra):
+        """value_and_grad over one batch or an accum-scan of microbatches."""
         if accum > 1:
             def micro(carry, mb):
                 g_acc, aux = carry
-                (_, (aux2, m)), g = jax.value_and_grad(loss_at, has_aux=True)(
-                    params32, aux, mb, codes, ls)
+                (_, (aux2, m)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(wrt, aux, mb, *extra)
                 return (jax.tree.map(jnp.add, g_acc, g), aux2), m
 
-            mb0 = jax.tree.map(
-                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
-                if x.ndim >= 1 and x.shape[0] % accum == 0
-                else jnp.broadcast_to(x[None], (accum,) + x.shape), batch)
-            # mrope_positions carries batch on axis 1
-            if "mrope_positions" in batch:
-                mp = batch["mrope_positions"]
-                mb0["mrope_positions"] = mp.reshape(
-                    (3, accum, mp.shape[1] // accum) + mp.shape[2:]
-                ).transpose(1, 0, *range(2, mp.ndim + 1))
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params32)
-            (grads, new_aux), mstack = jax.lax.scan(micro, (g0, aux_state), mb0)
-            grads = jax.tree.map(lambda g: g / accum, grads)
+            mb0 = split_microbatches(batch, accum)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), wrt)
+            (grads, new_aux), mstack = jax.lax.scan(micro, (g0, aux_state),
+                                                    mb0)
             metrics = jax.tree.map(
                 lambda m: jnp.mean(m.astype(jnp.float32), axis=0)
                 if jnp.issubdtype(m.dtype, jnp.floating) else m[-1], mstack)
-        else:
-            (_, (new_aux, metrics)), grads = jax.value_and_grad(
-                loss_at, has_aux=True)(params32, aux_state, batch, codes, ls)
+            return grads, new_aux, metrics        # grads are the accum SUM
+        (_, (new_aux, metrics)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(wrt, aux_state, batch, *extra)
+        return grads, new_aux, metrics
+
+    def _control_metrics(metrics, finite, control2, lr):
+        metrics = dict(metrics)
+        metrics.update({
+            "grads_finite": finite,
+            "loss_scale": control2.loss_scale,
+            "lr": lr,
+            "mean_code": jnp.mean(control2.codes.astype(jnp.float32)),
+            "frac_low": jnp.mean((control2.codes == 0).astype(jnp.float32)),
+            "frac_fp32": jnp.mean((control2.codes == 2).astype(jnp.float32)),
+        })
+        return metrics
+
+    # ------------------------------------------------- reference path -----
+    def reference_step(state: TrainState, batch):
+        params32, aux_state, opt_state, control = state[:4]
+        codes = task.loss_codes(control.codes)
+        ls = control.loss_scale
+        grads, new_aux, metrics = _grads(loss_at, params32, aux_state, batch,
+                                         codes, ls)
+        if accum > 1:
+            grads = jax.tree.map(lambda g: g / accum, grads)
 
         grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / ls), grads)
         finite = _tree_finite(grads)
@@ -138,15 +272,88 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
         opt_state2 = keep(opt_state2, opt_state)
         new_aux = keep(new_aux, aux_state)
 
-        metrics = dict(metrics)
-        metrics.update({
-            "grads_finite": finite,
-            "loss_scale": control2.loss_scale,
-            "lr": lr,
-            "mean_code": jnp.mean(control2.codes.astype(jnp.float32)),
-            "frac_low": jnp.mean((control2.codes == 0).astype(jnp.float32)),
-            "frac_fp32": jnp.mean((control2.codes == 2).astype(jnp.float32)),
-        })
-        return TrainState(new_params, new_aux, opt_state2, control2), metrics
+        metrics = _control_metrics(metrics, finite, control2, lr)
+        return TrainState(new_params, new_aux, opt_state2, control2,
+                          state.compute), metrics
 
-    return train_step
+    # ----------------------------------------------------- fused path -----
+    def fused_step(state: TrainState, batch):
+        from repro.kernels import ops
+        params32, aux_state, opt_state, control, compute = state
+        if not isinstance(compute, dict):
+            # 4-field caller: seed the carry in-graph (one cast_params-cost
+            # pass; the returned state carries the kernel-emitted copy, so
+            # every later step starts pre-cast)
+            compute = init_compute(task, params32, grouping, control, tac)
+        ls = control.loss_scale
+        grads, new_aux, metrics = _grads(loss_fused, compute["tree"],
+                                         aux_state, batch, ls)
+
+        view = slab_view(params32, grouping)
+        L = grouping.num_layers
+        row_layer = view.row_blocks()
+        g_slab = view.pack(grads, _float_dtype(grads))
+
+        # phase 1: one gradient read -> per-layer stats
+        sums, sumsqs, gmax, nonfinite = ops.fused_stats(g_slab, row_layer, L)
+
+        # scalar combine (O(L)): unscale, finite gate, global clip, control
+        denom = ls * accum
+        s_l = sums / denom
+        ss_l = sumsqs / jnp.square(denom)
+        finite = jnp.sum(nonfinite) == 0
+        if grad_clip > 0:
+            gn = jnp.sqrt(jnp.sum(ss_l))
+            clip = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        else:
+            clip = jnp.float32(1.0)
+        moments = (s_l * clip, ss_l * jnp.square(clip), grouping.counts)
+        control2 = update_control(control, moments, tac, finite)
+        lr = schedule(control2.step)
+        lr_l = (lr_scales(control2, tac) * lr).astype(jnp.float32)
+
+        if opt.spec.kind == "adamw":
+            t = opt_state["t"] + 1
+            tf = t.astype(jnp.float32)
+            c1 = 1.0 - opt.spec.b1 ** tf
+            c2 = 1.0 - opt.spec.b2 ** tf
+            m_tree, v_tree = opt_state["m"], opt_state["v"]
+        else:
+            c1 = c2 = jnp.float32(1.0)
+            m_tree, v_tree = opt_state["mu"], None
+        scalars = jnp.stack([clip / denom, finite.astype(jnp.float32),
+                             c1, c2]).astype(jnp.float32)
+
+        # phase 2: final gradient read -> optimizer + master + next cast
+        p_slab = view.pack(params32, jnp.float32)
+        m_slab = view.pack(m_tree, jnp.float32)
+        v_slab = view.pack(v_tree, jnp.float32) if v_tree is not None else None
+        p_new, m_new, v_new, cp_slab, p_amax = ops.fused_apply(
+            g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
+            view.gather_rows(lr_l),
+            view.gather_rows(_cast_codes(task, grouping, control2.codes)),
+            view.gather_rows(cast_scales(compute["p_amax"])),
+            spec=opt.spec, ladder=tac.ladder, cp_dtype=task.compute_dtype,
+            num_layers=L)
+
+        new_params = view.unpack(p_new, like=params32)
+        if opt.spec.kind == "adamw":
+            opt_state2 = {"m": view.unpack(m_new, like=m_tree),
+                          "v": view.unpack(v_new, like=v_tree),
+                          "t": jnp.where(finite, t, opt_state["t"])}
+        else:
+            opt_state2 = {"mu": view.unpack(m_new, like=m_tree)}
+        new_aux = jax.tree.map(lambda a, b: jnp.where(finite, a, b),
+                               new_aux, aux_state)
+        compute2 = {"tree": view.unpack(cp_slab, like=params32),
+                    "p_amax": p_amax}
+
+        metrics = _control_metrics(metrics, finite, control2, lr)
+        # phase-1 absmax of the UNSCALED finite gradient lanes: the fp16
+        # ladder's overflow-margin diagnostic (free — the stats sweep
+        # already reduced it)
+        metrics["grad_absmax"] = jnp.max(gmax) / denom
+        return TrainState(new_params, new_aux, opt_state2, control2,
+                          compute2), metrics
+
+    return fused_step if fused_update else reference_step

@@ -35,7 +35,8 @@ from repro.nn.module import split_params
 from repro.optim.optimizers import adamw, sgdm
 from repro.train.schedules import warmup_cosine
 from repro.train.task import TrainTask, task_for_config
-from repro.train.train_step import TrainState, make_train_step
+from repro.train.train_step import (TrainState, init_compute,
+                                    make_train_step, resolve_fused)
 
 
 @dataclasses.dataclass
@@ -58,6 +59,9 @@ class TrainerConfig:
     log_every: int = 10
     b_curv: int = 4
     elastic_true_batch: bool = True   # paper mode: rung changes global B
+    #: fused Pallas update phase (DESIGN.md §9); None = auto (on whenever
+    #: the optimizer carries a kernel spec), False = jnp reference oracle
+    fused_update: Optional[bool] = None
 
 
 class Trainer:
@@ -90,11 +94,21 @@ class Trainer:
         self.opt = opt
         schedule = warmup_cosine(tcfg.base_lr, tcfg.warmup_steps,
                                  tcfg.total_steps)
+        self.fused = (tcfg.fused_update if tcfg.fused_update is not None
+                      else resolve_fused(opt, tac))
         self._step_fn = make_train_step(task, tac, opt, self.grouping,
                                         schedule, accum=tcfg.accum,
-                                        grad_clip=tcfg.grad_clip)
+                                        grad_clip=tcfg.grad_clip,
+                                        fused_update=self.fused)
+        control = init_control(self.grouping.num_layers, tac)
+        compute = ()
+        if self.fused:
+            compute = init_compute(task, params, self.grouping, control, tac)
+            compute = {"tree": jax.device_put(compute["tree"], self.param_sh),
+                       "p_amax": jax.device_put(
+                           compute["p_amax"], shd.replicated(self.mesh))}
         self.state = TrainState(params, aux_state, opt.init(params),
-                                init_control(self.grouping.num_layers, tac))
+                                control, compute)
 
         # §3.3: memory model + rung controller (task-provided HBM model)
         mm = task.memory_model(params, opt_slots=opt.slots,
@@ -176,6 +190,18 @@ class Trainer:
         key = (rung, jax.tree_util.tree_structure(self.state))
         return self.measured_bytes.get(key)
 
+    def serving_amax_tree(self):
+        """Per-leaf absmax of the live master weights, derived from the
+        fused path's carried per-layer table — hand to
+        ``ServeEngine(amax_tree=...)`` so the serving precision ladder's
+        fp8 cast (kernels.qdq_cast) skips its amax reduction phase. None
+        on the reference path (the cast then reduces its own amax)."""
+        if not self.fused:
+            return None
+        from repro.kernels.layout import slab_view
+        view = slab_view(self.state.params, self.grouping)
+        return view.amax_tree(self.state.compute["p_amax"], self.state.params)
+
     def warm_rungs(self):
         """Pre-compile the train step for every configured rung; afterwards
         a step on any rung triggers zero new XLA compilations, and the
@@ -202,9 +228,28 @@ class Trainer:
         # onto THIS mesh whatever mesh wrote them. Each leaf lands on the
         # LIVE state's sharding, so AOT executables warmed before the
         # restore stay dispatchable.
-        host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
-        self.state = jax.tree.map(
-            lambda h, cur: jax.device_put(h, cur.sharding), host, self.state)
+        try:
+            host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
+            self.state = jax.tree.map(
+                lambda h, cur: jax.device_put(h, cur.sharding), host,
+                self.state)
+        except KeyError:
+            if not self.fused:
+                raise
+            # checkpoint written before the fused carry existed (or by a
+            # reference-path run): restore the 4-field state and re-seed
+            # TrainState.compute from the restored masters
+            base = self.state._replace(compute=())
+            host = restore_checkpoint(self.tcfg.ckpt_dir, base)
+            new = jax.tree.map(
+                lambda h, cur: jax.device_put(h, cur.sharding), host, base)
+            compute = init_compute(self.task, new.params, self.grouping,
+                                   new.control, self.tac)
+            compute = {
+                "tree": jax.device_put(compute["tree"], self.param_sh),
+                "p_amax": jax.device_put(compute["p_amax"],
+                                         shd.replicated(self.mesh))}
+            self.state = new._replace(compute=compute)
         self.reharvest_measured()
         return int(self.state.control.step)
 

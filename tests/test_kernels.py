@@ -312,6 +312,32 @@ def test_block_aligned_fold_skips_pad_copy(op):
     assert "scatter" in ragged
 
 
+@pytest.mark.parametrize("shape", [(8,), (64,), (300,), (1000,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grad_stats_small_leaf_no_block_pad(shape, dtype):
+    """Sub-block leaves (biases, norm scales) take the small-tile path —
+    no 256x512 = 128K-element zero-pad (the old min_rows=BLOCK_M cost) —
+    and still match the oracle."""
+    x = (jax.random.normal(KEY, shape) * 2).astype(dtype)
+    s, ss, mx = ops.grad_stats(x)
+    rs, rss, rmx = ref.grad_stats_ref(x)
+    np.testing.assert_allclose(float(s), float(rs), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(ss), float(rss), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(mx), float(rmx), rtol=0, atol=0)
+    jaxpr = str(jax.make_jaxpr(lambda x: ops.grad_stats(x))(x))
+    assert "131072" not in jaxpr, "small leaf padded to a full 256x512 block"
+
+
+def test_small_blocks_selection():
+    from repro.kernels.layout import small_blocks
+    assert small_blocks(256 * 512) == (256, 512)      # full tile stays
+    assert small_blocks(10_000_000) == (256, 512)
+    bm, bn = small_blocks(64)                          # one tiny tile
+    assert bn == 128 and bm == 16
+    bm, bn = small_blocks(8 * 512)                     # mid: full-width rows
+    assert bn == 512 and bm == 16
+
+
 # ------------------------------------------------------- bench smoke (CI) --
 @pytest.mark.slow
 def test_kernels_bench_emits_all_rows(capsys):
@@ -329,8 +355,21 @@ def test_kernels_bench_emits_all_rows(capsys):
     for S in kernels_bench.ATTN_SEQ_SWEEP:
         for impl in ("flash", "chunked"):
             expected += [f"attn_{impl}_fwd_S{S}", f"attn_{impl}_fwdbwd_S{S}"]
+    for n in kernels_bench.UPDATE_PARAM_SWEEP:
+        expected += [f"update_fused_{n}", f"update_ref_{n}"]
     for name in expected:
         assert f"kernels:{name}," in out, name
+    # the bytes model the sweep prints: fused <= 2 gradient-footprint
+    # reads + 2 writes vs >= 6 reads on the reference path
+    from repro.roofline.costmodel import update_phase_bytes
+    for n in kernels_bench.UPDATE_PARAM_SWEEP:
+        grad_bytes = 4.0 * n
+        fused = update_phase_bytes(n, slots=1, fused=True)
+        ref_b = update_phase_bytes(n, slots=1, fused=False)
+        # fused: 2 grad reads + master/slot state + 2 writes incl. the copy
+        assert fused <= (2 + 2) * grad_bytes + 2 * (1 + 1) * grad_bytes
+        assert ref_b >= 6 * grad_bytes          # >= 6 gradient reads today
+        assert fused < 0.5 * ref_b
 
 
 def test_flash_window_numpy_int_on_fallback_path():

@@ -106,11 +106,16 @@ def _vision_fixture(seed=0):
 
 
 def test_unified_step_matches_prerefactor_vision_step():
+    # fused_update=False: this test defines the jnp REFERENCE path's
+    # contract (bit-identity with the pre-refactor step); the fused Pallas
+    # update phase is parity-tested against that reference in
+    # tests/test_fused_update.py
     cfg, task, params, bn, grouping, tac, opt, schedule = _vision_fixture()
     ref_step = jax.jit(_ref_make_vision_train_step(
         cfg, tac, opt, grouping, schedule, grad_clip=5.0))
     new_step = jax.jit(make_train_step(
-        task, tac, opt, grouping, schedule, grad_clip=5.0))
+        task, tac, opt, grouping, schedule, grad_clip=5.0,
+        fused_update=False))
 
     ref = _RefVisionState(params, bn, opt.init(params),
                           init_control(grouping.num_layers, tac))
