@@ -1,0 +1,172 @@
+"""BENCH_update.json — the persisted update-phase perf trajectory
+(ROADMAP item 5, first slice).
+
+Times the three update-phase variants (resident slab sweep / PR-5
+pack-per-step / jnp reference — see kernels_bench.update_variants) per
+param count and records, for each: wall us/call, the analytic byte model
+(roofline.costmodel.update_phase_bytes / update_assembly_bytes) and XLA's
+measured ``cost_analysis()['bytes accessed']`` side by side, plus the
+fused-vs-reference and resident-vs-packed speedups. CPU interpret-mode
+wall numbers are NOT TPU perf — the artifact exists so the *trajectory*
+(and the modeled-vs-measured ratio) is diffable across PRs.
+
+The artifact is validated against SCHEMA (hand-rolled, no deps) before it
+is written; CI's slow leg re-validates the emitted file.
+
+    PYTHONPATH=src python -m benchmarks.bench_update [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "BENCH_update.json")
+
+# ------------------------------------------------------------- schema ------
+# Minimal recursive spec: {"type": object|list|string|number|boolean,
+# "fields": {...} (object, all required), "items": spec (list),
+# "nullable": True}. validate() returns a list of "path: problem" strings.
+SCHEMA = {
+    "type": "object",
+    "fields": {
+        "schema_version": {"type": "number"},
+        "area": {"type": "string"},
+        "generated_unix": {"type": "number"},
+        "backend": {"type": "string"},
+        "interpret_mode": {"type": "boolean"},
+        "param_sweep": {"type": "list", "items": {"type": "number"}},
+        "rows": {"type": "list", "items": {
+            "type": "object",
+            "fields": {
+                "n_params": {"type": "number"},
+                "variant": {"type": "string"},
+                "us_per_call": {"type": "number"},
+                "modeled_mb": {"type": "number"},
+                "measured_mb": {"type": "number", "nullable": True},
+                "step_time_ms": {"type": "number"},
+            }}},
+        "speedups": {"type": "list", "items": {
+            "type": "object",
+            "fields": {
+                "n_params": {"type": "number"},
+                "fused_vs_ref": {"type": "number"},
+                "resident_vs_packed": {"type": "number"},
+            }}},
+    },
+}
+
+_TYPES = {"object": dict, "list": list, "string": str,
+          "number": (int, float), "boolean": bool}
+
+
+def validate(doc, schema=SCHEMA, path="$"):
+    errs = []
+    if doc is None:
+        if schema.get("nullable"):
+            return errs
+        return [f"{path}: null not allowed"]
+    want = _TYPES[schema["type"]]
+    if not isinstance(doc, want) or isinstance(doc, bool) != (
+            schema["type"] == "boolean"):
+        return [f"{path}: expected {schema['type']}, got "
+                f"{type(doc).__name__}"]
+    if schema["type"] == "object":
+        for name, sub in schema["fields"].items():
+            if name not in doc:
+                errs.append(f"{path}.{name}: missing")
+            else:
+                errs += validate(doc[name], sub, f"{path}.{name}")
+        for name in doc:
+            if name not in schema["fields"]:
+                errs.append(f"{path}.{name}: unknown field")
+    elif schema["type"] == "list":
+        for i, item in enumerate(doc):
+            errs += validate(item, schema["items"], f"{path}[{i}]")
+    return errs
+
+
+# -------------------------------------------------------------- bench ------
+def _measured_mb(fn, args):
+    c = fn.lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else None
+    ba = c.get("bytes accessed") if c else None
+    return None if ba is None else float(ba) / 1e6
+
+
+def collect(sweep=None, iters: int = 5) -> dict:
+    import jax
+    from benchmarks.kernels_bench import (UPDATE_PARAM_SWEEP, _time,
+                                          update_variants)
+    from repro.roofline.costmodel import (update_assembly_bytes,
+                                          update_phase_bytes)
+    sweep = tuple(sweep) if sweep is not None else UPDATE_PARAM_SWEEP
+    modeled = {
+        "resident": lambda n: update_phase_bytes(
+            n, 1, fused=True, resident=True) + update_assembly_bytes(
+            n, 1, resident=True),
+        "resident_sr": lambda n: update_phase_bytes(
+            n, 1, fused=True, resident=True) + update_assembly_bytes(
+            n, 1, resident=True),
+        "packed": lambda n: update_phase_bytes(n, 1, fused=True)
+        + update_assembly_bytes(n, 1),
+        "ref": lambda n: update_phase_bytes(n, 1, fused=False),
+    }
+    rows, speedups = [], []
+    for n in sweep:
+        variants = update_variants(n)
+        t = {}
+        for name, (fn, args) in variants.items():
+            t[name] = _time(fn, *args, iters=iters)
+            rows.append({
+                "n_params": int(n),
+                "variant": name,
+                "us_per_call": round(t[name], 1),
+                "modeled_mb": round(modeled[name](n) / 1e6, 3),
+                "measured_mb": _measured_mb(fn, args),
+                "step_time_ms": round(t[name] / 1e3, 4),
+            })
+        speedups.append({
+            "n_params": int(n),
+            "fused_vs_ref": round(t["ref"] / max(t["resident"], 1e-9), 3),
+            "resident_vs_packed": round(
+                t["packed"] / max(t["resident"], 1e-9), 3),
+        })
+    return {
+        "schema_version": 1,
+        "area": "update",
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "param_sweep": [int(n) for n in sweep],
+        "rows": rows,
+        "speedups": speedups,
+    }
+
+
+def main(quick: bool = False, out: str = ARTIFACT) -> dict:
+    sweep = (1 << 18,) if quick else None
+    doc = collect(sweep=sweep, iters=2 if quick else 5)
+    errs = validate(doc)
+    if errs:
+        raise SystemExit("BENCH_update schema violation:\n" + "\n".join(errs))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    for s in doc["speedups"]:
+        print(f"bench_update:{s['n_params']},"
+              f"x{s['fused_vs_ref']:.2f}_vs_ref,"
+              f"x{s['resident_vs_packed']:.2f}_vs_packed")
+    print(f"bench_update:# wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT)
+    a = ap.parse_args()
+    main(quick=a.quick, out=a.out)

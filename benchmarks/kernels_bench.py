@@ -15,6 +15,12 @@ reference chain (finite + norm + clip + moments + momentum update + apply
 HBM bytes (roofline.costmodel.update_phase_bytes — 2 gradient reads fused
 vs 7 on the reference) and the measured speedup.
 
+Three update variants per param count: *resident* (slabs in, slabs out —
+what the slab-resident trainer executes every step), *packed* (the PR-5
+pack-per-step path: tree leaves concatenate into slabs before and slice
+back out after, pricing costmodel.update_assembly_bytes), and *ref* (the
+jnp chain). An extra row times the stochastic-rounding cast (sr=True).
+
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
@@ -74,52 +80,98 @@ def _attn_rows(key, causal=True, window=0):
     return rows
 
 
-def _update_rows(key):
-    """Fused slab update (stats + apply) vs the jnp reference chain, per
-    param count."""
+def update_variants(n, key=None, leaves: int = 8):
+    """Jitted (fn, args) update-phase variants for ``n`` params: resident
+    (slabs stay slabs), packed (pack-per-step around the same sweep), ref
+    (jnp chain), resident_sr (stochastic-rounding cast). Shared by the
+    CSV bench below and benchmarks.bench_update's measured sweep."""
+    from repro.roofline.costmodel import update_assembly_bytes
+    key = jax.random.PRNGKey(7) if key is None else key
     spec = OptSpec(kind="sgdm", momentum=0.9, weight_decay=1e-4)
+    R = n // SLAB_N
+    g = jax.random.normal(key, (R, SLAB_N))
+    p = jax.random.normal(jax.random.fold_in(key, 1), (R, SLAB_N))
+    mu = jnp.zeros((R, SLAB_N))
+    row_layer = jnp.zeros((R // SLAB_M, SLAB_M), jnp.int32)
+    ones_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.float32)
+    code_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.int32)
+    # the packed variant sees the same params as a tree of leaves
+    g_tree = list(jnp.split(g, leaves))
+    p_tree = list(jnp.split(p, leaves))
+    mu_tree = list(jnp.split(mu, leaves))
+
+    def _sweep(g, p, mu, sr=False):
+        _, ss, _, nf = ops.fused_stats(g, row_layer, 1)
+        gn = jnp.sqrt(jnp.sum(ss))
+        clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+        scalars = jnp.stack([clip, (jnp.sum(nf) == 0).astype(jnp.float32),
+                             jnp.float32(1.0), jnp.float32(1.0),
+                             jnp.float32(3.0)])
+        return ops.fused_apply(
+            g, p, mu, None, scalars, row_layer, ones_r * 1e-3, code_r,
+            ones_r, spec=spec, ladder="tpu", cp_dtype=jnp.bfloat16,
+            num_layers=1, sr=sr)
+
+    @jax.jit
+    def resident(g, p, mu):
+        return _sweep(g, p, mu)[0]
+
+    @jax.jit
+    def resident_sr(g, p, mu):
+        return _sweep(g, p, mu, sr=True)[0]
+
+    @jax.jit
+    def packed(g_tree, p_tree, mu_tree):
+        # PR-5 shape: assemble slabs from leaves, sweep, slice back out
+        gs = jnp.concatenate(g_tree)
+        ps = jnp.concatenate(p_tree)
+        ms = jnp.concatenate(mu_tree)
+        p2, m2, _, cp, _ = _sweep(gs, ps, ms)
+        per = p2.shape[0] // len(p_tree)
+        out = [p2[i * per:(i + 1) * per] for i in range(len(p_tree))]
+        mo = [m2[i * per:(i + 1) * per] for i in range(len(p_tree))]
+        co = [cp[i * per:(i + 1) * per] for i in range(len(p_tree))]
+        return out, mo, co
+
+    @jax.jit
+    def reference(g, p, mu):
+        finite = jnp.all(jnp.isfinite(g))
+        gn = jnp.sqrt(jnp.sum(jnp.square(g)))
+        clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+        g2 = g * clip
+        s, ss = jnp.sum(g2), jnp.sum(jnp.square(g2))      # moments
+        mu2 = 0.9 * mu + (g2 + 1e-4 * p)
+        p2 = jnp.where(finite, p - 1e-3 * mu2, p)
+        cp = p2.astype(jnp.bfloat16)                      # next-step cast
+        return p2, (s, ss, cp)
+
+    return {"resident": (resident, (g, p, mu)),
+            "resident_sr": (resident_sr, (g, p, mu)),
+            "packed": (packed, (g_tree, p_tree, mu_tree)),
+            "ref": (reference, (g, p, mu))}
+
+
+def _update_rows(key):
+    """Resident / packed / ref update phase per param count."""
+    from repro.roofline.costmodel import update_assembly_bytes
     rows = []
     for n in UPDATE_PARAM_SWEEP:
-        R = n // SLAB_N
-        g = jax.random.normal(key, (R, SLAB_N))
-        p = jax.random.normal(jax.random.fold_in(key, 1), (R, SLAB_N))
-        mu = jnp.zeros((R, SLAB_N))
-        row_layer = jnp.zeros((R // SLAB_M, SLAB_M), jnp.int32)
-        ones_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.float32)
-        code_r = jnp.ones((R // SLAB_M, SLAB_M), jnp.int32)
-
-        @jax.jit
-        def fused(g, p, mu):
-            _, ss, _, nf = ops.fused_stats(g, row_layer, 1)
-            gn = jnp.sqrt(jnp.sum(ss))
-            clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
-            scalars = jnp.stack([clip, (jnp.sum(nf) == 0).astype(jnp.float32),
-                                 jnp.float32(1.0), jnp.float32(1.0)])
-            return ops.fused_apply(
-                g, p, mu, None, scalars, row_layer, ones_r * 1e-3, code_r,
-                ones_r, spec=spec, ladder="tpu", cp_dtype=jnp.bfloat16,
-                num_layers=1)[0]
-
-        @jax.jit
-        def reference(g, p, mu):
-            finite = jnp.all(jnp.isfinite(g))
-            gn = jnp.sqrt(jnp.sum(jnp.square(g)))
-            clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
-            g2 = g * clip
-            s, ss = jnp.sum(g2), jnp.sum(jnp.square(g2))      # moments
-            mu2 = 0.9 * mu + (g2 + 1e-4 * p)
-            p2 = jnp.where(finite, p - 1e-3 * mu2, p)
-            cp = p2.astype(jnp.bfloat16)                      # next-step cast
-            return p2, (s, ss, cp)
-
-        t_f = _time(fused, g, p, mu)
-        t_r = _time(reference, g, p, mu)
-        mb_f = update_phase_bytes(n, 1, fused=True) / 1e6
+        v = update_variants(n, key)
+        t = {name: _time(fn, *args) for name, (fn, args) in v.items()}
+        mb_res = update_phase_bytes(n, 1, fused=True, resident=True) / 1e6
+        mb_pack = (update_phase_bytes(n, 1, fused=True)
+                   + update_assembly_bytes(n, 1)) / 1e6
         mb_r = update_phase_bytes(n, 1, fused=False) / 1e6
-        rows.append((f"update_fused_{n}", t_f,
-                     f"model {mb_f:.1f}MB (2 grad reads); "
-                     f"speedup x{t_r / max(t_f, 1e-9):.2f} vs jnp"))
-        rows.append((f"update_ref_{n}", t_r,
+        rows.append((f"update_resident_{n}", t["resident"],
+                     f"model {mb_res:.1f}MB (slabs stay resident); "
+                     f"speedup x{t['ref'] / max(t['resident'], 1e-9):.2f} vs "
+                     f"jnp, x{t['packed'] / max(t['resident'], 1e-9):.2f} vs "
+                     f"packed"))
+        rows.append((f"update_resident_sr_{n}", t["resident_sr"],
+                     "stochastic-rounding compute cast"))
+        rows.append((f"update_packed_{n}", t["packed"],
+                     f"model {mb_pack:.1f}MB (incl. pack/unpack assembly)"))
+        rows.append((f"update_ref_{n}", t["ref"],
                      f"model {mb_r:.1f}MB (7 grad reads), jnp oracle"))
     return rows
 

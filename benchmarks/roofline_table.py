@@ -3,9 +3,11 @@
 MODEL_FLOPS/HLO_FLOPs ratio, HBM fit, and — for train cells — the
 update-phase byte model (fused slab sweep: 2 gradient reads + 2 writes;
 reference: >= 6 reads; repro.roofline.costmodel.update_phase_bytes).
+Resident cells (update_resident) price the slab-resident path: the
+pack/unpack assembly term is metadata-only, so upd_gb IS the sweep floor.
 
 CSV: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,
-     useful_ratio,hbm_gb,fits,upd_gb,upd_fused
+     useful_ratio,hbm_gb,fits,upd_gb,upd_fused,upd_resident
 """
 from __future__ import annotations
 
@@ -30,9 +32,13 @@ def rows(mesh: str = None):
 
 def main():
     print("roofline:arch,shape,mesh,profile,compute_s,memory_s,collective_s,"
-          "dominant,useful_ratio,hbm_gb,fits,upd_gb,upd_fused")
+          "dominant,useful_ratio,hbm_gb,fits,upd_gb,upd_fused,upd_resident")
     for d in rows():
         upd = d.get("update_phase_bytes")
+        if upd and d.get("update_fused") and not d.get("update_resident"):
+            # pre-residency artifact: include its assembly term so upd_gb
+            # stays the full per-step traffic whatever wrote the cell
+            upd += d.get("update_assembly_bytes") or 0.0
         print("roofline:" + ",".join([
             d["arch"], d["shape"], d["mesh"], d.get("profile", "baseline"),
             f"{d['compute_s']:.4g}", f"{d['memory_s']:.4g}",
@@ -41,7 +47,8 @@ def main():
             f"{d['hbm_per_device_bytes'] / 1e9:.2f}",
             str(d["fits_hbm"]),
             f"{upd / 1e9:.2f}" if upd else "-",
-            str(d.get("update_fused", "-"))]))
+            str(d.get("update_fused", "-")),
+            str(d.get("update_resident", "-"))]))
     skipped = [json.load(open(fn)) for fn in
                sorted(glob.glob(os.path.join(ART, "*.json")))]
     nsk = sum(1 for d in skipped if d.get("status") == "skipped")

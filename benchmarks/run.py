@@ -25,6 +25,11 @@ def main() -> None:
     kernels_bench.main()
     sys.stdout.flush()
 
+    from benchmarks import bench_update
+    print("# update-phase trajectory artifact (BENCH_update.json)")
+    bench_update.main(quick=args.quick)
+    sys.stdout.flush()
+
     print("# roofline table (from dry-run artifacts; run "
           "`python -m repro.launch.dryrun --all --mesh both` to refresh)")
     roofline_table.main()

@@ -50,7 +50,7 @@ def main():
               f"lr {m['lr']:.2e} codes(lo/hi) {m['frac_low']:.2f}/"
               f"{m['frac_fp32']:.2f} wall {m['wall_s']}s")
     print("done; params:", sum(x.size for x in
-                               __import__('jax').tree.leaves(tr.state.params)))
+                               __import__('jax').tree.leaves(tr.params_tree())))
 
 
 if __name__ == "__main__":

@@ -87,6 +87,19 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def manifest_keys(directory: str, step: Optional[int] = None):
+    """Saved keypaths of a committed checkpoint — readers detect the
+    on-disk schema (e.g. 4-field pre-fused vs 5-field tree-form states)
+    from the manifest instead of fishing restore KeyErrors."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return sorted(json.load(f)["leaves"].keys())
+
+
 def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None,
                        shardings: Any = None) -> Any:
     """Restore into ``template``'s tree structure. ``shardings`` (optional,
@@ -111,6 +124,10 @@ def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None
     for i, (path, leaf) in enumerate(paths_leaves):
         meta = manifest[_keystr(path)]
         arr = np.load(os.path.join(d, meta["file"]))
+        if arr.dtype.kind == "V":
+            # non-native fp dtypes (bfloat16, fp8) round-trip through .npy
+            # as raw void bytes; the manifest dtype reinterprets them
+            arr = arr.view(jax.numpy.dtype(meta["dtype"]))
         if sh_leaves is not None:
             out.append(jax.device_put(arr, sh_leaves[i]))
         else:

@@ -38,6 +38,8 @@ class TriAccelConfig:
     tau_high: float = 1e-3              # v >= tau_high -> fp32
     ladder: str = "gpu"
     dynamic_precision: bool = True      # False -> static bf16 (AMP baseline)
+    stochastic_round: bool = False      # SR on the fused compute cast
+                                        # (bf16 container casts only)
     # §3.2 curvature
     curvature_method: str = "hutchinson"   # "power" | "hutchinson" | "fisher"
     top_k: int = 5

@@ -51,6 +51,13 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.layout import SLAB_M, SLAB_N, SlabView
 
+try:                                    # TPU-only PRNG/SR primitives
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU_SR = hasattr(pltpu, "stochastic_round")
+except ImportError:                     # pragma: no cover - no TPU plugin
+    pltpu = None
+    _HAS_PLTPU_SR = False
+
 FP8_MAX = 448.0
 
 # add-accumulated stat columns (phase-1 output)
@@ -142,6 +149,37 @@ class OptSpec(NamedTuple):
     weight_decay: float = 0.0
 
 
+def _sr_bits(tile: int, seed):
+    """Counter-based PRNG: one uint32 per lane, a murmur3-finalizer mix of
+    (global row, lane, step seed). Pure vector ops, so the SAME stream is
+    produced on TPU mosaic and in interpret mode — SR trajectories are
+    reproducible across backends at a fixed seed."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, (SLAB_M, SLAB_N), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (SLAB_M, SLAB_N), 1)
+    r = r + jnp.uint32(tile * SLAB_M) if isinstance(tile, int) else \
+        r + tile.astype(jnp.uint32) * jnp.uint32(SLAB_M)
+    h = (r * jnp.uint32(0x9E3779B9)) ^ (c * jnp.uint32(0x85EBCA6B)) \
+        ^ (seed * jnp.uint32(0xC2B2AE35))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+def _sr_to_bf16(pn, bits):
+    """Stochastic round fp32 -> the bf16 grid, bitwise: add the low 16
+    random bits to the fp32 pattern, truncate the mantissa tail. Unbiased
+    (P(up) = tail/2^16) and exact when pn is already on the grid. Works
+    only because bf16 is a bit-truncation of fp32 — f16 ladders keep RTN."""
+    u = jax.lax.bitcast_convert_type(pn, jnp.uint32)
+    usr = (u + (bits & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+    snapped = jax.lax.bitcast_convert_type(usr, jnp.float32)
+    # inf/nan bit patterns must not be perturbed (inf + rand = nan bits)
+    return jnp.where(jnp.isfinite(pn), snapped,
+                     pn.astype(jnp.bfloat16).astype(jnp.float32))
+
+
 def _tier_select(cwf, code, qs, ladder: str):
     """qdq_cast's tier math with a per-ROW fp8 scale column ``qs``."""
     if ladder == "tpu":
@@ -155,9 +193,10 @@ def _tier_select(cwf, code, qs, ladder: str):
 def _apply_kernel(scal_ref, layer_ref, lr_ref, code_ref, qs_ref,
                   g_ref, p_ref, m_ref, v_ref,
                   p_out, m_out, v_out, cp_out, pmax_ref,
-                  *, spec: OptSpec, ladder: str, l_pad: int):
-    """(scalars) = [gscale, keep, c1, c2]; ``v_ref``/``v_out`` are None for
-    sgdm (momentum rides in ``m``)."""
+                  *, spec: OptSpec, ladder: str, l_pad: int,
+                  sr: bool = False, interpret: bool = False):
+    """(scalars) = [gscale, keep, c1, c2, sr_seed]; ``v_ref``/``v_out`` are
+    None for sgdm (momentum rides in ``m``)."""
     i = pl.program_id(0)
     gscale = scal_ref[0]
     keep = scal_ref[1] > 0.0
@@ -187,7 +226,21 @@ def _apply_kernel(scal_ref, layer_ref, lr_ref, code_ref, qs_ref,
         v_out[...] = jnp.where(keep, v2, v_ref[...])
 
     # ---- next-step compute copy: container cast + tier rounding ----------
-    cwf = pn.astype(cp_out.dtype).astype(jnp.float32)
+    if sr:
+        # stochastic container cast (bf16 only): kills the systematic
+        # round-to-nearest EMA bias of repeated master->compute casts.
+        # Tier rounding below (fp8) stays RTN — delayed scales assume it.
+        seed = scal_ref[4].astype(jnp.uint32)
+        if _HAS_PLTPU_SR and not interpret:      # pragma: no cover - TPU
+            pltpu.prng_seed(seed, i)
+            bits = pltpu.bitcast(
+                pltpu.prng_random_bits((SLAB_M, SLAB_N)), jnp.uint32)
+            cwf = pltpu.stochastic_round(
+                pn, bits, target_dtype=jnp.bfloat16).astype(jnp.float32)
+        else:
+            cwf = _sr_to_bf16(pn, _sr_bits(i, seed))
+    else:
+        cwf = pn.astype(cp_out.dtype).astype(jnp.float32)
     code = code_ref[...].reshape(SLAB_M, 1)
     qs = qs_ref[...].reshape(SLAB_M, 1)
     cp_out[...] = _tier_select(cwf, code, qs, ladder).astype(cp_out.dtype)
@@ -209,16 +262,25 @@ def _apply_kernel(scal_ref, layer_ref, lr_ref, code_ref, qs_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "ladder", "cp_dtype",
-                                             "num_layers", "interpret"))
+                                             "num_layers", "interpret", "sr"))
 def fused_apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
                 lr_rows, code_rows, qs_rows, *, spec: OptSpec, ladder: str,
-                cp_dtype, num_layers: int, interpret: bool = False):
+                cp_dtype, num_layers: int, interpret: bool = False,
+                sr: bool = False):
     """Second (final) gradient read: optimizer + master write + cast.
+
+    ``sr`` enables the stochastic container cast (effective only when
+    ``cp_dtype`` is bfloat16 — the bitwise trick needs a truncation grid);
+    the draw is seeded from ``scalars[4]``, a runtime value, so toggling
+    the seed each step costs zero recompiles.
 
     Returns (p_new, m_new, v_new | None, compute_copy, p_amax(L,))."""
     l_pad = _l_pad(num_layers)
     nb = g_slab.shape[0] // SLAB_M
     adam = spec.kind == "adamw"
+    sr = bool(sr) and jnp.dtype(cp_dtype) == jnp.dtype(jnp.bfloat16)
+    if scalars.shape[0] == 4:                    # legacy (no-seed) callers
+        scalars = jnp.concatenate([scalars, jnp.zeros((1,), scalars.dtype)])
 
     def kernel(scal, layer, lr, code, qs, g, p, m, *rest):
         if adam:
@@ -228,14 +290,15 @@ def fused_apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
             v, v_o = None, None
         _apply_kernel(scal, layer, lr, code, qs, g, p, m, v,
                       p_o, m_o, v_o, cp_o, pmax,
-                      spec=spec, ladder=ladder, l_pad=l_pad)
+                      spec=spec, ladder=ladder, l_pad=l_pad,
+                      sr=sr, interpret=interpret)
 
     row_spec = pl.BlockSpec((1, SLAB_M), lambda i: (i, 0))
     slab_spec = pl.BlockSpec((SLAB_M, SLAB_N), lambda i: (i, 0))
     acc_spec = pl.BlockSpec((l_pad, 128), lambda i: (0, 0))
     slab_sds = jax.ShapeDtypeStruct(p_slab.shape, jnp.float32)
 
-    in_specs = [pl.BlockSpec((4,), lambda i: (0,)),          # scalars
+    in_specs = [pl.BlockSpec((5,), lambda i: (0,)),          # scalars
                 row_spec, row_spec, row_spec, row_spec,
                 slab_spec, slab_spec, slab_spec]
     args = [scalars, row_layer, lr_rows, code_rows, qs_rows,
@@ -270,11 +333,12 @@ def cast_scales(p_amax: jax.Array) -> jax.Array:
 
 
 def seed_compute(view: SlabView, params, codes: jax.Array, ladder: str,
-                 cp_dtype) -> Dict[str, Any]:
+                 cp_dtype, slab: bool = False) -> Dict[str, Any]:
     """Init/reseed the carried compute state: the compute copy the FIRST
     fused step's forward consumes, plus the per-layer param absmax table.
-    One-off jnp pass (trainer init only — every subsequent copy is emitted
-    in-tile by the apply kernel)."""
+    One-off jnp pass (trainer init / restore only — every subsequent copy
+    is emitted in-tile by the apply kernel). With ``slab=True`` the copy is
+    kept in slab form (the resident path's carried representation)."""
     cw = view.pack(params, cp_dtype).astype(jnp.float32)
     rmx = jnp.max(jnp.abs(cw), axis=1)
     p_amax = jax.ops.segment_max(rmx, jnp.asarray(view.row_layer),
@@ -283,11 +347,17 @@ def seed_compute(view: SlabView, params, codes: jax.Array, ladder: str,
     code_r = view.gather_rows(codes).reshape(-1, 1)
     qs_r = view.gather_rows(cast_scales(p_amax)).reshape(-1, 1)
     cp = _tier_select(cw, code_r, qs_r, ladder).astype(cp_dtype)
+    if slab:
+        return {"slab": cp, "p_amax": p_amax}
     return {"tree": view.unpack(cp, like=params), "p_amax": p_amax}
 
 
-def compute_sds(view: SlabView, params_sds, num_layers: int, cp_dtype):
+def compute_sds(view: SlabView, params_sds, num_layers: int, cp_dtype,
+                slab: bool = False):
     """abstract ``TrainState.compute`` for AOT lowering (launch.dryrun)."""
+    if slab:
+        return {"slab": jax.ShapeDtypeStruct((view.rows, SLAB_N), cp_dtype),
+                "p_amax": jax.ShapeDtypeStruct((num_layers,), jnp.float32)}
     tree = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(
             s.shape, cp_dtype if jnp.issubdtype(s.dtype, jnp.floating)

@@ -78,17 +78,18 @@ class SlabView:
     """
 
     def __init__(self, treedef, slots: List[_LeafSlot], rows: int,
-                 row_layer: np.ndarray, num_layers: int):
+                 row_layer: np.ndarray, num_layers: int, shards: int = 1):
         self.treedef = treedef
         self.slots = slots
-        self.rows = rows                        # padded to SLAB_M
+        self.rows = rows                        # padded to SLAB_M * shards
         self.row_layer = row_layer              # (rows,) int32
         self.num_layers = num_layers
+        self.shards = shards                    # row-range partition count
 
     # ---------------------------------------------------------- build -----
     @staticmethod
     def build(tree, grouping, block_m: int = SLAB_M,
-              lane: int = SLAB_N) -> "SlabView":
+              lane: int = SLAB_N, shards: int = 1) -> "SlabView":
         """Index metadata for ``tree`` under ``grouping``'s layer map.
 
         Works on concrete arrays, tracers, or ShapeDtypeStructs (only
@@ -124,11 +125,13 @@ class SlabView:
                                    rows_per, off, tuple(int(i) for i in per)))
             row_layer.append(np.repeat(per, rows_per))
             off += stack * rows_per
-        rows = -(-off // block_m) * block_m if off else block_m
+        quantum = block_m * max(int(shards), 1)
+        rows = -(-off // quantum) * quantum if off else quantum
         ids_full = np.zeros((rows,), np.int32)   # tail pad rows -> layer 0
         if off:
             ids_full[:off] = np.concatenate(row_layer)
-        return SlabView(treedef, slots, rows, ids_full, grouping.num_layers)
+        return SlabView(treedef, slots, rows, ids_full, grouping.num_layers,
+                        max(int(shards), 1))
 
     # ---------------------------------------------------- pack / unpack ---
     def pack(self, tree, dtype=jnp.float32) -> jax.Array:
@@ -169,6 +172,16 @@ class SlabView:
             out.append(y.reshape(slot.shape))
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
+    # -------------------------------------------------- row partition -----
+    def row_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        """The row-range partition: ``shards`` equal contiguous [lo, hi)
+        ranges, each a multiple of SLAB_M rows so every device's local sweep
+        lands on whole 256-row blocks. This is the residency sharding
+        contract — the slab's leading axis is laid out over the mesh's data
+        axes by these ranges, never by a compiler-chosen layout."""
+        per = self.rows // self.shards
+        return tuple((i * per, (i + 1) * per) for i in range(self.shards))
+
     # ------------------------------------------------- per-row metadata ---
     def row_blocks(self, block_m: int = SLAB_M) -> jax.Array:
         """Static per-row layer ids as (n_tiles, block_m) int32 — one block
@@ -201,16 +214,17 @@ class SlabView:
 _VIEW_CACHE = {}
 
 
-def slab_view(tree, grouping) -> SlabView:
+def slab_view(tree, grouping, shards: int = 1) -> SlabView:
     """``SlabView.build`` cached on (treedef, leaf shapes/dtypes, grouping
-    identity) — the metadata is numpy-only, so one build serves every trace
-    of every rung. The cache entry pins the grouping object, so its id()
-    can never be recycled by a different grouping while the key is live."""
+    identity, shards) — the metadata is numpy-only, so one build serves
+    every trace of every rung. The cache entry pins the grouping object, so
+    its id() can never be recycled by a different grouping while the key is
+    live."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
-                          for l in leaves), id(grouping))
+                          for l in leaves), id(grouping), int(shards))
     hit = _VIEW_CACHE.get(key)
     if hit is None:
-        hit = (SlabView.build(tree, grouping), grouping)
+        hit = (SlabView.build(tree, grouping, shards=shards), grouping)
         _VIEW_CACHE[key] = hit
     return hit[0]

@@ -54,13 +54,16 @@ def fused_stats(g_slab, row_layer, num_layers: int):
 
 def fused_apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
                 lr_rows, code_rows, qs_rows, *, spec, ladder, cp_dtype,
-                num_layers):
+                num_layers, sr: bool = False):
     """Phase 2 of the fused update: final gradient read -> optimizer step,
-    fp32 master write, next-step compute copy, per-layer param absmax."""
+    fp32 master write, next-step compute copy (``sr=True`` casts it with
+    stochastic rounding, seeded from ``scalars[4]``), per-layer param
+    absmax."""
     return _fu.fused_apply(g_slab, p_slab, m_slab, v_slab, scalars,
                            row_layer, lr_rows, code_rows, qs_rows, spec=spec,
                            ladder=ladder, cp_dtype=cp_dtype,
-                           num_layers=num_layers, interpret=_interpret())
+                           num_layers=num_layers, interpret=_interpret(),
+                           sr=sr)
 
 
 # ------------------------------------------------------------ dispatch -----

@@ -115,6 +115,16 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         tac = TriAccelConfig(ladder="tpu", dynamic_precision=triaccel)
         opt = sgdm(momentum=0.9)
         fused = resolve_fused(opt, tac)
+        # slab residency mirrors the Trainer gate: fused + all-floating
+        # params keep master/moments/compute as row-range-sharded slabs
+        resident = fused and all(
+            jnp.issubdtype(l.dtype, jnp.floating)
+            for l in jax.tree.leaves(pvals_shape))
+        dp_axes = shd.fsdp_axes(mesh)
+        slab_shards = 1
+        if resident and dp_axes:
+            import numpy as _np
+            slab_shards = int(_np.prod([mesh.shape[a] for a in dp_axes]))
         compute_sh = None
         if profile == "zero1":
             # ZeRO-1: bf16 compute copy replicated over the data axes (one
@@ -125,7 +135,10 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         step_fn = make_train_step(task, tac, opt, grouping,
                                   warmup_cosine(3e-4, 100, 10000), accum=accum,
                                   compute_shardings=compute_sh,
-                                  fused_update=fused)
+                                  fused_update=fused,
+                                  resident_params=pvals_shape if resident
+                                  else None,
+                                  slab_shards=slab_shards, slab_mesh=mesh)
         opt_shape = jax.eval_shape(opt.init, pvals_shape)
         opt_sh = shd.state_shardings_like(param_sh, opt_shape)
         ctl_shape = jax.eval_shape(lambda: init_control(grouping.num_layers, tac))
@@ -134,15 +147,30 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         if fused:
             from repro.kernels.fused_update import compute_sds as _csds
             from repro.kernels.layout import slab_view
-            view = slab_view(pvals_shape, grouping)
+            view = slab_view(pvals_shape, grouping, shards=slab_shards)
             compute_sds = _csds(view, pvals_shape, grouping.num_layers,
-                                task.compute_dtype)
+                                task.compute_dtype, slab=resident)
             compute_sh_tree = {
                 "tree": compute_sh if compute_sh is not None else param_sh,
                 "p_amax": shd.replicated(mesh)}
         state_sds = TrainState(pvals_shape, {}, opt_shape, ctl_shape,
                                compute_sds)
         state_sh = TrainState(param_sh, {}, opt_sh, ctl_sh, compute_sh_tree)
+        if resident:
+            from repro.train.train_step import pack_state
+            # abstract pack: slab-form SDS without materializing anything
+            tree_compute = _csds(view, pvals_shape, grouping.num_layers,
+                                 task.compute_dtype)
+            state_sds = jax.eval_shape(
+                lambda s: pack_state(view, s, task.compute_dtype),
+                TrainState(pvals_shape, {}, opt_shape, ctl_shape,
+                           tree_compute))
+            slab_sh = shd.slab_sharding(mesh, slab_shards)
+            rep = shd.replicated(mesh)
+            opt_sh = {k: (slab_sh if k in ("mu", "m", "v") else rep)
+                      for k in state_sds.opt_state}
+            state_sh = TrainState(slab_sh, {}, opt_sh, ctl_sh,
+                                  {"slab": slab_sh, "p_amax": rep})
         batch_sh = shd.batch_shardings(specs, mesh)
         with mesh, shd.activation_mesh(mesh):
             jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
@@ -153,14 +181,18 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         # executed FLOPs follow the kernel path: impl="flash" configs skip
         # fully-masked blocks in forward AND backward when the gate holds;
         # the update phase prices the fused slab sweep's 2-read model
+        # (resident cells drop the pack/unpack assembly term to metadata)
         ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len,
                             **cm.flash_skip_flags(cfg, shape.seq_len))
-        ec += cm.opt_traffic(n_total, slots=1, fused=fused)
+        ec += cm.opt_traffic(n_total, slots=1, fused=fused, resident=resident)
         info["exec_costs"] = ec
-        info["update_phase_bytes"] = cm.update_phase_bytes(n_total, 1, fused)
+        info["update_phase_bytes"] = cm.update_phase_bytes(
+            n_total, 1, fused, resident=resident)
         info["update_assembly_bytes"] = (
-            cm.update_assembly_bytes(n_total, 1) if fused else 0.0)
+            cm.update_assembly_bytes(n_total, 1, resident=resident)
+            if fused else 0.0)
         info["update_fused"] = fused
+        info["update_resident"] = resident
         info["hbm_per_device"] = cm.hbm_estimate(
             cfg, "train", shape.global_batch, shape.seq_len, chips, accum,
             n_total)

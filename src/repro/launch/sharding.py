@@ -177,6 +177,18 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def slab_sharding(mesh: Mesh, shards: int = 1) -> NamedSharding:
+    """Row-range sharding for the resident (rows, 512) optimizer-state
+    slabs: the leading row axis is laid out over the fsdp axes — an
+    EXPLICIT contract aligned to the 256-row block grid (SlabView pads
+    rows to a multiple of SLAB_M * shards), never a compiler-chosen pack
+    layout. Replicated when unsharded (dev mesh, single device)."""
+    dp = fsdp_axes(mesh)
+    if shards <= 1 or not dp:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0], None))
+
+
 def batch_shardings(batch_sds: Dict[str, Any], mesh: Mesh):
     """Shard the global-batch dim over (pod, data); mrope_positions carries
     batch on axis 1."""

@@ -255,7 +255,7 @@ def train_costs(cfg, global_batch: int, seq_len: int,
 
 
 def update_phase_bytes(n_params: float, slots: int = 1, fused: bool = False,
-                       cp_bytes: float = 2.0) -> float:
+                       cp_bytes: float = 2.0, resident: bool = False) -> float:
     """HBM bytes of the post-backward *update phase* per step.
 
     reference (repro.train.train_step reference path): the gradient
@@ -270,9 +270,14 @@ def update_phase_bytes(n_params: float, slots: int = 1, fused: bool = False,
     and written once each; the compute copy is written in the same tile
     (no separate cast pass); the per-row control tables add footprint/512
     of metadata traffic.
+
+    resident: the slab-resident path — identical sweep traffic to fused
+    (the 2-read/2-write floor per tensor is the kernel's, independent of
+    residency); the difference residency makes is update_assembly_bytes
+    going to ~0 and the gradient being BORN in slab layout.
     """
     f32 = 4.0
-    if fused:
+    if fused or resident:
         reads = (2 + 1 + slots) * f32            # grads x2, master, slots
         writes = (1 + slots) * f32 + cp_bytes    # master, slots, compute copy
         meta = 4 * f32 / 512.0                   # lr/code/scale/layer rows
@@ -284,24 +289,35 @@ def update_phase_bytes(n_params: float, slots: int = 1, fused: bool = False,
 
 
 def update_assembly_bytes(n_params: float, slots: int = 1,
-                          cp_bytes: float = 2.0) -> float:
-    """Slab pack/unpack traffic the CURRENT fused implementation pays per
-    step around the kernel sweeps: packing grads (compute dtype) and
-    master + momentum slots (f32) into slabs, and unpacking master, slots
-    and the compute copy back to tree leaves. Aligned-leaf folds are
-    metadata-only but the concatenate/slice copies are real; persistent
-    slab residency for master/momentum (the ROADMAP follow-up) removes the
-    f32 terms and leaves only the gradient pack + copy unpack."""
+                          cp_bytes: float = 2.0,
+                          resident: bool = False) -> float:
+    """Slab pack/unpack traffic paid per step around the kernel sweeps.
+
+    Non-resident fused (the PR-5 pack-per-step path): packing grads
+    (compute dtype) and master + momentum slots (f32) into slabs, and
+    unpacking master, slots and the compute copy back to tree leaves.
+    Aligned-leaf folds are metadata-only but the concatenate/slice copies
+    are real.
+
+    resident: master/momentum/compute LIVE in slab form across steps and
+    the gradient cotangent is deposited directly in slab layout by
+    differentiating w.r.t. the compute slab — no per-step pack or unpack
+    copies remain (asserted on the jaxpr in test_fused_update). Only the
+    per-row metadata tables are still assembled each control refresh,
+    priced at footprint/512."""
     f32 = 4.0
+    if resident:
+        return 4 * f32 / 512.0 * n_params           # row metadata only
     pack = 2 * cp_bytes + 2 * f32 * (1 + slots)     # g + master + slots r+w
     unpack = 2 * f32 * (1 + slots) + 2 * cp_bytes   # master + slots + copy
     return (pack + unpack) * n_params
 
 
-def opt_traffic(n_params: float, slots: int = 1, fused: bool = False) -> Costs:
-    b = update_phase_bytes(n_params, slots, fused)
-    if fused:
-        b += update_assembly_bytes(n_params, slots)
+def opt_traffic(n_params: float, slots: int = 1, fused: bool = False,
+                resident: bool = False) -> Costs:
+    b = update_phase_bytes(n_params, slots, fused, resident=resident)
+    if fused or resident:
+        b += update_assembly_bytes(n_params, slots, resident=resident)
     return Costs(6 * n_params, b)
 
 

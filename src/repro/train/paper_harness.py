@@ -175,10 +175,12 @@ def run_method(method: str, arch: str = "resnet18", steps: int = 60,
     frac_fp32 = log[-1]["frac_fp32"] if log else 0.0
     scaler = trainer.scaler
 
-    # held-out accuracy through the task's eval path
+    # held-out accuracy through the task's eval path (params_tree is the
+    # eval boundary: resident trainers unpack their master slab here)
     test = task.eval_stream(256, seed=seed)
     evaluate = jax.jit(task.evaluate)
-    accs = [float(evaluate(trainer.state.params, trainer.state.aux_state,
+    eval_params = trainer.params_tree()
+    accs = [float(evaluate(eval_params, trainer.state.aux_state,
                            test.batch(i))) for i in range(4)]
     acc = 100.0 * float(np.mean(accs))
 

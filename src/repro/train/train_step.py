@@ -47,20 +47,21 @@ from repro.core.controller import ControlState, lr_scales, update_control
 from repro.core.grouping import LayerGrouping
 from repro.core.precision import TriAccelConfig, make_qdq_fn
 from repro.kernels.fused_update import cast_scales, seed_compute
-from repro.kernels.layout import slab_view
+from repro.kernels.layout import SlabView, slab_view
 from repro.models.encdec import EncDecConfig, encdec_loss
 from repro.models.lm import lm_loss
 from repro.optim.optimizers import Optimizer, apply_updates, global_norm
 
 
 class TrainState(NamedTuple):
-    params: Any          # fp32 master
+    params: Any          # fp32 master (tree; ONE (rows,512) slab if resident)
     aux_state: Any       # non-differentiated model state (BN stats); {} if none
     opt_state: Any
     control: ControlState
     #: fused-update carry: {"tree": next-step compute copy, "p_amax": (L,)}
-    #: — () on the reference path (kept last + defaulted so 4-field
-    #: constructors and old checkpoints stay valid)
+    #: — {"slab": ..., "p_amax": ...} on the slab-resident path, () on the
+    #: reference path (kept last + defaulted so 4-field constructors and
+    #: old checkpoints stay valid)
     compute: Any = ()
 
 
@@ -153,11 +154,46 @@ def init_compute(task, params, grouping, control: ControlState,
                         tac.ladder, task.compute_dtype)
 
 
+_OPT_SLAB_KEYS = ("mu", "m", "v")
+
+
+def pack_state(view: SlabView, state: TrainState,
+               cp_dtype=None) -> TrainState:
+    """Tree-form ``TrainState`` -> slab-resident form. Runs ONCE — trainer
+    init and checkpoint restore — never inside the step."""
+    p_slab = view.pack(state.params, jnp.float32)
+    opt2 = {k: (view.pack(v, jnp.float32) if k in _OPT_SLAB_KEYS else v)
+            for k, v in state.opt_state.items()}
+    compute = state.compute
+    if isinstance(compute, dict) and "tree" in compute:
+        cd = cp_dtype if cp_dtype is not None else \
+            _float_dtype(compute["tree"])
+        compute = {"slab": view.pack(compute["tree"], cd),
+                   "p_amax": compute["p_amax"]}
+    return state._replace(params=p_slab, opt_state=opt2, compute=compute)
+
+
+def unpack_state(view: SlabView, state: TrainState, params_like) -> TrainState:
+    """Slab-resident ``TrainState`` -> tree form — the checkpoint/eval/
+    export boundary representation, and the on-disk format pre-residency
+    readers understand."""
+    params = view.unpack(state.params, like=params_like)
+    opt2 = {k: (view.unpack(v, like=params_like) if k in _OPT_SLAB_KEYS
+                else v) for k, v in state.opt_state.items()}
+    compute = state.compute
+    if isinstance(compute, dict) and "slab" in compute:
+        compute = {"tree": view.unpack(compute["slab"], like=params_like),
+                   "p_amax": compute["p_amax"]}
+    return state._replace(params=params, opt_state=opt2, compute=compute)
+
+
 def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
                     grouping: LayerGrouping, schedule: Callable,
                     accum: int = 1, grad_clip: float = 0.0,
                     compute_shardings=None,
-                    fused_update: Optional[bool] = None):
+                    fused_update: Optional[bool] = None,
+                    resident_params=None, slab_shards: int = 1,
+                    slab_mesh=None):
     """Returns train_step(state, batch) -> (state, metrics) for any
     ``TrainTask``.
 
@@ -174,12 +210,40 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
     the fused path is parity-tested against, and the home of trace-level
     features the kernel does not carry (true static precision, custom
     optimizers).
+
+    ``resident_params`` (a params-shaped tree of arrays or
+    ShapeDtypeStructs) switches the fused path to SLAB-RESIDENT state:
+    the returned step consumes/produces a ``TrainState`` whose ``params``
+    / ``opt_state`` moments / ``compute`` are single (rows, 512) slabs
+    (see ``pack_state``/``unpack_state``), the loss differentiates
+    directly w.r.t. the compute slab (the gradient cotangent is BORN in
+    slab layout — no per-step ``view.pack``), and the master/moment slabs
+    flow straight through the two Pallas sweeps: per-step HBM traffic hits
+    the 2-read/2-write floor with ``update_assembly_bytes`` ~ 0.
+    ``slab_shards`` > 1 partitions the slabs by row ranges aligned to the
+    256-row block grid and runs each device's sweep over its local rows
+    via shard_map on ``slab_mesh`` (per-layer stats combined with one
+    cross-device segment reduce).
     """
     if fused_update is None:
         fused_update = resolve_fused(opt, tac)
     if fused_update and opt.spec is None:
         raise ValueError("fused_update=True needs an optimizer with a "
                          "kernel spec (repro.optim.optimizers.sgdm/adamw)")
+    resident = resident_params is not None
+    if resident and not fused_update:
+        raise ValueError("slab-resident state requires the fused update "
+                         "path (resident_params with fused_update=False)")
+    if resident:
+        for l in jax.tree.leaves(resident_params):
+            if not jnp.issubdtype(l.dtype, jnp.floating):
+                raise ValueError("slab residency needs an all-floating "
+                                 "params tree (non-floating leaves have no "
+                                 "slab rows to live in)")
+        r_view = slab_view(resident_params, grouping, shards=slab_shards)
+        r_like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            resident_params)
     qdq_fn = make_qdq_fn(tac)
 
     def loss_at(params32, aux_state, microbatch, codes, loss_scale):
@@ -199,6 +263,21 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
         applied in-tile by the previous step's apply kernel)."""
         from repro.launch.sharding import constrain_tree_batch
         microbatch = constrain_tree_batch(microbatch)
+        if compute_shardings is not None:
+            cp = jax.tree.map(jax.lax.with_sharding_constraint, cp,
+                              compute_shardings)
+        total, new_aux, metrics = task.loss(cp, aux_state, microbatch,
+                                            None, None)
+        return total * loss_scale, (new_aux, metrics)
+
+    def loss_resident(cp_slab, aux_state, microbatch, loss_scale):
+        """Resident-path forward: differentiates w.r.t. the compute SLAB.
+        The in-forward unpack is pure placement (slice + reshape), so its
+        AD transpose deposits the gradient cotangent directly into slab
+        layout — the step never calls ``view.pack``."""
+        from repro.launch.sharding import constrain_tree_batch
+        microbatch = constrain_tree_batch(microbatch)
+        cp = r_view.unpack(cp_slab, like=r_like)
         if compute_shardings is not None:
             cp = jax.tree.map(jax.lax.with_sharding_constraint, cp,
                               compute_shardings)
@@ -322,7 +401,8 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
             c1 = c2 = jnp.float32(1.0)
             m_tree, v_tree = opt_state["mu"], None
         scalars = jnp.stack([clip / denom, finite.astype(jnp.float32),
-                             c1, c2]).astype(jnp.float32)
+                             c1, c2, control2.step.astype(jnp.float32)]
+                            ).astype(jnp.float32)
 
         # phase 2: final gradient read -> optimizer + master + next cast
         p_slab = view.pack(params32, jnp.float32)
@@ -334,7 +414,7 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
             view.gather_rows(_cast_codes(task, grouping, control2.codes)),
             view.gather_rows(cast_scales(compute["p_amax"])),
             spec=opt.spec, ladder=tac.ladder, cp_dtype=task.compute_dtype,
-            num_layers=L)
+            num_layers=L, sr=tac.stochastic_round)
 
         new_params = view.unpack(p_new, like=params32)
         if opt.spec.kind == "adamw":
@@ -356,4 +436,137 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
         return TrainState(new_params, new_aux, opt_state2, control2,
                           compute2), metrics
 
+    # -------------------------------------------------- resident path -----
+    # Row-range sharded sweeps: each device runs the Pallas kernels over its
+    # local row range (shard_map — pallas_call is NOT partitioned by GSPMD),
+    # and the per-layer phase-1 partials combine with ONE cross-device
+    # segment reduce (psum/pmax over O(L) scalars).
+    use_shmap = resident and slab_shards > 1 and slab_mesh is not None
+
+    if use_shmap:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.sharding import fsdp_axes
+        dp = fsdp_axes(slab_mesh)
+        rowdim = dp if len(dp) > 1 else dp[0]
+        ssp = P(rowdim, None)                   # slabs + per-row metadata
+
+        def _dp_index():
+            idx = jax.lax.axis_index(dp[0])
+            for a in dp[1:]:
+                idx = idx * slab_mesh.shape[a] + jax.lax.axis_index(a)
+            return idx
+
+    def _stats(g_slab, row_layer, L):
+        from repro.kernels import ops
+        if not use_shmap:
+            return ops.fused_stats(g_slab, row_layer, L)
+
+        def body(g, rl):
+            s, ss, mx, nf = ops.fused_stats(g, rl, L)
+            return (jax.lax.psum(s, dp), jax.lax.psum(ss, dp),
+                    jax.lax.pmax(mx, dp), jax.lax.psum(nf, dp))
+
+        return shard_map(body, mesh=slab_mesh, in_specs=(ssp, ssp),
+                         out_specs=(P(), P(), P(), P()),
+                         check_rep=False)(g_slab, row_layer)
+
+    def _apply(g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
+               lr_r, code_r, qs_r, L):
+        from repro.kernels import ops
+        kw = dict(spec=opt.spec, ladder=tac.ladder,
+                  cp_dtype=task.compute_dtype, num_layers=L,
+                  sr=tac.stochastic_round)
+        if not use_shmap:
+            return ops.fused_apply(g_slab, p_slab, m_slab, v_slab, scalars,
+                                   row_layer, lr_r, code_r, qs_r, **kw)
+        adam = opt.spec.kind == "adamw"
+
+        def body(sc, g, p, m, rl, lr, cd, qs, *maybe_v):
+            # decorrelate the SR stream across row shards: program_id
+            # restarts at 0 on every device, so fold the shard index into
+            # the seed (steps < 2^20 stay exact in the f32 seed slot)
+            sc = sc.at[4].add(_dp_index().astype(jnp.float32) * 1048576.0)
+            v = maybe_v[0] if adam else None
+            p_n, m_n, v_n, cp, pmax = ops.fused_apply(
+                g, p, m, v, sc, rl, lr, cd, qs, **kw)
+            pmax = jax.lax.pmax(pmax, dp)
+            if adam:
+                return p_n, m_n, v_n, cp, pmax
+            return p_n, m_n, cp, pmax
+
+        in_specs = (P(),) + (ssp,) * 7 + ((ssp,) if adam else ())
+        out_specs = (ssp, ssp) + ((ssp,) if adam else ()) + (ssp, P())
+        args = (scalars, g_slab, p_slab, m_slab, row_layer, lr_r, code_r,
+                qs_r) + ((v_slab,) if adam else ())
+        outs = shard_map(body, mesh=slab_mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+        if adam:
+            return outs
+        p_n, m_n, cp, pmax = outs
+        return p_n, m_n, None, cp, pmax
+
+    def resident_step(state: TrainState, batch):
+        p_slab, aux_state, opt_state, control, compute = state
+        ls = control.loss_scale
+        g_slab, new_aux, metrics = _grads(loss_resident, compute["slab"],
+                                          aux_state, batch, ls)
+
+        L = grouping.num_layers
+        row_layer = r_view.row_blocks()
+
+        # phase 1: one gradient read -> per-layer stats
+        sums, sumsqs, gmax, nonfinite = _stats(g_slab, row_layer, L)
+
+        denom = ls * accum
+        s_l = sums / denom
+        ss_l = sumsqs / jnp.square(denom)
+        finite = jnp.sum(nonfinite) == 0
+        if grad_clip > 0:
+            gn = jnp.sqrt(jnp.sum(ss_l))
+            clip = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        else:
+            clip = jnp.float32(1.0)
+        moments = (s_l * clip, ss_l * jnp.square(clip), grouping.counts)
+        control2 = update_control(control, moments, tac, finite)
+        lr = schedule(control2.step)
+        lr_l = (lr_scales(control2, tac) * lr).astype(jnp.float32)
+
+        if opt.spec.kind == "adamw":
+            t = opt_state["t"] + 1
+            tf = t.astype(jnp.float32)
+            c1 = 1.0 - opt.spec.b1 ** tf
+            c2 = 1.0 - opt.spec.b2 ** tf
+            m_slab, v_slab = opt_state["m"], opt_state["v"]
+        else:
+            c1 = c2 = jnp.float32(1.0)
+            m_slab, v_slab = opt_state["mu"], None
+        scalars = jnp.stack([clip / denom, finite.astype(jnp.float32), c1,
+                             c2, control2.step.astype(jnp.float32)]
+                            ).astype(jnp.float32)
+
+        # phase 2: the resident slabs flow straight through the kernel —
+        # zero pack/unpack of master or moments anywhere in this step
+        p_new, m_new, v_new, cp_slab, p_amax = _apply(
+            g_slab, p_slab, m_slab, v_slab, scalars, row_layer,
+            r_view.gather_rows(lr_l),
+            r_view.gather_rows(_cast_codes(task, grouping, control2.codes)),
+            r_view.gather_rows(cast_scales(compute["p_amax"])), L)
+
+        if opt.spec.kind == "adamw":
+            opt_state2 = {"m": m_new, "v": v_new,
+                          "t": jnp.where(finite, t, opt_state["t"])}
+        else:
+            opt_state2 = {"mu": m_new}
+        new_aux = jax.tree.map(lambda a, b: jnp.where(finite, a, b),
+                               new_aux, aux_state)
+        compute2 = {"slab": cp_slab, "p_amax": p_amax}
+
+        metrics = _control_metrics(metrics, finite, control2, lr)
+        metrics["grad_absmax"] = jnp.max(gmax) / denom
+        return TrainState(p_new, new_aux, opt_state2, control2,
+                          compute2), metrics
+
+    if resident:
+        return resident_step
     return fused_step if fused_update else reference_step

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
-                                         restore_checkpoint)
+                                         manifest_keys, restore_checkpoint)
 from repro.core import curvature as curv
 from repro.core.batch_scaler import BatchScaler
 from repro.core.controller import init_control, with_curvature
@@ -36,7 +36,8 @@ from repro.optim.optimizers import adamw, sgdm
 from repro.train.schedules import warmup_cosine
 from repro.train.task import TrainTask, task_for_config
 from repro.train.train_step import (TrainState, init_compute,
-                                    make_train_step, resolve_fused)
+                                    make_train_step, pack_state,
+                                    resolve_fused, unpack_state)
 
 
 @dataclasses.dataclass
@@ -96,19 +97,40 @@ class Trainer:
                                  tcfg.total_steps)
         self.fused = (tcfg.fused_update if tcfg.fused_update is not None
                       else resolve_fused(opt, tac))
-        self._step_fn = make_train_step(task, tac, opt, self.grouping,
-                                        schedule, accum=tcfg.accum,
-                                        grad_clip=tcfg.grad_clip,
-                                        fused_update=self.fused)
+        # slab residency (DESIGN.md §10): master/moments/compute live as
+        # (rows, 512) slabs ACROSS steps whenever the step is fused — pack
+        # runs once here (and on restore), unpack only at checkpoint/eval/
+        # export boundaries. Needs an all-floating params tree.
+        self._params_like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        self.resident = self.fused and all(
+            jnp.issubdtype(l.dtype, jnp.floating)
+            for l in jax.tree.leaves(params))
+        self.slab_shards = self._dp_size() if self.resident else 1
+        if self.resident:
+            from repro.kernels.layout import slab_view
+            self.view = slab_view(params, self.grouping,
+                                  shards=self.slab_shards)
+        self._step_fn = make_train_step(
+            task, tac, opt, self.grouping, schedule, accum=tcfg.accum,
+            grad_clip=tcfg.grad_clip, fused_update=self.fused,
+            resident_params=self._params_like if self.resident else None,
+            slab_shards=self.slab_shards, slab_mesh=self.mesh)
         control = init_control(self.grouping.num_layers, tac)
         compute = ()
         if self.fused:
             compute = init_compute(task, params, self.grouping, control, tac)
-            compute = {"tree": jax.device_put(compute["tree"], self.param_sh),
-                       "p_amax": jax.device_put(
-                           compute["p_amax"], shd.replicated(self.mesh))}
-        self.state = TrainState(params, aux_state, opt.init(params),
-                                control, compute)
+        state = TrainState(params, aux_state, opt.init(params),
+                           control, compute)
+        if self.resident:
+            state = self._place_resident(
+                pack_state(self.view, state, task.compute_dtype))
+        elif self.fused:
+            state = state._replace(compute={
+                "tree": jax.device_put(compute["tree"], self.param_sh),
+                "p_amax": jax.device_put(compute["p_amax"],
+                                         shd.replicated(self.mesh))})
+        self.state = state
 
         # §3.3: memory model + rung controller (task-provided HBM model)
         mm = task.memory_model(params, opt_slots=opt.slots,
@@ -145,6 +167,48 @@ class Trainer:
     def _abstract(x) -> jax.ShapeDtypeStruct:
         return jax.ShapeDtypeStruct(x.shape, x.dtype,
                                     sharding=getattr(x, "sharding", None))
+
+    # ------------------------------------------------- slab residency -----
+    def _place_resident(self, state: TrainState) -> TrainState:
+        """Lay a slab-form state onto the mesh: slabs row-range sharded
+        over the fsdp axes (launch.sharding.slab_sharding), everything
+        else replicated."""
+        slab = shd.slab_sharding(self.mesh, self.slab_shards)
+        rep = shd.replicated(self.mesh)
+        opt2 = {k: jax.device_put(v, slab if k in ("mu", "m", "v") else rep)
+                for k, v in state.opt_state.items()}
+        compute = {"slab": jax.device_put(state.compute["slab"], slab),
+                   "p_amax": jax.device_put(state.compute["p_amax"], rep)}
+        return TrainState(jax.device_put(state.params, slab),
+                          jax.device_put(state.aux_state, rep),
+                          opt2, jax.device_put(state.control, rep), compute)
+
+    def params_tree(self):
+        """fp32 master params in TREE form — the eval/export boundary view.
+        On the resident path this is the one sanctioned per-call unpack;
+        inside the step the masters never leave slab form."""
+        if not self.resident:
+            return self.state.params
+        return self.view.unpack(self.state.params, like=self._params_like)
+
+    def _save_state(self) -> TrainState:
+        """Checkpoint boundary: resident slabs unpack to TREE form on save,
+        so checkpoints stay mesh- and residency-agnostic (pre-residency
+        readers parse them unchanged)."""
+        if not self.resident:
+            return self.state
+        return unpack_state(self.view, self.state, self._params_like)
+
+    def _tree_template(self) -> TrainState:
+        """Abstract tree-form state matching what ``_save_state`` writes —
+        the restore template for resident trainers."""
+        opt_sds = jax.eval_shape(self.opt.init, self._params_like)
+        comp_sds = jax.eval_shape(
+            lambda p, c: init_compute(self.task, p, self.grouping, c,
+                                      self.tac),
+            self._params_like, self.state.control)
+        return TrainState(self._params_like, self.state.aux_state, opt_sds,
+                          self.state.control, comp_sds)
 
     def _get_step(self, rung: int):
         """AOT-compiled executable per batch rung (zero-stall rung switches).
@@ -198,6 +262,9 @@ class Trainer:
         on the reference path (the cast then reduces its own amax)."""
         if not self.fused:
             return None
+        if self.resident:
+            return self.view.amax_tree(self.state.compute["p_amax"],
+                                       self._params_like)
         from repro.kernels.layout import slab_view
         view = slab_view(self.state.params, self.grouping)
         return view.amax_tree(self.state.compute["p_amax"], self.state.params)
@@ -224,6 +291,8 @@ class Trainer:
     def maybe_restore(self) -> int:
         if not (self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None):
             return 0
+        if self.resident:
+            return self._restore_resident()
         # elastic re-shard: checkpoints are host-layout, so leaves re-place
         # onto THIS mesh whatever mesh wrote them. Each leaf lands on the
         # LIVE state's sharding, so AOT executables warmed before the
@@ -253,6 +322,30 @@ class Trainer:
         self.reharvest_measured()
         return int(self.state.control.step)
 
+    def _restore_resident(self) -> int:
+        """Restore a TREE-form checkpoint into the slab-resident trainer:
+        leaves load host-layout, pack into slabs, and re-place onto THIS
+        mesh's row-range partition — an elastic re-shard re-partitions the
+        slab directly instead of resurrecting a compiler-chosen layout.
+        Handles every on-disk generation: 5-field tree states (what
+        ``_save_state`` writes, and what pre-residency fused runs wrote)
+        and 4-field pre-fused states (compute re-seeded from the restored
+        masters)."""
+        keys = manifest_keys(self.tcfg.ckpt_dir)
+        has_compute = any(k.startswith(".compute") for k in keys)
+        tmpl = self._tree_template()
+        if not has_compute:
+            tmpl = tmpl._replace(compute=())
+        host = restore_checkpoint(self.tcfg.ckpt_dir, tmpl)
+        if not has_compute:
+            host = host._replace(compute=init_compute(
+                self.task, host.params, self.grouping, host.control,
+                self.tac))
+        self.state = self._place_resident(
+            pack_state(self.view, host, self.task.compute_dtype))
+        self.reharvest_measured()
+        return int(self.state.control.step)
+
     # -------------------------------------------------------------- run ---
     def run(self, steps: Optional[int] = None):
         steps = steps if steps is not None else self.tcfg.total_steps
@@ -261,7 +354,7 @@ class Trainer:
         for step in range(start, start + steps):
             if self._preempted:
                 if self.ckpt:
-                    self.ckpt.save(step, self.state, block=True)
+                    self.ckpt.save(step, self._save_state(), block=True)
                 raise SystemExit(143)
             rung = self.scaler.microbatch
             batch = self._batch_for_rung(rung, step)
@@ -282,7 +375,7 @@ class Trainer:
                 self.scaler.observe(step, codes=list(codes),
                                     measured_bytes=self._rung_measured(rung))
             if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0:
-                self.ckpt.save(step, self.state)
+                self.ckpt.save(step, self._save_state())
             if step % self.tcfg.log_every == 0:
                 m = {k: float(v) for k, v in jax.device_get(metrics).items()}
                 m.update(step=step, rung=rung,
@@ -290,18 +383,19 @@ class Trainer:
                          wall_s=round(time.time() - t0, 2))
                 self.metrics_log.append(m)
         if self.ckpt:
-            self.ckpt.save(start + steps, self.state, block=True)
+            self.ckpt.save(start + steps, self._save_state(), block=True)
         return self.metrics_log
 
     def _curvature(self, step: int):
         mb = self.stream.batch(step)
         small = jax.tree.map(lambda x: x[:self.tcfg.b_curv], mb)
         aux = self.state.aux_state
+        params = self.params_tree()          # eval boundary: one unpack
         loss_fn = lambda p, b: self.task.curvature_loss(p, aux, b)
         if self.tac.curvature_method == "fisher":
-            g = jax.grad(loss_fn)(self.state.params, small)
+            g = jax.grad(loss_fn)(params, small)
             return curv.fisher_layer(g, self.grouping.mean)
         key = jax.random.PRNGKey(step)
         return curv.hutchinson_layer_traces(
-            loss_fn, self.state.params, lambda t: self.grouping.mean(t),
+            loss_fn, params, lambda t: self.grouping.mean(t),
             key, 1, small)

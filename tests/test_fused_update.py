@@ -372,7 +372,7 @@ def test_restore_pre_fused_checkpoint_reseeds_compute(tmp_path):
     assert fus_tr.fused
     assert fus_tr.maybe_restore() == 3
     for a, b in zip(jax.tree.leaves(ref_tr.state.params),
-                    jax.tree.leaves(fus_tr.state.params)):
+                    jax.tree.leaves(fus_tr.params_tree())):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert isinstance(fus_tr.state.compute, dict)    # re-seeded carry
     fus_tr.ckpt = None
@@ -395,17 +395,19 @@ def test_serving_amax_tree_feeds_tier_params():
     tr.run(2)
     amax_tree = tr.serving_amax_tree()
     assert amax_tree is not None
+    # eval/export boundary: masters leave slab form exactly here
+    params = tr.params_tree()
     # the carried table bounds every leaf's true absmax (it is the max over
     # the leaf's layer, measured on the container-cast master)
     for (path, leaf), amax in zip(
-            jax.tree_util.tree_leaves_with_path(tr.state.params),
+            jax.tree_util.tree_leaves_with_path(params),
             jax.tree.leaves(amax_tree)):
         true = float(jnp.max(jnp.abs(leaf.astype(jnp.bfloat16)
                                      .astype(jnp.float32))))
         assert float(amax) >= true - 1e-6, jax.tree_util.keystr(path)
     # tier-0 weights built from the table == qdq_cast with the same amax
-    got = tier_params(tr.state.params, 0, "tpu", amax_tree=amax_tree)
-    for (leaf, amax, want) in zip(jax.tree.leaves(tr.state.params),
+    got = tier_params(params, 0, "tpu", amax_tree=amax_tree)
+    for (leaf, amax, want) in zip(jax.tree.leaves(params),
                                   jax.tree.leaves(amax_tree),
                                   jax.tree.leaves(got)):
         direct = ops.qdq_cast(leaf.astype(jnp.float32),
@@ -413,6 +415,345 @@ def test_serving_amax_tree_feeds_tier_params():
                               amax=amax).astype(jnp.bfloat16)
         np.testing.assert_array_equal(np.asarray(want, np.float32),
                                       np.asarray(direct, np.float32))
+
+
+# ======================================================================
+# slab residency (DESIGN.md §10): bit-exact vs the pack-per-step path,
+# zero pack/unpack copies in the jaxpr, sharded-path parity
+# ======================================================================
+class _ToyTaskBF16(_ToyTask):
+    compute_dtype = jnp.bfloat16
+
+
+def _toy_states(optname, task=None):
+    opt = (sgdm(0.9, weight_decay=1e-4) if optname == "sgdm"
+           else adamw(weight_decay=1e-2))
+    task = task if task is not None else _ToyTask()
+    params, _ = task.init(jax.random.PRNGKey(3))
+    grouping = task.grouping(params)
+    tac = TriAccelConfig(ladder="tpu", t_ctrl=1000, enable_curvature=False)
+    ctl = init_control(grouping.num_layers, tac)
+    ctl = ctl._replace(codes=jnp.full_like(ctl.codes, 2))
+    comp = init_compute(task, params, grouping, ctl, tac)
+    return opt, task, params, grouping, tac, ctl, comp
+
+
+@pytest.mark.parametrize("optname", ["sgdm", "adamw"])
+def test_resident_bit_exact_vs_packed_20_steps(optname):
+    """The resident step (slabs in, slabs out; gradient cotangent born in
+    slab layout) must reproduce the PR-5 pack-per-step trajectory: sgdm
+    BIT-exact, adamw to one f32 ulp, over 20 steps — including the carried
+    compute copy."""
+    from repro.kernels.layout import slab_view
+    from repro.train.train_step import pack_state, unpack_state
+    opt, task, params, grouping, tac, ctl, comp = _toy_states(optname)
+    sched = lambda s: jnp.asarray(5e-3)
+    packed_step = jax.jit(make_train_step(task, tac, opt, grouping, sched,
+                                          fused_update=True))
+    res_step = jax.jit(make_train_step(task, tac, opt, grouping, sched,
+                                       fused_update=True,
+                                       resident_params=params))
+    view = slab_view(params, grouping)
+    pk = TrainState(params, {}, opt.init(params), ctl, comp)
+    rs = pack_state(view, TrainState(params, {}, opt.init(params), ctl,
+                                     comp), task.compute_dtype)
+    for i in range(20):
+        pk, mp = packed_step(pk, _toy_batch(i))
+        rs, mr = res_step(rs, _toy_batch(i))
+        np.testing.assert_array_equal(np.asarray(mp["loss"]),
+                                      np.asarray(mr["loss"]))
+    un = unpack_state(view, rs, params)
+    pairs = zip(jax.tree.leaves((pk.params, pk.opt_state)),
+                jax.tree.leaves((un.params, un.opt_state)))
+    if optname == "sgdm":
+        for la, lb in pairs:
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    else:
+        for la, lb in pairs:
+            np.testing.assert_allclose(np.asarray(la, np.float32),
+                                       np.asarray(lb, np.float32),
+                                       rtol=2e-6, atol=1e-7)
+    # carried compute copy: identical next-step weights
+    cp_res = view.unpack(rs.compute["slab"], like=pk.compute["tree"])
+    for la, lb in zip(jax.tree.leaves(pk.compute["tree"]),
+                      jax.tree.leaves(cp_res)):
+        np.testing.assert_array_equal(np.asarray(la, np.float32),
+                                      np.asarray(lb, np.float32))
+    np.testing.assert_array_equal(np.asarray(pk.compute["p_amax"]),
+                                  np.asarray(rs.compute["p_amax"]))
+
+
+def _subjaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _slab_copy_counts(closed, rows):
+    """f32 (rows, 512) concatenate (= slab pack) and slice-of-slab
+    (= unpack) equation counts, recursing into sub-jaxprs."""
+    counts = {"concatenate": 0, "slice": 0}
+
+    def visit(jaxpr):
+        for eq in jaxpr.eqns:
+            for v in eq.params.values():
+                for sub in _subjaxprs(v):
+                    visit(sub)
+            if eq.primitive.name == "concatenate":
+                av = eq.outvars[0].aval
+                if av.shape == (rows, 512) and av.dtype == jnp.float32:
+                    counts["concatenate"] += 1
+            elif eq.primitive.name == "slice":
+                av = eq.invars[0].aval
+                if av.shape == (rows, 512) and av.dtype == jnp.float32:
+                    counts["slice"] += 1
+
+    visit(closed.jaxpr)
+    return counts
+
+
+def test_resident_jaxpr_zero_pack_unpack_copies():
+    """The resident step's jaxpr contains ZERO per-step pack/unpack copies
+    of master/moments: no f32 slab concatenates and (with a bf16 compute
+    container, so the forward unpack is not f32 either) no f32 slab
+    slices. The pack-per-step path has both."""
+    from repro.kernels.layout import slab_view
+    from repro.train.train_step import pack_state
+    opt, task, params, grouping, tac, ctl, comp = _toy_states(
+        "sgdm", task=_ToyTaskBF16())
+    sched = lambda s: jnp.asarray(5e-3)
+    view = slab_view(params, grouping)
+    batch = _toy_batch(0)
+
+    res_step = make_train_step(task, tac, opt, grouping, sched,
+                               fused_update=True, resident_params=params)
+    rs = pack_state(view, TrainState(params, {}, opt.init(params), ctl,
+                                     comp), task.compute_dtype)
+    res_counts = _slab_copy_counts(jax.make_jaxpr(res_step)(rs, batch),
+                                   view.rows)
+    assert res_counts == {"concatenate": 0, "slice": 0}, res_counts
+
+    packed_step = make_train_step(task, tac, opt, grouping, sched,
+                                  fused_update=True)
+    pk = TrainState(params, {}, opt.init(params), ctl, comp)
+    pk_counts = _slab_copy_counts(jax.make_jaxpr(packed_step)(pk, batch),
+                                  view.rows)
+    assert pk_counts["concatenate"] > 0 and pk_counts["slice"] > 0, pk_counts
+
+
+def test_resident_requires_fused_and_floating():
+    opt, task, params, grouping, tac, ctl, comp = _toy_states("sgdm")
+    sched = lambda s: jnp.asarray(5e-3)
+    with pytest.raises(ValueError, match="resident"):
+        make_train_step(task, tac, opt, grouping, sched, fused_update=False,
+                        resident_params=params)
+    bad = dict(params, idx={"i": jnp.arange(4, dtype=jnp.int32)})
+    with pytest.raises(ValueError, match="floating"):
+        make_train_step(task, tac, opt, grouping, sched, fused_update=True,
+                        resident_params=bad)
+
+
+@pytest.mark.slow
+def test_resident_row_range_sharded_matches_single_shard():
+    """Row-range sharding over a 2-device data mesh (shard_map around both
+    Pallas sweeps, cross-device segment combine) matches the single-shard
+    oracle. Subprocess: needs XLA_FLAGS device-count forcing before jax
+    init."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert jax.device_count() == 2
+        from jax.sharding import Mesh
+        from repro.core.controller import init_control
+        from repro.core.precision import TriAccelConfig
+        from repro.optim.optimizers import sgdm
+        from repro.train.train_step import (TrainState, init_compute,
+                                            make_train_step, pack_state,
+                                            unpack_state)
+        from repro.kernels.layout import slab_view
+        import repro.launch.sharding as shd
+        from test_fused_update import _ToyTask, _toy_batch
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 1), ("data", "model"))
+        opt = sgdm(0.9, weight_decay=1e-4)
+        task = _ToyTask()
+        params, _ = task.init(jax.random.PRNGKey(3))
+        grouping = task.grouping(params)
+        tac = TriAccelConfig(ladder="tpu", t_ctrl=1000,
+                             enable_curvature=False)
+        ctl = init_control(grouping.num_layers, tac)
+        ctl = ctl._replace(codes=jnp.full_like(ctl.codes, 2))
+        comp = init_compute(task, params, grouping, ctl, tac)
+        sched = lambda s: jnp.asarray(5e-3)
+
+        view1 = slab_view(params, grouping)
+        step1 = jax.jit(make_train_step(task, tac, opt, grouping, sched,
+                                        fused_update=True,
+                                        resident_params=params))
+        st1 = pack_state(view1, TrainState(params, {}, opt.init(params),
+                                           ctl, comp), task.compute_dtype)
+
+        view2 = slab_view(params, grouping, shards=2)
+        step2fn = make_train_step(task, tac, opt, grouping, sched,
+                                  fused_update=True, resident_params=params,
+                                  slab_shards=2, slab_mesh=mesh)
+        st2 = pack_state(view2, TrainState(params, {}, opt.init(params),
+                                           ctl, comp), task.compute_dtype)
+        sh = shd.slab_sharding(mesh, 2)
+        put = lambda x: jax.device_put(x, sh)
+        st2 = TrainState(put(st2.params), st2.aux_state,
+                         {k: (put(v) if k in ("mu", "m", "v") else v)
+                          for k, v in st2.opt_state.items()},
+                         st2.control,
+                         {"slab": put(st2.compute["slab"]),
+                          "p_amax": st2.compute["p_amax"]})
+        with mesh, shd.activation_mesh(mesh):
+            step2 = jax.jit(step2fn)
+            for i in range(5):
+                st1, m1 = step1(st1, _toy_batch(i))
+                st2, m2 = step2(st2, _toy_batch(i))
+        t1 = unpack_state(view1, st1, params)
+        t2 = unpack_state(view2, jax.device_get(st2), params)
+        for la, lb in zip(jax.tree.leaves((t1.params, t1.opt_state)),
+                          jax.tree.leaves((t2.params, t2.opt_state))):
+            np.testing.assert_allclose(np.asarray(la, np.float32),
+                                       np.asarray(lb, np.float32),
+                                       rtol=2e-6, atol=1e-7)
+        print("SHARDED_RESIDENT_OK")
+    """)
+    # inherited flags may already force a device count (launch.dryrun sets
+    # 512 at import time and pollutes the pytest process env) — strip any
+    # prior forcing so ours is the only one the subprocess sees
+    import re
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       os.environ.get("XLA_FLAGS", ""))
+    env = dict(os.environ,
+               XLA_FLAGS=inherited
+               + " --xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.path.dirname(__file__)]))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_RESIDENT_OK" in out.stdout
+
+
+# ======================================================================
+# stochastic rounding on the phase-2 compute cast
+# ======================================================================
+def _pure_cast_apply(p, sr, seed=3.0, cp_dtype=jnp.bfloat16):
+    """lr=0 fused_apply = pure cast of the (unchanged) master."""
+    from repro.kernels import ops
+    from repro.kernels.fused_update import OptSpec
+    from repro.kernels.layout import SLAB_M, SLAB_N
+    zeros = jnp.zeros((p.shape[0] // SLAB_M, SLAB_M), jnp.float32)
+    scalars = jnp.asarray([1.0, 1.0, 1.0, 1.0, seed], jnp.float32)
+    _, _, _, cp, _ = ops.fused_apply(
+        jnp.zeros_like(p), p, jnp.zeros_like(p), None, scalars,
+        zeros.astype(jnp.int32), zeros,
+        jnp.full_like(zeros, 2, jnp.int32), jnp.ones_like(zeros),
+        spec=OptSpec(kind="sgdm", momentum=0.9), ladder="tpu",
+        cp_dtype=cp_dtype, num_layers=1, sr=sr)
+    return cp
+
+
+def test_sr_disabled_is_bitexact_rtn():
+    from repro.kernels.layout import SLAB_M, SLAB_N
+    p = jax.random.normal(KEY, (SLAB_M, SLAB_N)) * 3
+    cp = _pure_cast_apply(p, sr=False)
+    np.testing.assert_array_equal(np.asarray(cp, np.float32),
+                                  np.asarray(p.astype(jnp.bfloat16),
+                                             np.float32))
+
+
+def test_sr_rounds_to_bracketing_bf16_neighbors_deterministically():
+    """SR output is always one of the two bf16 values bracketing the f32
+    input; fixed (seed, step) is deterministic; a different seed picks
+    different directions somewhere."""
+    from repro.kernels.layout import SLAB_M, SLAB_N
+    p = jnp.abs(jax.random.normal(KEY, (SLAB_M, SLAB_N))) + 0.1
+    a = np.asarray(_pure_cast_apply(p, sr=True, seed=3.0), np.float32)
+    b = np.asarray(_pure_cast_apply(p, sr=True, seed=3.0), np.float32)
+    c = np.asarray(_pure_cast_apply(p, sr=True, seed=4.0), np.float32)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any()
+    # bracketing: truncation (toward zero = down for positives) or one ulp up
+    bits = np.asarray(p, np.float32).view(np.uint32)
+    lo = (bits & 0xFFFF0000).view(np.float32)
+    hi = ((bits & 0xFFFF0000) + 0x10000).view(np.float32)
+    assert np.all((a == lo) | (a == hi))
+    assert (a == lo).any() and (a == hi).any()
+
+
+def test_sr_unbiased_and_tighter_than_rtn_in_expectation():
+    """Mean over seeds converges to the f32 value — closer than RTN's
+    systematic bias on a fixed tensor."""
+    from repro.kernels.layout import SLAB_M, SLAB_N
+    p = jax.random.normal(jax.random.fold_in(KEY, 9),
+                          (SLAB_M, SLAB_N)) * 0.37
+    acc = np.zeros(p.shape, np.float64)
+    n_seeds = 64
+    for s in range(n_seeds):
+        acc += np.asarray(_pure_cast_apply(p, sr=True, seed=float(s + 1)),
+                          np.float32)
+    sr_err = np.abs(acc / n_seeds - np.asarray(p, np.float64)).mean()
+    rtn_err = np.abs(np.asarray(p.astype(jnp.bfloat16), np.float32)
+                     - np.asarray(p, np.float32)).mean()
+    assert sr_err < rtn_err * 0.5, (sr_err, rtn_err)
+
+
+def test_sr_statically_disabled_for_f32_container():
+    """SR only makes sense when the cast actually drops mantissa bits:
+    with a f32 compute container fused_apply(sr=True) is the identity
+    cast, bit-equal to sr=False."""
+    from repro.kernels.layout import SLAB_M, SLAB_N
+    p = jax.random.normal(KEY, (SLAB_M, SLAB_N))
+    a = _pure_cast_apply(p, sr=True, cp_dtype=jnp.float32)
+    b = _pure_cast_apply(p, sr=False, cp_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sr_trajectory_matches_rtn_when_disabled_end_to_end():
+    """tac.stochastic_round=False (the default) leaves the resident step's
+    20-step trajectory bit-identical to a step built before the SR knob
+    existed (scalars padded with a zero seed); =True changes the compute
+    copy but never the f32 masters' update rule inputs at step 0."""
+    from repro.kernels.layout import slab_view
+    from repro.train.train_step import pack_state
+    opt, task, params, grouping, tac, ctl, comp = _toy_states(
+        "sgdm", task=_ToyTaskBF16())
+    sched = lambda s: jnp.asarray(5e-3)
+    view = slab_view(params, grouping)
+    tac_sr = dataclasses.replace(tac, stochastic_round=True)
+    mk = lambda t: jax.jit(make_train_step(task, t, opt, grouping, sched,
+                                           fused_update=True,
+                                           resident_params=params))
+    st0 = pack_state(view, TrainState(params, {}, opt.init(params), ctl,
+                                      comp), task.compute_dtype)
+    s_off, s_sr = st0, st0
+    off_step, sr_step = mk(tac), mk(tac_sr)
+    for i in range(3):
+        s_off, _ = off_step(s_off, _toy_batch(i))
+        s_sr, _ = sr_step(s_sr, _toy_batch(i))
+    # masters at step 1 saw the same compute weights (step-0 cast is of the
+    # same master; SR perturbs the cast), so trajectories diverge — but the
+    # OFF run must match itself re-run (determinism) and differ from SR
+    s_off2 = st0
+    for i in range(3):
+        s_off2, _ = off_step(s_off2, _toy_batch(i))
+    np.testing.assert_array_equal(np.asarray(s_off.params),
+                                  np.asarray(s_off2.params))
+    assert (np.asarray(s_sr.compute["slab"], np.float32)
+            != np.asarray(s_off.compute["slab"], np.float32)).any()
 
 
 def test_serve_engine_accepts_amax_tree():

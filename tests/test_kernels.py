@@ -356,7 +356,8 @@ def test_kernels_bench_emits_all_rows(capsys):
         for impl in ("flash", "chunked"):
             expected += [f"attn_{impl}_fwd_S{S}", f"attn_{impl}_fwdbwd_S{S}"]
     for n in kernels_bench.UPDATE_PARAM_SWEEP:
-        expected += [f"update_fused_{n}", f"update_ref_{n}"]
+        expected += [f"update_resident_{n}", f"update_resident_sr_{n}",
+                     f"update_packed_{n}", f"update_ref_{n}"]
     for name in expected:
         assert f"kernels:{name}," in out, name
     # the bytes model the sweep prints: fused <= 2 gradient-footprint
