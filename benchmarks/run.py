@@ -36,8 +36,10 @@ def main() -> None:
     sys.stdout.flush()
 
     from benchmarks import serve_bench
-    print("# serving: tok/s + modeled HBM per (batch rung x precision tier)")
-    serve_bench.main(steps=5 if args.quick else 20)
+    print("# serving: tok/s + modeled HBM per (batch rung x precision tier),"
+          " then SLO traffic percentiles (writes BENCH_serve.json)")
+    serve_bench.main(steps=5 if args.quick else 20,
+                     trace_steps=16 if args.quick else 48)
     sys.stdout.flush()
 
     if not args.skip_vision:

@@ -1,4 +1,6 @@
-"""§Serving benchmark: decode throughput and modeled HBM at each
+"""§Serving benchmark: two legs.
+
+Leg 1 (decode sweep, ``run()``): decode throughput and modeled HBM at each
 (batch rung x precision tier) for one sub-quadratic arch (recurrentgemma-2b:
 O(1) recurrent state + window-bounded KV) and one full-attention arch
 (smollm-135m: full-length KV).
@@ -13,9 +15,16 @@ executable at that (rung, tier) — the controller's actual feedback signal —
 so modeled-vs-measured calibration drift is visible per rung x tier (on the
 production config the two columns describe the same executable).
 
+Leg 2 (traffic, ``traffic_run()``): an SLO-scheduled, chunked-prefill
+ServeSession under bursty Poisson traffic with two priority classes and
+mixed prompt/output lengths (repro.serve.traffic). Reports per-class
+p50/p99 queue + completion latency and the deadline-hit rate alongside
+tok/s, and persists the schema-validated BENCH_serve.json artifact
+(validator shared with bench_update; CI's slow leg re-validates the file).
+
 CSV (one section of benchmarks/run.py): serve:arch,rung,tier,tok_s,
-hbm_model_gb,hbm_meas_gb,fits. ``--out`` additionally writes one
-dry-run-style JSON artifact per cell.
+hbm_model_gb,hbm_meas_gb,fits — then serve_traffic:class,... rows.
+``--out`` additionally writes one dry-run-style JSON artifact per cell.
 """
 from __future__ import annotations
 
@@ -26,9 +35,56 @@ import time
 
 import numpy as np
 
+from benchmarks.bench_update import validate
+
 ARCHS = ("recurrentgemma-2b", "smollm-135m")
 RUNGS = (1, 4, 16)
 TIERS = (0, 1, 2)
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "BENCH_serve.json")
+
+_NUM_N = {"type": "number", "nullable": True}
+_CLASS_ROW = {
+    "type": "object",
+    "fields": {
+        "priority": {"type": "number"},
+        "submitted": {"type": "number"},
+        "completed": {"type": "number"},
+        "rejected": {"type": "number"},
+        "completion_ms_p50": _NUM_N,
+        "completion_ms_p99": _NUM_N,
+        "queue_steps_p50": _NUM_N,
+        "queue_steps_p99": _NUM_N,
+        "deadline_hit_rate": _NUM_N,
+    },
+}
+SERVE_SCHEMA = {
+    "type": "object",
+    "fields": {
+        "schema_version": {"type": "number"},
+        "area": {"type": "string"},
+        "generated_unix": {"type": "number"},
+        "backend": {"type": "string"},
+        "arch": {"type": "string"},
+        "schedule": {"type": "string"},
+        "prefill_chunk": {"type": "number"},
+        "trace_steps": {"type": "number"},
+        "offered": {"type": "number"},
+        "steps": {"type": "number"},
+        "decoded_tokens": {"type": "number"},
+        "tok_s": {"type": "number"},
+        "warm_s": {"type": "number"},
+        "serve_s": {"type": "number"},
+        "compile_count": {"type": "number"},
+        "rejected": {"type": "number"},
+        "queue_steps_p50": _NUM_N,
+        "queue_steps_p99": _NUM_N,
+        "ttft_s_p50": _NUM_N,
+        "ttft_s_p99": _NUM_N,
+        "classes": {"type": "list", "items": _CLASS_ROW},
+    },
+}
 
 
 def run(archs=ARCHS, rungs=RUNGS, tiers=TIERS, steps: int = 20,
@@ -76,7 +132,60 @@ def run(archs=ARCHS, rungs=RUNGS, tiers=TIERS, steps: int = 20,
     return rows
 
 
-def main(steps: int = 20, out_dir=None):
+def traffic_run(arch: str = "smollm-135m", trace_steps: int = 48,
+                seed: int = 0) -> dict:
+    """Leg 2: bursty two-class traffic against an SLO-scheduled,
+    chunked-prefill session; returns the BENCH_serve.json document."""
+    import jax
+    from repro.models.registry import get_task
+    from repro.serve import ServeConfig, ServeSession, TrafficClass
+    from repro.serve.traffic import drive, poisson_trace
+
+    task = get_task(arch, reduced=True)
+    cfg = ServeConfig(prompt_len=8, total_len=32, rungs=(1, 2, 4), tiers=(1,),
+                      max_new_tokens=6, t_ctrl=4, prefill_chunk=4,
+                      schedule="slo", latency_slo_ms={0: 250.0})
+    sess = ServeSession(task, cfg)
+    sess.warm()
+    # class 0: urgent, deadlined, short prompts; class 2: bursty background
+    # with longer mixed prompts — the starvation/aging pressure case
+    classes = (
+        TrafficClass(priority=0, rate=0.12, prompt_lens=(4, 8),
+                     new_tokens=(4, 6), deadline_ms=120_000.0),
+        TrafficClass(priority=2, rate=0.08, prompt_lens=(8, 14, 20),
+                     new_tokens=(4, 6), burst_every=12, burst_size=3),
+    )
+    trace = poisson_trace(classes, trace_steps, seed=seed)
+    rep = drive(sess, trace, vocab=int(task.cfg.vocab_size), seed=seed)
+    return {
+        "schema_version": 1,
+        "area": "serve",
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "arch": arch,
+        "schedule": cfg.schedule,
+        "prefill_chunk": int(cfg.prefill_chunk),
+        "trace_steps": int(trace_steps),
+        "offered": int(rep["offered"]),
+        "steps": int(rep["steps"]),
+        "decoded_tokens": int(rep["decoded_tokens"]),
+        "tok_s": round(rep["tok_s"], 3),
+        "warm_s": round(rep["warm_s"], 4),
+        "serve_s": round(rep["serve_s"], 4),
+        "compile_count": int(rep["compile_count"]),
+        "rejected": int(rep["rejected"]),
+        "queue_steps_p50": rep["queue_steps_p50"],
+        "queue_steps_p99": rep["queue_steps_p99"],
+        "ttft_s_p50": rep["ttft_s_p50"],
+        "ttft_s_p99": rep["ttft_s_p99"],
+        "classes": [dict({"priority": int(c)}, **v)
+                    for c, v in sorted(rep["classes"].items(),
+                                       key=lambda kv: int(kv[0]))],
+    }
+
+
+def main(steps: int = 20, out_dir=None, trace_steps: int = 48,
+         artifact: str = ARTIFACT):
     rows = run(steps=steps)
     print("serve:arch,rung,tier,tok_s,hbm_model_gb,hbm_meas_gb,fits")
     for r in rows:
@@ -94,11 +203,38 @@ def main(steps: int = 20, out_dir=None):
             with open(fn, "w") as f:
                 json.dump(dict(r, shape=f"serve_r{r['rung']}_t{r['tier']}",
                                status="ok"), f, indent=1)
+    doc = traffic_run(trace_steps=trace_steps)
+    errs = validate(doc, SERVE_SCHEMA)
+    if errs:
+        raise SystemExit("BENCH_serve schema violation:\n" + "\n".join(errs))
+    if artifact:
+        os.makedirs(os.path.dirname(artifact), exist_ok=True)
+        with open(artifact, "w") as f:
+            json.dump(doc, f, indent=1)
+    fmt = lambda v, p=1: "na" if v is None else f"{v:.{p}f}"  # noqa: E731
+    print("serve_traffic:class,submitted,completed,rejected,"
+          "completion_ms_p50,completion_ms_p99,queue_p50,queue_p99,"
+          "deadline_hit")
+    for c in doc["classes"]:
+        print("serve_traffic:" + ",".join([
+            str(c["priority"]), str(c["submitted"]), str(c["completed"]),
+            str(c["rejected"]), fmt(c["completion_ms_p50"]),
+            fmt(c["completion_ms_p99"]), fmt(c["queue_steps_p50"]),
+            fmt(c["queue_steps_p99"]), fmt(c["deadline_hit_rate"], 3)]))
+    print(f"serve_traffic:# tok_s={doc['tok_s']:.1f} warm_s={doc['warm_s']} "
+          f"serve_s={doc['serve_s']} rejected={doc['rejected']} "
+          f"compiles={doc['compile_count']}")
+    if artifact:
+        print(f"serve_traffic:# wrote {artifact}")
+    return doc
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--trace-steps", type=int, default=48)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--artifact", default=ARTIFACT)
     args = ap.parse_args()
-    main(steps=args.steps, out_dir=args.out)
+    main(steps=args.steps, out_dir=args.out, trace_steps=args.trace_steps,
+         artifact=args.artifact)

@@ -8,40 +8,26 @@ the vision testbed included.
 
 Requests arrive in waves (half up front, half mid-flight) so the session
 exercises admission, rung growth, and shrink within one run.
+
+With ``--traffic`` the session instead serves a bursty two-priority-class
+Poisson workload through the SLO scheduler with chunked prefill
+(DESIGN.md §11): mixed variable-length prompts, deadlines on the urgent
+class, per-class p50/p99 latency + deadline-hit reporting.
+
+    PYTHONPATH=src python examples/elastic_serve.py --traffic \
+        --trace-steps 24 --chunk 4
 """
 import argparse
+import json
 
 import numpy as np
 
 from repro.models import registry
-from repro.serve import ServeConfig, ServeSession
+from repro.serve import ServeConfig, ServeSession, TrafficClass
+from repro.serve.traffic import drive, poisson_trace
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="recurrentgemma-2b",
-                    choices=registry.list_tasks())
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--rungs", default="1,2,4")
-    ap.add_argument("--tiers", default="0,1",
-                    help="decode-weight precision tiers to warm "
-                         "(0=fp8 QDQ, 1=bf16, 2=fp32)")
-    args = ap.parse_args()
-
-    task = registry.get_task(args.arch, reduced=True)
-    rungs = tuple(sorted(int(r) for r in args.rungs.split(",")))
-    tiers = tuple(int(t) for t in args.tiers.split(","))
-    cfg = ServeConfig(prompt_len=args.prompt_len,
-                      total_len=args.prompt_len + args.gen + 8,
-                      rungs=rungs, tiers=tiers, max_new_tokens=args.gen,
-                      t_ctrl=8)
-    sess = ServeSession(task, cfg)
-    compiles = sess.warm()
-    print(f"arch={args.arch} warmed {compiles} executables "
-          f"(rungs={rungs} x tiers={tiers})")
-
+def run_waves(task, sess, compiles, args):
     # deterministic synthetic requests from the task's own stream
     batch = task.data_stream(max(args.requests, 1), seed=0,
                              seq_len=args.prompt_len).batch(0)
@@ -66,9 +52,69 @@ def main():
           f"{stats['compile_count'] - compiles}")
     for rid, req in sorted(sess.results().items()):
         if task.serves_tokens:
-            print(f"  req {rid}: {req.tokens[:12]}{'...' if len(req.tokens) > 12 else ''}")
+            print(f"  req {rid}: {req.tokens[:12]}"
+                  f"{'...' if len(req.tokens) > 12 else ''}")
         else:
             print(f"  req {rid}: class={req.result}")
+
+
+def run_traffic(task, sess, compiles, args):
+    gen = (max(args.gen // 2, 1), args.gen)
+    classes = [
+        TrafficClass(priority=0, rate=0.12,
+                     prompt_lens=(max(args.prompt_len // 2, 1),
+                                  args.prompt_len),
+                     new_tokens=gen, deadline_ms=120_000.0),
+        TrafficClass(priority=2, rate=0.08,
+                     prompt_lens=(args.prompt_len, args.prompt_len + 4),
+                     new_tokens=gen, burst_every=8, burst_size=2),
+    ]
+    trace = poisson_trace(classes, args.trace_steps, seed=args.seed)
+    rep = drive(sess, trace, vocab=int(task.cfg.vocab_size), seed=args.seed)
+    print(f"traffic: offered={rep['offered']} steps={rep['steps']} "
+          f"tok_s={rep['tok_s']:.1f} rejected={rep['rejected']} "
+          f"new compiles after warm-up: {rep['compile_count'] - compiles}")
+    print(json.dumps(rep["classes"], indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b",
+                    choices=registry.list_tasks())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--rungs", default="1,2,4")
+    ap.add_argument("--tiers", default="0,1",
+                    help="decode-weight precision tiers to warm "
+                         "(0=fp8 QDQ, 1=bf16, 2=fp32)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="bursty two-class SLO workload instead of waves")
+    ap.add_argument("--trace-steps", type=int, default=24)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="chunked-prefill size (0 = whole-prompt)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    task = registry.get_task(args.arch, reduced=True)
+    rungs = tuple(sorted(int(r) for r in args.rungs.split(",")))
+    tiers = tuple(int(t) for t in args.tiers.split(","))
+    cfg = ServeConfig(prompt_len=args.prompt_len,
+                      total_len=args.prompt_len + args.gen + 8,
+                      rungs=rungs, tiers=tiers, max_new_tokens=args.gen,
+                      t_ctrl=8,
+                      prefill_chunk=args.chunk or None,
+                      schedule="slo" if args.traffic else "fifo",
+                      latency_slo_ms={0: 120_000.0} if args.traffic else None)
+    sess = ServeSession(task, cfg)
+    compiles = sess.warm()
+    print(f"arch={args.arch} warmed {compiles} executables "
+          f"(rungs={rungs} x tiers={tiers}"
+          f"{f' x chunk={args.chunk}' if sess.chunked else ''})")
+    if args.traffic:
+        run_traffic(task, sess, compiles, args)
+    else:
+        run_waves(task, sess, compiles, args)
 
 
 if __name__ == "__main__":

@@ -183,8 +183,21 @@ class BatchScaler:
                                   self.rungs[idx] * self.seq_len, codes,
                                   self.cfg.ladder)
 
+    def _cap_index(self, rung_cap: Optional[int]) -> Optional[int]:
+        """Index of the largest rung <= ``rung_cap`` (0 when the cap is
+        below every configured rung — the ceiling throttles, it never makes
+        the ladder empty)."""
+        if rung_cap is None:
+            return None
+        idx = 0
+        for i, r in enumerate(self.rungs):
+            if r <= rung_cap:
+                idx = i
+        return idx
+
     def observe(self, step: int, codes=None,
-                measured_bytes: Optional[float] = None) -> int:
+                measured_bytes: Optional[float] = None,
+                rung_cap: Optional[int] = None) -> int:
         """Apply the paper's hysteresis law; returns the (possibly new) rung.
 
         ``measured_bytes`` (harvested ``memory_analysis()`` of the current
@@ -194,7 +207,13 @@ class BatchScaler:
         when the next rung was warmed, measurement-scaled analytic otherwise
         — and can no longer disagree with the observation (the uncalibrated
         guard oscillated: climb on optimistic analytic, back off on the
-        measurement, repeat)."""
+        measurement, repeat).
+
+        ``rung_cap`` is the latency ceiling (repro.serve.scheduler
+        .LatencyTable.latency_rung): the largest rung whose modeled p99
+        step time fits the tightest SLO class budget. The climb guard never
+        crosses it, and a rung already above it steps down — the latency
+        twin of the memory law, sharing its hysteresis cadence."""
         if not self.cfg.enable_batch:
             return self.microbatch
         if measured_bytes is not None:
@@ -205,12 +224,17 @@ class BatchScaler:
         else:
             mem = self._mem(self.idx, codes)
         cap = self.cfg.mem_cap_bytes
+        cap_i = self._cap_index(rung_cap)
         if mem < self.cfg.rho_low * cap and self.idx + 1 < len(self.rungs):
             nxt = min(self.idx + self.cfg.delta_up, len(self.rungs) - 1)
+            if cap_i is not None:
+                nxt = min(nxt, cap_i)
             # only climb if the calibrated model predicts the next rung fits
-            if self._mem(nxt, codes) <= self.cfg.rho_high * cap:
+            if nxt > self.idx and self._mem(nxt, codes) <= self.cfg.rho_high * cap:
                 self.idx = nxt
         elif mem > self.cfg.rho_high * cap and self.idx > 0:
             self.idx = max(self.idx - self.cfg.delta_down, 0)
+        if cap_i is not None and self.idx > cap_i:
+            self.idx = max(self.idx - self.cfg.delta_down, cap_i)
         self.history.append((step, self.microbatch, mem))
         return self.microbatch

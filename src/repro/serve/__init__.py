@@ -4,8 +4,13 @@ executables, and precision-adaptive decode weights. See DESIGN.md §6."""
 from repro.serve.batching import Request, RequestQueue, pick_rung
 from repro.serve.engine import ServeEngine, repack_caches, scatter_prefill, \
     tier_params
+from repro.serve.scheduler import LatencyTable, Scheduler, SchedulerConfig
 from repro.serve.session import ServeConfig, ServeSession
+from repro.serve.traffic import Arrival, TrafficClass, class_report, drive, \
+    poisson_trace
 
 __all__ = ["Request", "RequestQueue", "pick_rung", "ServeEngine",
            "ServeConfig", "ServeSession", "repack_caches", "scatter_prefill",
-           "tier_params"]
+           "tier_params", "Scheduler", "SchedulerConfig", "LatencyTable",
+           "TrafficClass", "Arrival", "poisson_trace", "class_report",
+           "drive"]

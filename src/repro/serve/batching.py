@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -28,53 +29,86 @@ import numpy as np
 class Request:
     """One serving request. ``inputs`` holds UNBATCHED arrays: ``tokens``
     (P,), optionally ``frontend_embeds`` (Se, F) for enc-dec, or ``images``
-    (H, W, C) for the vision testbed."""
+    (H, W, C) for the vision testbed.
+
+    Scheduling metadata (repro.serve.scheduler): ``priority`` is the SLO
+    class (0 = most urgent), ``deadline_ms`` an optional completion deadline
+    relative to ``submit_time``. The FIFO queue carries both unused."""
 
     rid: int
     inputs: Dict[str, np.ndarray]
     max_new_tokens: int = 16
-    status: str = "queued"            # queued | active | done
+    priority: int = 1
+    deadline_ms: Optional[float] = None
+    status: str = "queued"       # queued | prefilling | active | done | rejected
     tokens: List[int] = dataclasses.field(default_factory=list)
     result: Optional[int] = None      # vision: predicted class
     slot: Optional[int] = None
     index: int = 0                    # next decode position
+    prefill_pos: int = 0              # prompt tokens already consumed (chunked)
+    submitted_step: int = -1
     admitted_step: int = -1
+    first_token_step: int = -1
     finished_step: int = -1
+    submit_time: float = 0.0          # wall clocks for latency percentiles
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
 
     @property
     def done(self) -> bool:
         return self.status == "done"
 
+    @property
+    def prompt_len(self) -> int:
+        t = self.inputs.get("tokens")
+        return int(t.shape[-1]) if t is not None else 0
+
 
 class RequestQueue:
-    """FIFO queue with stable ids."""
+    """FIFO queue with stable ids — the degenerate admission policy
+    (priority/deadline-aware admission lives in repro.serve.scheduler)."""
 
     def __init__(self):
         self._q: collections.deque = collections.deque()
         self._next_rid = 0
 
     def submit(self, inputs: Dict[str, np.ndarray],
-               max_new_tokens: int = 16) -> Request:
+               max_new_tokens: int = 16, priority: int = 1,
+               deadline_ms: Optional[float] = None,
+               submitted_step: int = -1) -> Request:
         req = Request(rid=self._next_rid,
                       inputs={k: np.asarray(v) for k, v in inputs.items()},
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens, priority=priority,
+                      deadline_ms=deadline_ms, submitted_step=submitted_step,
+                      submit_time=time.time())
         self._next_rid += 1
         self._q.append(req)
         return req
 
-    def pop(self) -> Optional[Request]:
+    def pop(self, **ctx) -> Optional[Request]:
+        """FIFO pop; the scheduling context (``now_step``/latency estimates)
+        that drives the SLO scheduler is accepted and ignored."""
+        del ctx
         return self._q.popleft() if self._q else None
+
+    def depth_by_class(self) -> Dict[int, int]:
+        depth: Dict[int, int] = {}
+        for r in self._q:
+            depth[r.priority] = depth.get(r.priority, 0) + 1
+        return depth
 
     def __len__(self) -> int:
         return len(self._q)
 
 
 def pick_rung(rungs: Sequence[int], active: int, queued: int,
-              capacity_rung: int) -> int:
+              capacity_rung: int, latency_rung: Optional[int] = None) -> int:
     """The serving rung for the current load: the smallest configured rung
     covering ``active + queued`` requests, capped by the memory controller's
-    ``capacity_rung`` — but never below the smallest rung that still holds
-    every in-flight request (no eviction)."""
+    ``capacity_rung`` AND the latency controller's ``latency_rung`` (the
+    largest rung whose modeled p99 step time fits the tightest class budget
+    — None means no latency ceiling) — but never below the smallest rung
+    that still holds every in-flight request (no eviction)."""
     want = max(active + queued, 1)
     target = rungs[-1]
     for r in rungs:
@@ -82,6 +116,8 @@ def pick_rung(rungs: Sequence[int], active: int, queued: int,
             target = r
             break
     target = min(target, capacity_rung)
+    if latency_rung is not None:
+        target = min(target, latency_rung)
     for r in rungs:                      # floor: active requests must fit
         if r >= active:
             return max(target, r)

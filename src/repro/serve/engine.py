@@ -22,6 +22,7 @@ switches and across rung repacks.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -107,7 +108,8 @@ class ServeEngine:
     def __init__(self, task, params, aux_state=None, *, total_len: int,
                  prompt_len: int, rungs: Sequence[int],
                  tiers: Sequence[int] = (1,), ladder: str = "tpu",
-                 cache_dtype=jnp.bfloat16, amax_tree=None):
+                 cache_dtype=jnp.bfloat16, amax_tree=None,
+                 prefill_chunk: Optional[int] = None):
         assert list(rungs) == sorted(set(rungs)) and rungs, rungs
         self.task = task
         self.total_len = int(total_len)
@@ -121,11 +123,24 @@ class ServeEngine:
                                               amax_tree=amax_tree)
                                for t in self.tiers}
         self.input_spec = task.serve_input_spec(self.prompt_len)
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
         self._exe: Dict[Tuple, Any] = {}
         # measured memory_analysis() bytes per executable, same keys as the
         # AOT cache (("decode", rung, tier), ...), max over hosts
         self.measured: Dict[Tuple, float] = {}
         self.compile_count = 0
+        self.compile_s = 0.0     # wall seconds spent in lower().compile()
+
+    @property
+    def supports_chunked(self) -> bool:
+        """Chunked prefill runs the prompt through the decode hook, so it
+        covers every tokens-only task (dense/MoE/SSM/hybrid/VLM-stub LMs);
+        enc-dec admission must run the encoder and stays whole-prompt."""
+        return self.task.serves_tokens and set(self.input_spec) == {"tokens"}
+
+    @property
+    def chunked(self) -> bool:
+        return self.prefill_chunk is not None and self.supports_chunked
 
     # ------------------------------------------------------------ shapes --
     def _batch_spec(self, rung: int) -> Dict[str, SDS]:
@@ -149,7 +164,9 @@ class ServeEngine:
     def _get(self, key, fn, arg_sds, donate=()):
         exe = self._exe.get(key)
         if exe is None:
+            t0 = time.time()
             exe = jax.jit(fn, donate_argnums=donate).lower(*arg_sds).compile()
+            self.compile_s += time.time() - t0
             self._exe[key] = exe
             self.compile_count += 1
             self._harvest(key, exe)
@@ -167,7 +184,7 @@ class ServeEngine:
         transient rung-pair gathers and are not part of a rung's steady
         state.) None until something at the key has been compiled."""
         keys = (("decode", rung, tier), ("admit", rung, tier),
-                ("infer", rung, tier))
+                ("chunk", rung, tier), ("infer", rung, tier))
         vals = [self.measured[k] for k in keys if k in self.measured]
         return max(vals) if vals else None
 
@@ -180,11 +197,74 @@ class ServeEngine:
 
     def _decode_exe(self, rung: int, tier: int):
         from repro.train.serve import make_decode_fn
+        dec = make_decode_fn(self.task)
+
+        def decode(params, caches, token, index, valid):
+            # ``valid`` masks the per-row cache WRITE: empty and
+            # mid-chunked-prefill slots keep their rows bit-identical (a
+            # decode step must not advance another request's state — SSM/
+            # RG-LRU recurrences are not idempotent, and a spurious K/V row
+            # at a real position would alias a later write).
+            out, new = dec(params, caches, token, index)
+
+            def keep(old, nw):
+                m = valid.reshape((1, valid.shape[0]) + (1,) * (nw.ndim - 2))
+                return jnp.where(m, nw, old)
+            return out, jax.tree.map(keep, caches, new)
+
         args = (self._abstract(self.params_by_tier[tier]),
                 self._cache_sds(rung), SDS((rung,), jnp.int32),
-                SDS((rung,), jnp.int32))
-        return self._get(("decode", rung, tier), make_decode_fn(self.task),
-                         args, donate=(1,))
+                SDS((rung,), jnp.int32), SDS((rung,), jnp.bool_))
+        return self._get(("decode", rung, tier), decode, args, donate=(1,))
+
+    def _chunk_exe(self, rung: int, tier: int):
+        """One prefill chunk for ONE request: gather the slot's cache rows,
+        teacher-force up to ``prefill_chunk`` prompt tokens through the
+        task's decode hook (a lax.scan — works unchanged for ring KV, SSM,
+        and RG-LRU state), and scatter the rows back. ``fresh`` clears the
+        row first (no state leaks from the slot's previous occupant);
+        ``nvalid`` masks pad lanes of the ragged tail chunk to exact no-ops.
+        The scan reuses the single-token decode graph, so chunked and
+        whole-batch decode share numerics — the parity seam the bit-identity
+        test stands on (tests/test_scheduler.py)."""
+        task = self.task
+        C = self.prefill_chunk
+        spec1 = self._batch_spec(1)
+        total_len, cache_dtype = self.total_len, self.cache_dtype
+        vocab = int(jax.eval_shape(
+            lambda p, c: task.decode(p, c, jnp.zeros((1,), jnp.int32), 0)[0],
+            self._abstract(self.params_by_tier[tier]),
+            self._cache_sds(1)).shape[-1])
+
+        def chunk(params, caches, slot, tokens, start, nvalid, fresh):
+            row = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                caches)
+            empty = task.init_cache(spec1, total_len, dtype=cache_dtype)
+            row = jax.tree.map(lambda r, e: jnp.where(fresh, e.astype(r.dtype), r),
+                               row, empty)
+
+            def body(carry, xs):
+                c1, last = carry
+                tok, j = xs
+                logits, c2 = task.decode(params, c1, tok[None], start + j)
+                ok = j < nvalid
+                c1 = jax.tree.map(lambda a, b: jnp.where(ok, b, a), c1, c2)
+                last = jnp.where(ok, logits[0].astype(jnp.float32), last)
+                return (c1, last), None
+
+            (row, last), _ = jax.lax.scan(
+                body, (row, jnp.zeros((vocab,), jnp.float32)),
+                (tokens, jnp.arange(C, dtype=jnp.int32)))
+            caches = jax.tree.map(
+                lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                    c, r, slot, axis=1), caches, row)
+            return jnp.argmax(last).astype(jnp.int32), caches
+
+        args = (self._abstract(self.params_by_tier[tier]),
+                self._cache_sds(rung), SDS((), jnp.int32), SDS((C,), jnp.int32),
+                SDS((), jnp.int32), SDS((), jnp.int32), SDS((), jnp.bool_))
+        return self._get(("chunk", rung, tier), chunk, args, donate=(1,))
 
     def _admit_exe(self, rung: int, tier: int):
         task = self.task
@@ -212,16 +292,21 @@ class ServeEngine:
 
     # --------------------------------------------------------- warm + run --
     def warm(self):
-        """Pre-compile every executable the session can dispatch: decode and
-        admit per (rung, tier) — infer for cache-free tasks — plus repack for
-        every ordered rung pair. After this, serving triggers zero new XLA
-        compilations (probed in tests/test_serve.py) and ``measured`` holds
-        every executable's real memory_analysis() footprint."""
+        """Pre-compile every executable the session can dispatch: decode
+        plus admit (whole-prompt) OR chunk (chunked prefill) per (rung,
+        tier) — infer for cache-free tasks — plus repack for every ordered
+        rung pair. After this, serving triggers zero new XLA compilations
+        (probed in tests/test_serve.py and test_scheduler.py) and
+        ``measured`` holds every executable's real memory_analysis()
+        footprint."""
         for rung in self.rungs:
             for tier in self.tiers:
                 if self.task.serves_tokens:
                     self._decode_exe(rung, tier)
-                    self._admit_exe(rung, tier)
+                    if self.chunked:
+                        self._chunk_exe(rung, tier)
+                    else:
+                        self._admit_exe(rung, tier)
                 else:
                     self._infer_exe(rung, tier)
         if self.task.serves_tokens:
@@ -231,10 +316,27 @@ class ServeEngine:
                         self._repack_exe(a, b)
         return self.compile_count
 
-    def decode(self, rung, tier, caches, token, index):
+    def decode(self, rung, tier, caches, token, index, valid=None):
         exe = self._decode_exe(rung, tier)
+        if valid is None:
+            valid = jnp.ones((rung,), jnp.bool_)
         return exe(self.params_by_tier[tier], caches,
-                   jnp.asarray(token, jnp.int32), jnp.asarray(index, jnp.int32))
+                   jnp.asarray(token, jnp.int32), jnp.asarray(index, jnp.int32),
+                   jnp.asarray(valid, jnp.bool_))
+
+    def chunk_admit(self, rung, tier, caches, slot, tokens, start, nvalid,
+                    fresh):
+        """Run one prefill chunk for the request in ``slot``: ``tokens`` is
+        the (prefill_chunk,)-padded prompt slice starting at position
+        ``start`` with ``nvalid`` real lanes; ``fresh`` clears the slot's
+        rows first (first chunk). Returns (argmax of the last valid
+        position's logits — the request's first token once the final chunk
+        lands — and the updated caches)."""
+        exe = self._chunk_exe(rung, tier)
+        return exe(self.params_by_tier[tier], caches,
+                   jnp.asarray(slot, jnp.int32), jnp.asarray(tokens, jnp.int32),
+                   jnp.asarray(start, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+                   jnp.asarray(fresh, jnp.bool_))
 
     def admit(self, rung, tier, caches, slot, batch1):
         exe = self._admit_exe(rung, tier)

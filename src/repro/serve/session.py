@@ -1,28 +1,38 @@
 """ServeSession: elastic continuous-batching serving loop over any
 ServableTask (LM, enc-dec, or the vision testbed).
 
-One session owns a request queue, a slot array at the current batch rung,
-the batched decode caches, and a ``ServeEngine`` of AOT-warmed executables.
-Each ``step()``:
+One session owns an admission queue (FIFO, or the SLO scheduler —
+priority classes, deadlines, aging — from repro.serve.scheduler), a slot
+array at the current batch rung, the batched decode caches, and a
+``ServeEngine`` of AOT-warmed executables. Each ``step()``:
 
   1. control cadence (every ``t_ctrl`` steps): the §3.3 BatchScaler over the
      task's ``serve_memory_model`` updates the memory-capacity rung
      MEASURED-FIRST — ``warm()`` harvests every (rung, tier) executable's
      ``memory_analysis()`` bytes into the model's overlay, so both the
-     pressure signal and the climb guard run on real footprints (analytic
-     weights-at-tier + KV-bytes only for never-compiled combinations) — and,
-     when ``auto_tier``, the decode-weight precision tier is re-picked: the
-     highest-precision configured tier whose (measured-first) footprint fits
-     under rho_high * cap;
+     pressure signal and the climb guard run on real footprints — the
+     latency ceiling is refreshed from the measured per-step latency table
+     (the largest rung whose modeled p99 step time fits the tightest SLO
+     class budget — DESIGN.md §11), and, when ``auto_tier``, the
+     decode-weight precision tier is re-picked: the highest-precision
+     configured tier whose (measured-first) footprint fits under
+     rho_high * cap;
   2. rung resize: grow/shrink to the smallest configured rung covering the
-     load (never evicting in-flight requests), repacking cache rows through
-     a pre-compiled gather — in-flight outputs are bit-identical across the
-     transition (tests/test_serve.py);
-  3. admission: queued requests fill free slots — one compiled prefill
-     scatters the prompt's K/V into the slot's cache rows (ring-aware for
-     sliding-window layers);
+     load (never evicting in-flight requests), capped by BOTH the memory
+     and latency controllers, repacking cache rows through a pre-compiled
+     gather — in-flight outputs are bit-identical across the transition
+     (tests/test_serve.py);
+  3. admission: queued requests fill free slots in scheduler order. Whole-
+     prompt admission scatters one compiled prefill into the slot's cache
+     rows (ring-aware); with ``prefill_chunk`` set, the prompt is instead
+     consumed in fixed-size chunks — ONE chunk per request per step,
+     teacher-forced through the decode hook against the slot's own rows —
+     so a long prompt never stalls the in-flight decodes (step 4 still runs
+     every step while the chunks land);
   4. one decode step for EVERY active slot, each at its own position
-     (token-level continuous batching: the decode index is a (B,) vector).
+     (token-level continuous batching: the decode index is a (B,) vector;
+     empty and still-prefilling rows are masked to exact cache no-ops).
+     The step's wall time feeds the (rung, tier) latency table.
 
 Cache-free tasks (vision) skip 3–4 and serve whole requests per step
 through the batched ``infer`` executable at the same rung/tier rails.
@@ -42,12 +52,17 @@ from repro.core.precision import TriAccelConfig
 from repro.nn.module import split_params
 from repro.serve.batching import Request, RequestQueue, pick_rung
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import LatencyTable, Scheduler, SchedulerConfig
 from repro.train.serve import as_task
+
+
+def _pct(xs, q) -> Optional[float]:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    prompt_len: int = 16
+    prompt_len: int = 16              # fixed prompt length (whole-prompt mode)
     total_len: int = 48               # cache horizon: prompt + generation
     rungs: Tuple[int, ...] = (2, 4)   # batch rung ladder (ascending)
     tiers: Tuple[int, ...] = (1,)     # decode-weight precision tiers warmed
@@ -58,6 +73,17 @@ class ServeConfig:
     mem_cap_bytes: float = 16e9
     auto_tier: bool = True
     seed: int = 0
+    # --- SLO scheduling (DESIGN.md §11) ---------------------------------
+    # chunked prefill: prompt tokens consumed per admission step; None =
+    # whole-prompt admission with the fixed prompt_len (the PR-2 behavior).
+    # With a chunk size set, prompts are VARIABLE length (1..total_len-1).
+    prefill_chunk: Optional[int] = None
+    schedule: str = "fifo"            # "fifo" | "slo" admission policy
+    aging_steps: int = 64             # SLO scheduler: starvation-freedom aging
+    on_infeasible: str = "reject"     # SLO scheduler: "reject" | "degrade"
+    # per-priority-class p99 DECODE-STEP budget (ms); the latency ceiling
+    # stops the rung climbing past the tightest budget of any class present
+    latency_slo_ms: Optional[Dict[int, float]] = None
 
 
 class ServeSession:
@@ -87,15 +113,27 @@ class ServeSession:
         self.engine = ServeEngine(
             self.task, params, aux_state, total_len=cfg.total_len,
             prompt_len=cfg.prompt_len, rungs=cfg.rungs, tiers=tiers,
-            ladder=cfg.ladder, cache_dtype=cfg.cache_dtype)
+            ladder=cfg.ladder, cache_dtype=cfg.cache_dtype,
+            prefill_chunk=cfg.prefill_chunk)
+        self.chunked = self.engine.chunked
         self.rung = cfg.rungs[0]
         self.slots: List[Optional[Request]] = [None] * self.rung
         self.caches = (self.engine.init_caches(self.rung)
                        if self.task.serves_tokens else None)
-        self.queue = RequestQueue()
+        if cfg.schedule == "slo":
+            self.queue: Any = Scheduler(SchedulerConfig(
+                aging_steps=cfg.aging_steps,
+                on_infeasible=cfg.on_infeasible))
+        elif cfg.schedule == "fifo":
+            self.queue = RequestQueue()
+        else:
+            raise ValueError(f"unknown schedule {cfg.schedule!r} "
+                             f"(expected 'fifo' or 'slo')")
         self.requests: Dict[int, Request] = {}
         self.steps = 0
         self.decoded_tokens = 0
+        self.lat = LatencyTable()
+        self.lat_rung: Optional[int] = None   # latency ceiling (None = off)
         self.rung_history: List[Tuple[int, int]] = [(0, self.rung)]
         self.tier_history: List[Tuple[int, int]] = [(0, self.tier)]
 
@@ -131,22 +169,46 @@ class ServeSession:
                     self.mm.measured[(rung, tier)] = mb
 
     def submit(self, inputs: Dict[str, np.ndarray],
-               max_new_tokens: Optional[int] = None) -> int:
-        """Queue one request (unbatched inputs); returns its id."""
+               max_new_tokens: Optional[int] = None, priority: int = 1,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue one request (unbatched inputs); returns its id.
+
+        ``priority`` (0 = most urgent) and ``deadline_ms`` (completion
+        deadline relative to now) drive the SLO scheduler; the FIFO queue
+        carries them unused. Validation raises ``ValueError`` — these are
+        load-bearing admission checks, not debug asserts (``python -O``
+        must not disable them)."""
         n = max_new_tokens if max_new_tokens is not None \
             else self.cfg.max_new_tokens
+        if n < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {n}")
         if self.task.serves_tokens:
-            p = int(np.asarray(inputs["tokens"]).shape[0])
-            assert p == self.cfg.prompt_len, (p, self.cfg.prompt_len)
-            assert p + n <= self.cfg.total_len, \
-                f"prompt {p} + gen {n} exceeds total_len {self.cfg.total_len}"
-        req = self.queue.submit(inputs, max_new_tokens=n)
+            tokens = inputs.get("tokens")
+            if tokens is None:
+                raise ValueError("token-serving request needs 'tokens'")
+            p = int(np.asarray(tokens).shape[0])
+            if self.chunked:
+                if p < 1:
+                    raise ValueError("empty prompt")
+            elif p != self.cfg.prompt_len:
+                raise ValueError(
+                    f"prompt length {p} != configured prompt_len "
+                    f"{self.cfg.prompt_len} (variable-length prompts need "
+                    f"prefill_chunk set)")
+            if p + n > self.cfg.total_len:
+                raise ValueError(f"prompt {p} + gen {n} exceeds total_len "
+                                 f"{self.cfg.total_len}")
+        req = self.queue.submit(inputs, max_new_tokens=n, priority=priority,
+                                deadline_ms=deadline_ms,
+                                submitted_step=self.steps)
         self.requests[req.rid] = req
         return req.rid
 
     def set_tier(self, tier: int, lock: bool = True):
         """Manually pin the decode-weight precision tier."""
-        assert tier in self.engine.tiers, (tier, self.engine.tiers)
+        if tier not in self.engine.tiers:
+            raise ValueError(f"tier {tier} not warmed "
+                             f"(configured: {self.engine.tiers})")
         if tier != self.tier:
             self.tier_history.append((self.steps, tier))
         self.tier = tier
@@ -164,16 +226,44 @@ class ServeSession:
         self.steps += 1
 
     def run(self, max_steps: int = 10_000) -> Dict[str, Any]:
-        """Step until the queue drains and every request completes."""
+        """Step until the queue drains and every request completes.
+
+        Wall-clock accounting: ``warm_s`` is the compile time paid INSIDE
+        the loop (lazily compiled executables when ``warm()`` was skipped);
+        ``serve_s`` = ``wall_s`` − ``warm_s`` prices the serving itself, so
+        ``tok_s`` is not understated on cold sessions. Latency aggregates
+        (queue wait, time-to-first-token) cover every admitted request."""
         t0 = time.time()
+        c0 = self.engine.compile_s
         while (len(self.queue) or self._active()) and self.steps < max_steps:
             self.step()
         dt = max(time.time() - t0, 1e-9)
+        warm_s = self.engine.compile_s - c0
+        serve_s = max(dt - warm_s, 1e-9)
         return {"steps": self.steps, "decoded_tokens": self.decoded_tokens,
-                "wall_s": dt, "tok_s": self.decoded_tokens / dt,
+                "wall_s": dt, "warm_s": warm_s, "serve_s": serve_s,
+                "tok_s": self.decoded_tokens / serve_s,
                 "rung_history": list(self.rung_history),
                 "tier_history": list(self.tier_history),
-                "compile_count": self.compile_count}
+                "compile_count": self.compile_count,
+                **self.latency_report()}
+
+    def latency_report(self) -> Dict[str, Any]:
+        """Per-request latency percentiles over everything admitted so far:
+        queue wait (submit → slot, in steps), time-to-first-token (wall),
+        plus the rejected-request count (SLO scheduler only)."""
+        reqs = list(self.requests.values())
+        queue_steps = [r.admitted_step - r.submitted_step for r in reqs
+                       if r.admitted_step >= 0 and r.submitted_step >= 0]
+        ttft = [r.first_token_time - r.submit_time for r in reqs
+                if r.first_token_step >= 0]
+        return {
+            "queue_steps_p50": _pct(queue_steps, 50),
+            "queue_steps_p99": _pct(queue_steps, 99),
+            "ttft_s_p50": _pct(ttft, 50),
+            "ttft_s_p99": _pct(ttft, 99),
+            "rejected": sum(r.status == "rejected" for r in reqs),
+        }
 
     def results(self) -> Dict[int, Request]:
         return dict(self.requests)
@@ -182,19 +272,39 @@ class ServeSession:
     def _active(self) -> List[Request]:
         return [r for r in self.slots if r is not None]
 
+    def _classes_present(self) -> List[int]:
+        """Priority classes with work in the system (queued or slotted)."""
+        classes = {r.priority for r in self.slots if r is not None}
+        q = self.queue
+        classes.update(getattr(q, "depth_by_class", dict)().keys())
+        return sorted(classes)
+
+    def _step_budget_s(self) -> Optional[float]:
+        """Tightest per-step p99 budget among the classes present."""
+        slo = self.cfg.latency_slo_ms
+        if not slo:
+            return None
+        budgets = [slo[c] for c in self._classes_present() if c in slo]
+        return min(budgets) / 1e3 if budgets else None
+
     def _control(self):
-        """§3.3/§3.4 serve-side control: memory-capacity rung + precision
-        tier, both from the same serve memory model. After ``warm()`` every
-        (rung, tier) the controller can pick has a MEASURED footprint in the
-        model's overlay, so observe()'s pressure signal, its climb guard,
-        and the tier sweep below all run on harvested memory_analysis()
-        bytes (analytic fallback only for never-compiled combinations)."""
+        """§3.3/§3.4 serve-side control: memory-capacity rung + latency
+        ceiling + precision tier, all from measured signals. After
+        ``warm()`` every (rung, tier) the controller can pick has a
+        MEASURED footprint in the model's overlay, so observe()'s pressure
+        signal, its climb guard, and the tier sweep below all run on
+        harvested memory_analysis() bytes (analytic fallback only for
+        never-compiled combinations). The latency ceiling mirrors it on the
+        time axis: measured p99 step time per (rung, tier), extrapolated to
+        unmeasured rungs, capped by the tightest class budget."""
         self.mm.weight_tier = self.tier
         self._refresh_overlay()
+        self.lat_rung = self.lat.latency_rung(
+            self.engine.rungs, self.tier, self._step_budget_s())
         # feed the harvested bytes for the controller's own (rung, tier)
         # explicitly: record_measured also re-fits the analytic calibration
         self.scaler.observe(self.steps, measured_bytes=self.mm.measured.get(
-            (self.scaler.microbatch, self.tier)))
+            (self.scaler.microbatch, self.tier)), rung_cap=self.lat_rung)
         if self._tier_locked or len(self.engine.tiers) < 2:
             return
         cap = self.tac.rho_high * self.tac.mem_cap_bytes
@@ -213,7 +323,7 @@ class ServeSession:
     def _resize(self):
         active = self._active()
         target = pick_rung(self.engine.rungs, len(active), len(self.queue),
-                           self.scaler.microbatch)
+                           self.scaler.microbatch, latency_rung=self.lat_rung)
         if target == self.rung:
             return
         if self.task.serves_tokens:
@@ -232,40 +342,96 @@ class ServeSession:
     def _finish(self, req: Request):
         req.status = "done"
         req.finished_step = self.steps
+        req.finish_time = time.time()
         if req.slot is not None:
             self.slots[req.slot] = None
             req.slot = None
 
+    def _first_token(self, req: Request, tok0: int):
+        req.tokens = [int(tok0)]
+        req.first_token_step = self.steps
+        req.first_token_time = time.time()
+        self.decoded_tokens += 1
+        if len(req.tokens) >= req.max_new_tokens:
+            self._finish(req)
+
+    def _pop_next(self) -> Optional[Request]:
+        """Next request in scheduler order, priced with the measured
+        latency estimates (the SLO scheduler's deadline-feasibility check;
+        the FIFO queue ignores the context)."""
+        p50 = self.lat.p50(self.rung, self.tier)
+        est_step_ms = (p50 or 0.0) * 1e3
+        chunk = self.cfg.prefill_chunk or self.cfg.prompt_len
+
+        def admit_ms(req: Request) -> float:
+            chunks = -(-max(req.prompt_len, 1) // chunk) if self.chunked else 1
+            return est_step_ms * chunks
+        return self.queue.pop(now_step=self.steps, est_step_ms=est_step_ms,
+                              est_admit_ms=admit_ms)
+
     def _admit(self):
+        # advance in-flight chunked prefills: ONE chunk per request per
+        # step, so long prompts interleave with the decodes below
+        if self.chunked:
+            for req in list(self.slots):
+                if req is not None and req.status == "prefilling":
+                    self._chunk_step(req)
         for s in range(self.rung):
             if self.slots[s] is not None or not len(self.queue):
                 continue
-            req = self.queue.pop()
-            batch1 = {k: v[None] for k, v in req.inputs.items()}
-            tok0, self.caches = self.engine.admit(self.rung, self.tier,
-                                                  self.caches, s, batch1)
-            req.status, req.slot = "active", s
-            req.index = self.cfg.prompt_len
-            req.tokens = [int(tok0)]
+            req = self._pop_next()
+            if req is None:        # everything left was rejected (SLO)
+                break
+            req.slot = s
             req.admitted_step = self.steps
             self.slots[s] = req
-            self.decoded_tokens += 1
-            if len(req.tokens) >= req.max_new_tokens:
-                self._finish(req)
+            if self.chunked:
+                req.status = "prefilling"
+                self._chunk_step(req)        # first chunk lands this step
+            else:
+                batch1 = {k: v[None] for k, v in req.inputs.items()}
+                tok0, self.caches = self.engine.admit(
+                    self.rung, self.tier, self.caches, s, batch1)
+                req.status = "active"
+                req.index = self.cfg.prompt_len
+                self._first_token(req, int(tok0))
+
+    def _chunk_step(self, req: Request):
+        """Feed the next prefill chunk of ``req`` (pad-to-chunk; pad lanes
+        masked inside the executable). The final chunk yields the request's
+        first token and flips it to active at index = prompt length."""
+        C = self.cfg.prefill_chunk
+        P = req.prompt_len
+        f = req.prefill_pos
+        n = min(C, P - f)
+        chunk = np.zeros((C,), np.int32)
+        chunk[:n] = np.asarray(req.inputs["tokens"][f:f + n], np.int32)
+        tok0, self.caches = self.engine.chunk_admit(
+            self.rung, self.tier, self.caches, req.slot, chunk, f, n, f == 0)
+        req.prefill_pos = f + n
+        if req.prefill_pos >= P:
+            req.status = "active"
+            req.index = P
+            self._first_token(req, int(tok0))
 
     def _decode(self):
-        if not self._active():
+        live = [r for r in self.slots if r is not None and r.status == "active"]
+        if not live:
             return
         tokens = np.zeros((self.rung,), np.int32)
         index = np.zeros((self.rung,), np.int32)
+        valid = np.zeros((self.rung,), bool)
         for s, req in enumerate(self.slots):
-            if req is not None:
-                tokens[s], index[s] = req.tokens[-1], req.index
+            if req is not None and req.status == "active":
+                tokens[s], index[s], valid[s] = req.tokens[-1], req.index, True
+        t0 = time.time()
         out, self.caches = self.engine.decode(self.rung, self.tier,
-                                              self.caches, tokens, index)
-        out = np.asarray(out)
+                                              self.caches, tokens, index,
+                                              valid)
+        out = np.asarray(out)      # blocks: the step's real wall time
+        self.lat.record(self.rung, self.tier, time.time() - t0)
         for s, req in enumerate(list(self.slots)):
-            if req is None:
+            if req is None or req.status != "active":
                 continue
             req.index += 1
             if len(req.tokens) < req.max_new_tokens:
@@ -277,7 +443,10 @@ class ServeSession:
     def _infer(self):
         batch_reqs: List[Request] = []
         while len(self.queue) and len(batch_reqs) < self.rung:
-            batch_reqs.append(self.queue.pop())
+            req = self._pop_next()
+            if req is None:
+                break
+            batch_reqs.append(req)
         if not batch_reqs:
             return
         key = next(iter(self.engine.input_spec))
@@ -285,10 +454,14 @@ class ServeSession:
         images = np.zeros((self.rung,) + tuple(shape), np.float32)
         for j, req in enumerate(batch_reqs):
             images[j] = np.asarray(req.inputs[key], np.float32)
+        t0 = time.time()
         preds, _ = self.engine.infer(self.rung, self.tier, {key: images})
         preds = np.asarray(preds)
+        self.lat.record(self.rung, self.tier, time.time() - t0)
         for j, req in enumerate(batch_reqs):
             req.status = "active"
             req.admitted_step = self.steps
             req.result = int(preds[j])
+            req.first_token_step = self.steps
+            req.first_token_time = time.time()
             self._finish(req)
