@@ -58,34 +58,11 @@ SCHEMA = {
     },
 }
 
-_TYPES = {"object": dict, "list": list, "string": str,
-          "number": (int, float), "boolean": bool}
-
-
 def validate(doc, schema=SCHEMA, path="$"):
-    errs = []
-    if doc is None:
-        if schema.get("nullable"):
-            return errs
-        return [f"{path}: null not allowed"]
-    want = _TYPES[schema["type"]]
-    if not isinstance(doc, want) or isinstance(doc, bool) != (
-            schema["type"] == "boolean"):
-        return [f"{path}: expected {schema['type']}, got "
-                f"{type(doc).__name__}"]
-    if schema["type"] == "object":
-        for name, sub in schema["fields"].items():
-            if name not in doc:
-                errs.append(f"{path}.{name}: missing")
-            else:
-                errs += validate(doc[name], sub, f"{path}.{name}")
-        for name in doc:
-            if name not in schema["fields"]:
-                errs.append(f"{path}.{name}: unknown field")
-    elif schema["type"] == "list":
-        for i, item in enumerate(doc):
-            errs += validate(item, schema["items"], f"{path}[{i}]")
-    return errs
+    """Delegates to the repo's one schema checker (repro.analysis.report);
+    kept as a name here because serve_bench and the CI gates import it."""
+    from repro.analysis.report import validate_schema
+    return validate_schema(doc, schema, path)
 
 
 # -------------------------------------------------------------- bench ------

@@ -20,6 +20,20 @@ def main() -> None:
     steps_t1 = 30 if args.quick else 60
     steps_t2 = 30 if args.quick else 45
 
+    print("# hot-path invariant lint (rules R1-R6, jaxpr-only sweep; "
+          "`python -m repro.analysis --all` for the compiled-HLO rules)")
+    from repro.analysis import run_analysis
+    kw = dict(optimizers=("sgdm",), rungs=(2,), tiers=(1,)) \
+        if args.quick else {}
+    findings, doc = run_analysis(compile_paths=False, **kw)
+    for f in findings:
+        print(f"analysis,{f.rule},{f.severity},{f.config}:{f.path}")
+    print(f"analysis,errors,{doc['errors']},over {len(doc['paths'])} paths")
+    if doc["errors"]:
+        raise SystemExit("benchmarks.run: analysis found errors — "
+                         "see `python -m repro.analysis --all`")
+    sys.stdout.flush()
+
     from benchmarks import kernels_bench, roofline_table
     print("# kernel microbenchmarks (interpret mode on CPU)")
     kernels_bench.main()

@@ -1,0 +1,36 @@
+"""repro.analysis — static analysis of the repo's hot paths.
+
+A jaxpr/HLO invariant linter (DESIGN.md §12): named rules R1–R6 walk the
+jaxprs and optimized HLO of the registered hot paths (resident train step
+per optimizer, every serve executable per (rung, tier), standalone Pallas
+kernels) and machine-check the contracts the performance claims rest on —
+slab residency, dtype policy, host-sync freedom, buffer donation, Pallas
+BlockSpec budgets, and collective traffic.
+
+CLI: ``python -m repro.analysis --all`` (see ``--help``); programmatic
+entry: ``run_analysis``. Tests drive individual checkers from
+``repro.analysis.rules`` against seeded-violation fixtures.
+"""
+from repro.analysis.core import (KINDS, RULES, SEVERITIES, Finding, Rule,
+                                 get_rules, register)
+from repro.analysis.hotpaths import (DEFAULT_CONFIGS, HotPath, config_paths,
+                                     kernel_paths, serve_paths, train_paths)
+from repro.analysis.jaxpr_walk import (LAYOUT_PRIMS, BlockInfo,
+                                       PallasCallInfo, eqn_frame, eqn_locus,
+                                       frame_in, invar_ids, iter_eqns,
+                                       marked_walk, pallas_calls,
+                                       slab_copy_counts, sub_jaxprs,
+                                       var_marked)
+from repro.analysis.report import (ANALYSIS_SCHEMA, ARTIFACT, build_report,
+                                   validate_schema, write_report)
+from repro.analysis.runner import run_analysis
+
+__all__ = [
+    "ANALYSIS_SCHEMA", "ARTIFACT", "BlockInfo", "DEFAULT_CONFIGS",
+    "Finding", "HotPath", "KINDS", "LAYOUT_PRIMS", "PallasCallInfo",
+    "RULES", "Rule", "SEVERITIES", "build_report", "config_paths",
+    "eqn_frame", "eqn_locus", "frame_in", "get_rules", "invar_ids",
+    "iter_eqns", "kernel_paths", "marked_walk", "pallas_calls", "register",
+    "run_analysis", "serve_paths", "slab_copy_counts", "sub_jaxprs",
+    "train_paths", "validate_schema", "var_marked", "write_report",
+]

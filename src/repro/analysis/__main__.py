@@ -1,0 +1,67 @@
+"""CLI for the hot-path invariant linter.
+
+    PYTHONPATH=src python -m repro.analysis --all
+    PYTHONPATH=src python -m repro.analysis --rule R1 --config smollm-135m
+    PYTHONPATH=src python -m repro.analysis --all --no-compile --quick
+
+Writes the schema-validated findings report to
+``benchmarks/artifacts/ANALYSIS.json`` (``--out``) and exits non-zero on
+any error-severity finding — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    from repro.analysis.hotpaths import DEFAULT_CONFIGS
+    from repro.analysis.report import ARTIFACT, write_report
+    from repro.analysis.runner import run_analysis
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint the registered hot paths against rules R1-R6.")
+    ap.add_argument("--all", action="store_true",
+                    help="every rule on every default config (the default "
+                         "when no --rule/--config is given)")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="R#", help="run one rule (repeatable)")
+    ap.add_argument("--config", action="append", default=None,
+                    metavar="ARCH", help="lint one config (repeatable); "
+                    f"default: {', '.join(DEFAULT_CONFIGS)}")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="skip compiled-HLO rules (R4/R6): jaxpr-only, "
+                         "much faster")
+    ap.add_argument("--quick", action="store_true",
+                    help="one optimizer / one rung / one tier per config")
+    ap.add_argument("--out", default=ARTIFACT,
+                    help="ANALYSIS.json path ('' to skip writing)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = None if args.all else args.rule
+    configs = tuple(args.config) if args.config else DEFAULT_CONFIGS
+    kw = {}
+    if args.quick:
+        kw = dict(optimizers=("sgdm",), rungs=(2,), tiers=(1,))
+    t0 = time.time()
+    findings, doc = run_analysis(configs, rules,
+                                 compile_paths=not args.no_compile,
+                                 verbose=args.verbose, **kw)
+    for f in findings:
+        print(f"analysis:{f}")
+    for s in doc["skipped"]:
+        print(f"analysis:# skipped {s}")
+    wrote = write_report(doc, args.out or None)
+    print(f"analysis:# {doc['errors']} errors, {doc['warnings']} warnings, "
+          f"{doc['infos']} infos over {len(doc['paths'])} hot paths "
+          f"({len(doc['rules'])} rules, {time.time() - t0:.1f}s)")
+    if wrote:
+        print(f"analysis:# wrote {wrote}")
+    return 1 if doc["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

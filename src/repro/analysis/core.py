@@ -1,0 +1,82 @@
+"""Findings, rules, and the rule registry for the hot-path linter.
+
+A ``Rule`` is a named, individually-toggleable invariant check over one
+``HotPath`` (repro.analysis.hotpaths): R1..R6 live in
+``repro.analysis.rules`` and register themselves here on import. A
+``Finding`` is one violation (or advisory) with enough locus information —
+hot path, config, equation/HLO locus — to act on without re-running the
+analyzer. The CLI (``python -m repro.analysis``) and ``benchmarks/run.py``
+serialize findings through ``repro.analysis.report``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warn", "info")
+
+#: HotPath.kind values rules can subscribe to ("*" in Rule.kinds = all).
+KINDS = ("train", "decode", "chunk", "admit", "repack", "infer", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One linter result. ``severity`` gates CI: any ``error`` fails the
+    run; ``warn``/``info`` are advisory and land in ANALYSIS.json only."""
+    rule: str        # "R1".."R6"
+    severity: str    # error | warn | info
+    path: str        # hot-path name, e.g. "train/resident/sgdm"
+    config: str      # arch id, e.g. "smollm-135m"
+    locus: str       # eqn/HLO locus, e.g. "concatenate f32[2816,512] @ a.py:7"
+    message: str
+
+    def __post_init__(self):
+        assert self.severity in SEVERITIES, self.severity
+
+    def to_json(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (f"[{self.severity:5s}] {self.rule} {self.config}:{self.path} "
+                f"{self.locus} — {self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One invariant check. ``check(path)`` returns findings for a single
+    hot path; the runner filters paths by ``kinds`` and skips
+    ``needs="compiled"`` rules when compilation is disabled."""
+    id: str                                   # "R1"
+    title: str
+    kinds: Tuple[str, ...]                    # subscribed HotPath.kind set
+    needs: str                                # "jaxpr" | "compiled"
+    check: Callable[[Any], List[Finding]]     # HotPath -> findings
+
+    def applies(self, kind: str) -> bool:
+        return "*" in self.kinds or kind in self.kinds
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    assert rule.id not in RULES, f"duplicate rule id {rule.id}"
+    assert rule.needs in ("jaxpr", "compiled"), rule.needs
+    RULES[rule.id] = rule
+    return rule
+
+
+def get_rules(ids: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Resolve rule ids (case-insensitive) to registered rules, id-sorted
+    and deduplicated; ``None`` means every registered rule."""
+    import repro.analysis.rules  # noqa: F401  (registration side effect)
+    if ids is None:
+        return [RULES[k] for k in sorted(RULES)]
+    keys = set()
+    for rid in ids:
+        key = rid.upper()
+        if key not in RULES:
+            raise SystemExit(
+                f"analysis: unknown rule {rid!r}; have {sorted(RULES)}")
+        keys.add(key)
+    return [RULES[k] for k in sorted(keys)]

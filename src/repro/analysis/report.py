@@ -1,0 +1,118 @@
+"""ANALYSIS.json document: schema, validation, serialization.
+
+``validate_schema`` is the repo's one recursive JSON-schema checker — the
+benchmark artifacts (BENCH_update / BENCH_serve) delegate here so every
+artifact gate shares one implementation. The schema dialect is the small
+in-repo one: ``{"type": object|list|string|number|boolean, "fields",
+"items", "nullable"}``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis.core import Finding
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "benchmarks",
+    "artifacts", "ANALYSIS.json")
+
+_TYPES = {"object": dict, "list": list, "string": str,
+          "number": (int, float), "boolean": bool}
+
+
+def validate_schema(doc: Any, schema: Dict[str, Any],
+                    path: str = "$") -> List[str]:
+    """Recursive structural validation; returns "path: problem" strings
+    (empty = valid). Unknown object fields are violations — artifacts are
+    closed-world so schema drift is loud."""
+    errs: List[str] = []
+    if doc is None:
+        if schema.get("nullable"):
+            return errs
+        return [f"{path}: null not allowed"]
+    want = _TYPES[schema["type"]]
+    if not isinstance(doc, want) or isinstance(doc, bool) != (
+            schema["type"] == "boolean"):
+        return [f"{path}: expected {schema['type']}, got "
+                f"{type(doc).__name__}"]
+    if schema["type"] == "object":
+        for name, sub in schema["fields"].items():
+            if name not in doc:
+                errs.append(f"{path}.{name}: missing")
+            else:
+                errs += validate_schema(doc[name], sub, f"{path}.{name}")
+        for name in doc:
+            if name not in schema["fields"]:
+                errs.append(f"{path}.{name}: unknown field")
+    elif schema["type"] == "list":
+        for i, item in enumerate(doc):
+            errs += validate_schema(item, schema["items"], f"{path}[{i}]")
+    return errs
+
+
+_FINDING_ROW = {
+    "type": "object",
+    "fields": {
+        "rule": {"type": "string"},
+        "severity": {"type": "string"},
+        "path": {"type": "string"},
+        "config": {"type": "string"},
+        "locus": {"type": "string"},
+        "message": {"type": "string"},
+    },
+}
+ANALYSIS_SCHEMA = {
+    "type": "object",
+    "fields": {
+        "schema_version": {"type": "number"},
+        "area": {"type": "string"},
+        "generated_unix": {"type": "number"},
+        "backend": {"type": "string"},
+        "configs": {"type": "list", "items": {"type": "string"}},
+        "rules": {"type": "list", "items": {"type": "string"}},
+        "paths": {"type": "list", "items": {"type": "string"}},
+        "skipped": {"type": "list", "items": {"type": "string"}},
+        "errors": {"type": "number"},
+        "warnings": {"type": "number"},
+        "infos": {"type": "number"},
+        "findings": {"type": "list", "items": _FINDING_ROW},
+    },
+}
+
+
+def build_report(findings: Sequence[Finding], *, configs: Sequence[str],
+                 rules: Sequence[str], paths: Sequence[str],
+                 skipped: Sequence[str] = ()) -> Dict[str, Any]:
+    """Assemble the (schema-valid by construction) ANALYSIS.json doc."""
+    import jax
+    sev = [f.severity for f in findings]
+    return {
+        "schema_version": 1,
+        "area": "analysis",
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "configs": list(configs),
+        "rules": list(rules),
+        "paths": list(paths),
+        "skipped": list(skipped),
+        "errors": sev.count("error"),
+        "warnings": sev.count("warn"),
+        "infos": sev.count("info"),
+        "findings": [f.to_json() for f in findings],
+    }
+
+
+def write_report(doc: Dict[str, Any],
+                 out: Optional[str] = ARTIFACT) -> Optional[str]:
+    errs = validate_schema(doc, ANALYSIS_SCHEMA)
+    if errs:
+        raise SystemExit("ANALYSIS schema violation:\n" + "\n".join(errs))
+    if not out:
+        return None
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    return out

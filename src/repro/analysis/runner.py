@@ -1,0 +1,56 @@
+"""Drive rules over hot paths and assemble the ANALYSIS.json report."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.core import Finding, get_rules
+from repro.analysis.hotpaths import (DEFAULT_CONFIGS, DEFAULT_OPTIMIZERS,
+                                     DEFAULT_RUNGS, DEFAULT_TIERS,
+                                     HotPath, config_paths, kernel_paths)
+from repro.analysis.report import build_report
+
+_SEV_ORDER = {"error": 0, "warn": 1, "info": 2}
+
+
+def run_analysis(configs: Sequence[str] = DEFAULT_CONFIGS,
+                 rules: Optional[Sequence[str]] = None, *,
+                 compile_paths: bool = True,
+                 optimizers: Sequence[str] = DEFAULT_OPTIMIZERS,
+                 rungs: Sequence[int] = DEFAULT_RUNGS,
+                 tiers: Sequence[int] = DEFAULT_TIERS,
+                 kernels: bool = True,
+                 verbose: bool = False
+                 ) -> Tuple[List[Finding], dict]:
+    """Check every selected rule against every registered hot path of the
+    selected configs. Returns (findings, ANALYSIS.json document).
+    ``compile_paths=False`` skips the compiled-HLO rules (R4/R6) — the
+    fast jaxpr-only sweep."""
+    ruleset = get_rules(rules)
+    paths: List[HotPath] = []
+    for config in configs:
+        paths += config_paths(config, optimizers=optimizers, rungs=rungs,
+                              tiers=tiers)
+    if kernels:
+        paths += kernel_paths()
+
+    findings: List[Finding] = []
+    skipped: List[str] = []
+    for rule in ruleset:
+        if rule.needs == "compiled" and not compile_paths:
+            skipped.append(f"{rule.id} (needs compiled HLO; "
+                           "run without --no-compile)")
+            continue
+        for path in paths:
+            if not rule.applies(path.kind):
+                continue
+            if verbose:
+                print(f"analysis:# {rule.id} {path.config}:{path.name}")
+            findings += rule.check(path)
+
+    findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity, 3), f.rule,
+                                 f.config, f.path, f.locus))
+    doc = build_report(findings, configs=list(configs),
+                       rules=[r.id for r in ruleset],
+                       paths=[f"{p.config}:{p.name}" for p in paths],
+                       skipped=skipped)
+    return findings, doc

@@ -1,2 +1,5 @@
 from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
-                                     roofline_terms, model_flops)
+                                     model_flops, roofline_terms)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "model_flops",
+           "roofline_terms"]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Dict
 
 import numpy as np
 
@@ -32,7 +32,8 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 # one shape literal, e.g. f32[16,1024]{1,0} or bf16[8]
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start|-done)?\(", re.M)
 
@@ -86,10 +87,12 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
 
 
 def dominant_term(terms: Dict[str, float]) -> str:
-    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
 
 
-def model_flops(n_params_active: float, tokens: float, kind: str = "train") -> float:
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
     """MODEL_FLOPS = 6*N*D (train fwd+bwd) or 2*N*D (inference fwd)."""
     per_tok = 6.0 if kind == "train" else 2.0
     return per_tok * n_params_active * tokens

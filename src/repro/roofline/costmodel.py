@@ -26,7 +26,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional
 
 from repro.models.encdec import EncDecConfig
 from repro.models.lm import LMConfig
@@ -137,7 +137,8 @@ def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
         Qe = min(Q, S)
         c += Costs(2 * T * Qe * G * N, 0)          # CB intra
         c += Costs(2 * T * Qe * H * P, T * di * BF16 * 2)    # W @ x intra
-        c += Costs(4 * T * H * P * N, T * H * P * N / max(Qe, 1) * 4.0)  # state
+        c += Costs(4 * T * H * P * N,
+                   T * H * P * N / max(Qe, 1) * 4.0)        # state
         c += gemm(T, di, dm)                       # out_proj
     elif bd.kind == "rglru":
         r = sc.rglru
@@ -376,7 +377,8 @@ def hbm_estimate(cfg, kind: str, global_batch: int, seq_len: int,
         dm = cfg.d_model
         moe = cfg.stack.moe
     if kind == "train":
-        state = n_params * (4.0 + 4.0 * opt_slots + 4.0 + 2.0)  # master+slots+grads+bf16
+        # master + opt slots + grads + bf16 compute copy
+        state = n_params * (4.0 + 4.0 * opt_slots + 4.0 + 2.0)
         tokens_micro = global_batch * seq_len / max(accum, 1)
         acts = 2.5 * dm * BF16 * L * tokens_micro
         moe_buf = 0.0

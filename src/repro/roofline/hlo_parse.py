@@ -7,6 +7,13 @@ loops with ``backend_config={"known_trip_count":{"n":...}}``; we walk the
 computation graph from ENTRY, multiplying per-computation collective bytes
 by the enclosing loops' trip counts.
 
+Loops WITHOUT the annotation (data-dependent trip counts XLA cannot prove,
+e.g. a while_loop with a traced bound) have no statically-known multiplier:
+callers choose the fallback via ``unknown_trips`` (default 1 — a floor, so
+totals are conservative UNDER-estimates); ``while_trip_counts`` exposes
+which loops were annotated (``None`` = unknown) so callers can see when
+the floor was used.
+
 Byte accounting per op (ring algorithms, g = replica-group size):
     all-gather:         out_bytes * (g-1)/g          (received)
     reduce-scatter:     out_bytes * (g-1)            (shards sent/recv'd)
@@ -17,13 +24,17 @@ Byte accounting per op (ring algorithms, g = replica-group size):
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
     "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
     "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
 }
+
+#: Explicit default for loops with no ``known_trip_count`` annotation: the
+#: body is charged once (a conservative floor on collective traffic).
+DEFAULT_UNKNOWN_TRIPS = 1
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _COLL_RE = re.compile(
@@ -32,10 +43,16 @@ _COLL_RE = re.compile(
     r"(-start)?\(")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_WHILE_RE = re.compile(
-    r"while\(.*?\), condition=(%[\w.\-]+), body=(%[\w.\-]+)"
-    r".*?(?:\"known_trip_count\":\{\"n\":\"(\d+)\"\})?", re.S)
-_CALL_RE = re.compile(r"(?:to_apply|body|condition)=(%[\w.\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_BODY_RE = re.compile(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_TRIPS_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_OP_NAME_RE = re.compile(r'op_name="([^"]+)"')
+
+#: (kind, op_name hint, bytes) per collective line of one computation.
+_Coll = Tuple[str, str, float]
+#: (child computation, trip count or None = unannotated loop, is_loop).
+_Child = Tuple[str, Optional[int], bool]
 
 
 def _shape_bytes(text: str) -> int:
@@ -61,16 +78,17 @@ def _group_size(line: str) -> int:
     return 2  # conservative default
 
 
-def split_computations(hlo: str) -> Dict[str, List[str]]:
+def _split(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    """Computation name -> body lines, plus the ENTRY computation name."""
     comps: Dict[str, List[str]] = {}
-    cur = None
+    entry: Optional[str] = None
+    cur: Optional[str] = None
     for line in hlo.splitlines():
-        m = re.match(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        m = _COMP_RE.match(line)
         if m:
             cur = m.group(1)
             if line.startswith("ENTRY"):
-                comps["__entry__"] = comps.setdefault(cur, [])
-                comps["__entry_name__"] = cur  # type: ignore
+                entry = cur
             comps.setdefault(cur, [])
             continue
         if line.startswith("}"):
@@ -78,128 +96,141 @@ def split_computations(hlo: str) -> Dict[str, List[str]]:
             continue
         if cur is not None:
             comps[cur].append(line)
+    return comps, entry
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Back-compat wrapper: body lines per computation, with the magic
+    ``__entry_name__`` key naming the ENTRY computation when present."""
+    comps, entry = _split(hlo)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+        comps["__entry_name__"] = entry  # type: ignore[assignment]
     return comps
 
 
-def collective_bytes_by_op(hlo: str, top: int = 20):
-    """Trip-count-expanded per-op attribution (kind, op_name) -> bytes."""
-    comps = split_computations(hlo)
-    entry = comps.get("__entry_name__")
-    per_comp: Dict[str, list] = {}
-    children: Dict[str, list] = {}
+def _collective_bytes_of_line(line: str) -> Optional[_Coll]:
+    cm = _COLL_RE.search(line)
+    if not cm or "-done(" in line:
+        return None
+    b = float(_shape_bytes(cm.group(1)))
+    # CPU-XLA promotes bf16 reductions to f32 ("..._promoted" to_apply);
+    # TPU lowers them natively in bf16 — halve so the schedule reflects
+    # the TPU target, not the CPU artifact.
+    if "_promoted" in line:
+        b *= 0.5
+    g = _group_size(line)
+    kind = cm.group(2)
+    if kind == "all-gather":
+        b = b * (g - 1) / g
+    elif kind == "reduce-scatter":
+        b = b * (g - 1)
+    elif kind == "all-reduce":
+        b = 2.0 * b * (g - 1) / g
+    elif kind == "all-to-all":
+        b = b * (g - 1) / g
+    op = _OP_NAME_RE.search(line)
+    return kind, op.group(1)[-90:] if op else "?", b
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, List[_Coll]],
+                              Dict[str, List[_Child]], Optional[str]]:
+    """One pass over the HLO: per-computation collectives, child edges
+    (while bodies carry their annotated trip count or ``None``), ENTRY."""
+    comps, entry = _split(hlo)
+    colls: Dict[str, List[_Coll]] = {}
+    children: Dict[str, List[_Child]] = {}
     for name, lines in comps.items():
-        if not isinstance(lines, list):
-            continue
-        items, kids = [], []
+        items: List[_Coll] = []
+        kids: List[_Child] = []
         for line in lines:
-            cm = _COLL_RE.search(line)
-            if cm and "-done(" not in line:
-                b = float(_shape_bytes(cm.group(1)))
-                if "_promoted" in line:
-                    b *= 0.5
-                g = _group_size(line)
-                kind = cm.group(2)
-                if kind == "all-gather":
-                    b = b * (g - 1) / g
-                elif kind == "reduce-scatter":
-                    b = b * (g - 1)
-                elif kind == "all-reduce":
-                    b = 2.0 * b * (g - 1) / g
-                elif kind == "all-to-all":
-                    b = b * (g - 1) / g
-                op = re.search(r'op_name="([^"]+)"', line)
-                items.append((kind, op.group(1)[-90:] if op else "?", b))
-            wm = re.search(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)", line)
+            item = _collective_bytes_of_line(line)
+            if item is not None:
+                items.append(item)
+            wm = _WHILE_BODY_RE.search(line)
             if wm:
-                tm = re.search(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}", line)
-                kids.append((wm.group(2), int(tm.group(1)) if tm else 1))
+                tm = _TRIPS_RE.search(line)
+                kids.append((wm.group(2),
+                             int(tm.group(1)) if tm else None, True))
+                # condition runs trips+1 times but is charged once: it
+                # carries no collectives in practice, and a floor beats
+                # double-counting on unannotated loops.
+                kids.append((wm.group(1), 1, False))
                 continue
-            for cal in re.finditer(r"to_apply=(%[\w.\-]+)", line):
-                kids.append((cal.group(1), 1))
-        per_comp[name] = items
+            for cal in _TO_APPLY_RE.finditer(line):
+                kids.append((cal.group(1), 1, False))
+        colls[name] = items
         children[name] = kids
+    return colls, children, entry
 
-    out: Dict = {}
 
-    def walk(name, mult, depth=0):
+def while_trip_counts(hlo: str) -> Dict[str, Optional[int]]:
+    """Body-computation name -> annotated trip count, ``None`` when the
+    ``known_trip_count`` annotation is absent (XLA could not prove a
+    static bound). The explicit view of where ``unknown_trips`` applies."""
+    _, children, _ = _parse(hlo)
+    out: Dict[str, Optional[int]] = {}
+    for kids in children.values():
+        for child, trips, is_loop in kids:
+            if is_loop:
+                out[child] = trips
+    return out
+
+
+def collective_bytes_by_op(
+        hlo: str, top: int = 20,
+        unknown_trips: int = DEFAULT_UNKNOWN_TRIPS
+        ) -> List[Tuple[Tuple[str, str], float]]:
+    """Trip-count-expanded per-op attribution (kind, op_name) -> bytes.
+    ``unknown_trips`` multiplies bodies of loops with no trip-count
+    annotation (default 1: a conservative floor)."""
+    colls, children, entry = _parse(hlo)
+    out: Dict[Tuple[str, str], float] = {}
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
         if depth > 50:
             return
-        for kind, op, b in per_comp.get(name, []):
+        for kind, op, b in colls.get(name, []):
             key = (kind, op)
             out[key] = out.get(key, 0.0) + b * mult
-        for child, trips in children.get(name, []):
-            walk(child, mult * trips, depth + 1)
+        for child, trips, _ in children.get(name, []):
+            t = unknown_trips if trips is None else trips
+            walk(child, mult * t, depth + 1)
 
-    if isinstance(entry, str):
-        walk(entry, 1)
+    if entry is not None:
+        walk(entry, 1.0)
     return sorted(out.items(), key=lambda kv: -kv[1])[:top]
 
 
-def collective_bytes(hlo: str) -> Dict[str, float]:
-    """Returns per-device bytes by collective kind, trip-count expanded."""
-    comps = split_computations(hlo)
-    entry = comps.get("__entry_name__")
-    if not isinstance(entry, str):
-        # fallback: treat whole text as one computation, no trip expansion
-        entry = None
-
-    per_comp_coll: Dict[str, Dict[str, float]] = {}
-    per_comp_children: Dict[str, List[Tuple[str, int]]] = {}
-
-    for name, lines in comps.items():
-        if not isinstance(lines, list):
-            continue
-        coll = {}
-        children: List[Tuple[str, int]] = []
-        for line in lines:
-            cm = _COLL_RE.search(line)
-            if cm and "-done(" not in line:
-                shape_text, kind = cm.group(1), cm.group(2)
-                b = float(_shape_bytes(shape_text))
-                # CPU-XLA promotes bf16 reductions to f32 ("..._promoted"
-                # to_apply); TPU lowers them natively in bf16 — halve so the
-                # schedule reflects the TPU target, not the CPU artifact.
-                if "_promoted" in line:
-                    b *= 0.5
-                g = _group_size(line)
-                if kind == "all-gather":
-                    b = b * (g - 1) / g
-                elif kind == "reduce-scatter":
-                    b = b * (g - 1)
-                elif kind == "all-reduce":
-                    b = 2.0 * b * (g - 1) / g
-                elif kind == "all-to-all":
-                    b = b * (g - 1) / g
-                coll[kind] = coll.get(kind, 0.0) + b
-            wm = re.search(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)", line)
-            if wm:
-                tm = re.search(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}", line)
-                trips = int(tm.group(1)) if tm else 1
-                children.append((wm.group(2), trips))
-                continue
-            for cal in re.finditer(r"to_apply=(%[\w.\-]+)", line):
-                children.append((cal.group(1), 1))
-        per_comp_coll[name] = coll
-        per_comp_children[name] = children
+def collective_bytes(
+        hlo: str,
+        unknown_trips: int = DEFAULT_UNKNOWN_TRIPS) -> Dict[str, float]:
+    """Per-device bytes by collective kind, trip-count expanded from
+    ENTRY. Loops without a ``known_trip_count`` annotation multiply by
+    ``unknown_trips`` (default 1 — totals are then a floor; see
+    ``while_trip_counts`` for which loops were unannotated). Without an
+    ENTRY computation the whole text is summed once, unexpanded."""
+    colls, children, entry = _parse(hlo)
 
     memo: Dict[str, Dict[str, float]] = {}
 
-    def collect(name: str, depth=0) -> Dict[str, float]:
+    def collect(name: str, depth: int = 0) -> Dict[str, float]:
         if name in memo or depth > 50:
             return memo.get(name, {})
-        total = dict(per_comp_coll.get(name, {}))
-        for child, trips in per_comp_children.get(name, []):
-            sub = collect(child, depth + 1)
-            for k, v in sub.items():
-                total[k] = total.get(k, 0.0) + v * trips
+        total: Dict[str, float] = {}
+        for kind, _, b in colls.get(name, []):
+            total[kind] = total.get(kind, 0.0) + b
+        for child, trips, _ in children.get(name, []):
+            t = unknown_trips if trips is None else trips
+            for k, v in collect(child, depth + 1).items():
+                total[k] = total.get(k, 0.0) + v * t
         memo[name] = total
         return total
 
     if entry is None:
-        # no entry found: sum everything once
         out: Dict[str, float] = {}
-        for coll in per_comp_coll.values():
-            for k, v in coll.items():
-                out[k] = out.get(k, 0.0) + v
+        for items in colls.values():
+            for kind, _, b in items:
+                out[kind] = out.get(kind, 0.0) + b
         return out
     return collect(entry)

@@ -195,7 +195,7 @@ class ServeEngine:
         for key, exe in self._exe.items():
             self._harvest(key, exe)
 
-    def _decode_exe(self, rung: int, tier: int):
+    def _decode_spec(self, rung: int, tier: int):
         from repro.train.serve import make_decode_fn
         dec = make_decode_fn(self.task)
 
@@ -215,9 +215,13 @@ class ServeEngine:
         args = (self._abstract(self.params_by_tier[tier]),
                 self._cache_sds(rung), SDS((rung,), jnp.int32),
                 SDS((rung,), jnp.int32), SDS((rung,), jnp.bool_))
-        return self._get(("decode", rung, tier), decode, args, donate=(1,))
+        return decode, args
 
-    def _chunk_exe(self, rung: int, tier: int):
+    def _decode_exe(self, rung: int, tier: int):
+        fn, args = self._decode_spec(rung, tier)
+        return self._get(("decode", rung, tier), fn, args, donate=(1,))
+
+    def _chunk_spec(self, rung: int, tier: int):
         """One prefill chunk for ONE request: gather the slot's cache rows,
         teacher-force up to ``prefill_chunk`` prompt tokens through the
         task's decode hook (a lax.scan — works unchanged for ring KV, SSM,
@@ -264,9 +268,13 @@ class ServeEngine:
         args = (self._abstract(self.params_by_tier[tier]),
                 self._cache_sds(rung), SDS((), jnp.int32), SDS((C,), jnp.int32),
                 SDS((), jnp.int32), SDS((), jnp.int32), SDS((), jnp.bool_))
-        return self._get(("chunk", rung, tier), chunk, args, donate=(1,))
+        return chunk, args
 
-    def _admit_exe(self, rung: int, tier: int):
+    def _chunk_exe(self, rung: int, tier: int):
+        fn, args = self._chunk_spec(rung, tier)
+        return self._get(("chunk", rung, tier), fn, args, donate=(1,))
+
+    def _admit_spec(self, rung: int, tier: int):
         task = self.task
 
         def admit(params, caches, slot, batch1):
@@ -277,18 +285,70 @@ class ServeEngine:
         args = (self._abstract(self.params_by_tier[tier]),
                 self._cache_sds(rung), SDS((), jnp.int32),
                 self._batch_spec(1))
-        return self._get(("admit", rung, tier), admit, args, donate=(1,))
+        return admit, args
 
-    def _repack_exe(self, r_from: int, r_to: int):
+    def _admit_exe(self, rung: int, tier: int):
+        fn, args = self._admit_spec(rung, tier)
+        return self._get(("admit", rung, tier), fn, args, donate=(1,))
+
+    def _repack_spec(self, r_from: int, r_to: int):
         args = (self._cache_sds(r_from), SDS((r_to,), jnp.int32),
                 SDS((r_to,), jnp.bool_))
-        return self._get(("repack", r_from, r_to), repack_caches, args)
+        return repack_caches, args
 
-    def _infer_exe(self, rung: int, tier: int):
+    def _repack_exe(self, r_from: int, r_to: int):
+        fn, args = self._repack_spec(r_from, r_to)
+        return self._get(("repack", r_from, r_to), fn, args)
+
+    def _infer_spec(self, rung: int, tier: int):
         from repro.train.serve import make_infer_fn
         args = (self._abstract(self.params_by_tier[tier]),
                 self._abstract(self.aux_state), self._batch_spec(rung))
-        return self._get(("infer", rung, tier), make_infer_fn(self.task), args)
+        return make_infer_fn(self.task), args
+
+    def _infer_exe(self, rung: int, tier: int):
+        fn, args = self._infer_spec(rung, tier)
+        return self._get(("infer", rung, tier), fn, args)
+
+    # ------------------------------------------------------ introspection --
+    def path_specs(self):
+        """(key, fn, abstract_args, donate_argnums) for every executable
+        this engine can dispatch — the seam ``repro.analysis`` lints: the
+        jaxpr of ``fn`` at ``abstract_args`` IS the program ``warm()``
+        compiles at the same key, donation included. Unlike ``warm()``
+        (which builds chunk OR admit), both prefill flavors are listed
+        when the task supports them — both are real dispatch targets
+        across configs."""
+        specs = []
+        for rung in self.rungs:
+            for tier in self.tiers:
+                if self.task.serves_tokens:
+                    specs.append((("decode", rung, tier),
+                                  *self._decode_spec(rung, tier), (1,)))
+                    if self.chunked:
+                        specs.append((("chunk", rung, tier),
+                                      *self._chunk_spec(rung, tier), (1,)))
+                    if set(self.input_spec) == {"tokens"} or not self.chunked:
+                        specs.append((("admit", rung, tier),
+                                      *self._admit_spec(rung, tier), (1,)))
+                else:
+                    specs.append((("infer", rung, tier),
+                                  *self._infer_spec(rung, tier), ()))
+        if self.task.serves_tokens:
+            for a in self.rungs:
+                for b in self.rungs:
+                    if a != b:
+                        specs.append((("repack", a, b),
+                                      *self._repack_spec(a, b), ()))
+        return specs
+
+    def compiled(self, key):
+        """Compile (or fetch from the AOT cache) the executable for one
+        ``path_specs`` key."""
+        for k, fn, args, donate in self.path_specs():
+            if k == key:
+                return self._get(k, fn, args, donate=donate)
+        raise KeyError(f"unknown executable key {key!r}")
 
     # --------------------------------------------------------- warm + run --
     def warm(self):

@@ -390,10 +390,20 @@ class VisionTask(TrainTask):
     serves_tokens = False
 
     def infer(self, params, aux_state, batch):
-        """Batched inference logits (BN in inference mode, stats untouched)."""
-        logits, _ = vision_apply(params, aux_state, batch["images"], False,
+        """Batched inference logits (BN in inference mode, stats untouched).
+
+        Images are cast to the weight container dtype so the forward
+        actually computes at the serving tier's width: the conv/BN/dense
+        primitives follow ``x.dtype``, so f32 input images would silently
+        promote a bf16/fp8-tier weight set back to f32 per call (caught by
+        analysis rule R2). Logits return in f32 for stable downstream
+        ranking."""
+        cd = next((l.dtype for l in jax.tree.leaves(params)
+                   if jnp.issubdtype(l.dtype, jnp.floating)), jnp.float32)
+        logits, _ = vision_apply(params, aux_state,
+                                 batch["images"].astype(cd), False,
                                  self.cfg)
-        return logits
+        return logits.astype(jnp.float32)
 
     def serve_input_spec(self, prompt_len):
         del prompt_len  # no sequence dimension

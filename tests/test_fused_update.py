@@ -483,44 +483,14 @@ def test_resident_bit_exact_vs_packed_20_steps(optname):
                                   np.asarray(rs.compute["p_amax"]))
 
 
-def _subjaxprs(v):
-    if isinstance(v, jax.core.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jax.core.Jaxpr):
-        yield v
-    elif isinstance(v, (tuple, list)):
-        for x in v:
-            yield from _subjaxprs(x)
-
-
-def _slab_copy_counts(closed, rows):
-    """f32 (rows, 512) concatenate (= slab pack) and slice-of-slab
-    (= unpack) equation counts, recursing into sub-jaxprs."""
-    counts = {"concatenate": 0, "slice": 0}
-
-    def visit(jaxpr):
-        for eq in jaxpr.eqns:
-            for v in eq.params.values():
-                for sub in _subjaxprs(v):
-                    visit(sub)
-            if eq.primitive.name == "concatenate":
-                av = eq.outvars[0].aval
-                if av.shape == (rows, 512) and av.dtype == jnp.float32:
-                    counts["concatenate"] += 1
-            elif eq.primitive.name == "slice":
-                av = eq.invars[0].aval
-                if av.shape == (rows, 512) and av.dtype == jnp.float32:
-                    counts["slice"] += 1
-
-    visit(closed.jaxpr)
-    return counts
-
-
 def test_resident_jaxpr_zero_pack_unpack_copies():
     """The resident step's jaxpr contains ZERO per-step pack/unpack copies
     of master/moments: no f32 slab concatenates and (with a bf16 compute
     container, so the forward unpack is not f32 either) no f32 slab
-    slices. The pack-per-step path has both."""
+    slices. The pack-per-step path has both. Counting is done by the
+    shared analysis walker (repro.analysis.slab_copy_counts) — the same
+    machinery rule R1 runs over every config."""
+    from repro.analysis import slab_copy_counts
     from repro.kernels.layout import slab_view
     from repro.train.train_step import pack_state
     opt, task, params, grouping, tac, ctl, comp = _toy_states(
@@ -533,15 +503,15 @@ def test_resident_jaxpr_zero_pack_unpack_copies():
                                fused_update=True, resident_params=params)
     rs = pack_state(view, TrainState(params, {}, opt.init(params), ctl,
                                      comp), task.compute_dtype)
-    res_counts = _slab_copy_counts(jax.make_jaxpr(res_step)(rs, batch),
-                                   view.rows)
+    res_counts = slab_copy_counts(jax.make_jaxpr(res_step)(rs, batch),
+                                  view.rows)
     assert res_counts == {"concatenate": 0, "slice": 0}, res_counts
 
     packed_step = make_train_step(task, tac, opt, grouping, sched,
                                   fused_update=True)
     pk = TrainState(params, {}, opt.init(params), ctl, comp)
-    pk_counts = _slab_copy_counts(jax.make_jaxpr(packed_step)(pk, batch),
-                                  view.rows)
+    pk_counts = slab_copy_counts(jax.make_jaxpr(packed_step)(pk, batch),
+                                 view.rows)
     assert pk_counts["concatenate"] > 0 and pk_counts["slice"] > 0, pk_counts
 
 

@@ -1,0 +1,86 @@
+"""Unit tests for roofline.hlo_parse trip-count expansion.
+
+The nested-while fixture is the case the hardening targets: an outer loop
+XLA annotated with ``known_trip_count`` and an inner loop it could not
+prove a bound for. The inner body's collective must be charged by the
+explicit ``unknown_trips`` fallback (default 1 — a floor), never silently
+dropped or guessed, and ``while_trip_counts`` must surface which loop was
+unannotated.
+"""
+import pytest
+
+from repro.roofline.hlo_parse import (collective_bytes,
+                                      collective_bytes_by_op,
+                                      split_computations, while_trip_counts)
+
+# Optimized-HLO shaped text: outer while annotated known_trip_count=5,
+# inner while (inside the outer body) unannotated, all-gather of
+# f32[8,128] (4096 B) with replica_groups={{0,1,2,3}} (g=4) in the inner
+# body => 4096 * 3/4 = 3072 B per execution.
+NESTED = """\
+HloModule jit_step
+
+%inner_cond (p0: (s32[], f32[8,128])) -> pred[] {
+  %it = s32[] get-tuple-element(%p0), index=0
+  ROOT %lt = pred[] compare(%it, %bound), direction=LT
+}
+
+%inner_body (p1: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %x = f32[8,128] get-tuple-element(%p1), index=1
+  %ag = f32[8,128] all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}, op_name="jit(step)/inner/all_gather"
+  ROOT %t = (s32[], f32[8,128]) tuple(%it2, %ag)
+}
+
+%outer_cond (p2: (s32[], f32[8,128])) -> pred[] {
+  ROOT %lt2 = pred[] compare(%i, %five), direction=LT
+}
+
+%outer_body (p3: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %w = (s32[], f32[8,128]) while(%init2), condition=%inner_cond, body=%inner_body
+  ROOT %t2 = (s32[], f32[8,128]) tuple(%j, %y)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %loop = (s32[], f32[8,128]) while(%init), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,128] get-tuple-element(%loop), index=1
+}
+"""
+
+AG_ONCE = 4096 * 3 / 4  # one all-gather execution, ring bytes
+
+
+def test_unknown_trips_default_is_explicit_floor():
+    # outer x5, inner charged once (the documented default fallback)
+    out = collective_bytes(NESTED)
+    assert out == {"all-gather": pytest.approx(5 * 1 * AG_ONCE)}
+
+
+def test_unknown_trips_parameter_scales_unannotated_loop():
+    out = collective_bytes(NESTED, unknown_trips=3)
+    assert out == {"all-gather": pytest.approx(5 * 3 * AG_ONCE)}
+
+
+def test_while_trip_counts_reports_unannotated_loop():
+    assert while_trip_counts(NESTED) == {"%outer_body": 5,
+                                         "%inner_body": None}
+
+
+def test_by_op_expansion_matches_totals():
+    ops = collective_bytes_by_op(NESTED, unknown_trips=2)
+    assert ops == [(("all-gather", "jit(step)/inner/all_gather"),
+                    pytest.approx(5 * 2 * AG_ONCE))]
+
+
+def test_split_computations_keeps_entry_aliases():
+    comps = split_computations(NESTED)
+    assert comps["__entry_name__"] == "%main"
+    assert comps["__entry__"] is comps["%main"]
+    assert "%inner_body" in comps
+
+
+def test_no_entry_sums_once_unexpanded():
+    body_only = "\n".join(l for l in NESTED.splitlines()
+                          if not l.startswith("ENTRY")
+                          and "%loop" not in l and "%out" not in l)
+    out = collective_bytes(body_only)
+    assert out == {"all-gather": pytest.approx(AG_ONCE)}
