@@ -1,9 +1,10 @@
-"""Fault-tolerant checkpointing: atomic, async, keep-N, mesh-agnostic.
+"""Fault-tolerant checkpointing: atomic, durable, async, keep-N,
+mesh-agnostic.
 
 Layout (one directory per step):
 
     <dir>/step_000001230/
-        manifest.json        # keypath -> {file, shape, dtype}
+        manifest.json        # keypath -> {file, shape, dtype, crc32}
         000.npy, 001.npy ...
     <dir>/step_000001230.COMMITTED   # marker written LAST (atomicity)
 
@@ -11,24 +12,62 @@ Leaves are saved as host numpy in a mesh-agnostic layout, so a restart may
 re-shard onto any mesh size (elastic scaling): ``restore_checkpoint`` takes
 optional shardings and device_puts each leaf. Writes go to a temp dir that
 is renamed into place; the COMMITTED marker makes partially-written
-checkpoints invisible to ``latest_step``. ``AsyncCheckpointer`` runs saves
-on a background thread (device->host copy happens synchronously, disk I/O
-async) and is used by the trainer together with a SIGTERM preemption hook.
+checkpoints invisible to ``latest_step``.
+
+Durability + integrity (DESIGN.md §13): every leaf file and the manifest
+are fsync'd, the directory entries are fsync'd after the rename, and the
+marker itself is written tmp-file + rename — so a committed marker implies
+the bytes under it survived the crash, not just the rename. Each leaf's
+CRC32 is recorded in the manifest and verified on restore; a generation
+that fails verification (torn leaf, missing manifest entry, stale marker
+over a deleted directory) is skipped with a warning and the newest OLDER
+generation that verifies is restored instead — torn storage degrades to
+losing one checkpoint interval, never to a bricked restart.
+
+``AsyncCheckpointer`` runs saves on a background thread (device->host copy
+happens synchronously, disk I/O async) and is used by the trainer together
+with a SIGTERM preemption hook. A background-thread failure is captured
+and re-raised at the next ``save()``/``wait()`` call — a dead disk surfaces
+at the call site, not as a missing checkpoint at restart.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import warnings
+import zlib
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A committed generation failed verification (CRC mismatch, truncated
+    or missing leaf, unreadable or incomplete manifest)."""
+
+
 def _keystr(path) -> str:
     return jax.tree_util.keystr(path)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory's entries (rename durability). Platforms that
+    refuse O_RDONLY directory fds simply skip — best effort beats raising
+    on filesystems where the rename is already durable."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def save_checkpoint(directory: str, step: int, state: Any, keep: int = 3):
@@ -44,16 +83,38 @@ def save_checkpoint(directory: str, step: int, state: Any, keep: int = 3):
     for i, (path, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"{i:04d}.npy"
-        np.save(os.path.join(tmp, fn), arr)
+        # serialize through memory so the manifest CRC covers the exact
+        # bytes on disk (npy header included)
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        data = buf.getvalue()
+        with open(os.path.join(tmp, fn), "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
         manifest[_keystr(path)] = {"file": fn, "shape": list(arr.shape),
-                                   "dtype": str(arr.dtype)}
+                                   "dtype": str(arr.dtype),
+                                   "crc32": zlib.crc32(data)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    with open(final + ".COMMITTED", "w") as f:
+    _fsync_dir(directory)            # the rename itself must survive
+    # marker via tmp + rename: readers never observe a torn marker, and the
+    # fsync ORDER (data -> dirent -> marker) makes the marker an honest
+    # commit record
+    marker = final + ".COMMITTED"
+    mtmp = marker + ".tmp"
+    with open(mtmp, "w") as f:
         f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(mtmp, marker)
+    _fsync_dir(directory)
     _gc(directory, keep)
     return final
 
@@ -87,47 +148,107 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _read_manifest(directory: str, step: int) -> Dict[str, Any]:
+    d = os.path.join(directory, f"step_{step:012d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["leaves"]
+    except (OSError, ValueError, KeyError) as e:
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable manifest ({e})") from e
+
+
 def manifest_keys(directory: str, step: Optional[int] = None):
     """Saved keypaths of a committed checkpoint — readers detect the
     on-disk schema (e.g. 4-field pre-fused vs 5-field tree-form states)
-    from the manifest instead of fishing restore KeyErrors."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    d = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        return sorted(json.load(f)["leaves"].keys())
+    from the manifest instead of fishing restore KeyErrors. With
+    ``step=None`` the newest generation whose manifest is READABLE answers
+    (a stale marker over a deleted directory must not brick schema
+    sniffing; full CRC verification happens in ``restore_checkpoint``,
+    which walks the same generation order)."""
+    if step is not None:
+        return sorted(_read_manifest(directory, step).keys())
+    steps = sorted(_committed_steps(directory), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    err: Optional[Exception] = None
+    for s in steps:
+        try:
+            return sorted(_read_manifest(directory, s).keys())
+        except CheckpointCorruptError as e:
+            err = e
+    raise CheckpointCorruptError(
+        f"no generation in {directory} has a readable manifest") from err
 
 
-def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None,
-                       shardings: Any = None) -> Any:
-    """Restore into ``template``'s tree structure. ``shardings`` (optional,
-    same structure or a single sharding) re-shards each leaf on load —
-    checkpoints written on any mesh restore onto any other (elastic)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+def _load_leaf(d: str, meta: Dict[str, Any]) -> np.ndarray:
+    """Read + verify one leaf file. CRC (when the manifest records one —
+    pre-integrity checkpoints don't) is checked over the raw bytes before
+    np.load parses them."""
+    fn = meta["file"]
+    try:
+        with open(os.path.join(d, fn), "rb") as f:
+            data = f.read()
+    except OSError as e:
+        raise CheckpointCorruptError(f"{fn}: unreadable ({e})") from e
+    crc = meta.get("crc32")
+    if crc is not None and zlib.crc32(data) != int(crc):
+        raise CheckpointCorruptError(f"{fn}: CRC32 mismatch")
+    try:
+        arr = np.load(io.BytesIO(data))
+    except Exception as e:
+        raise CheckpointCorruptError(f"{fn}: corrupt npy ({e})") from e
+    if list(arr.shape) != list(meta.get("shape", arr.shape)):
+        raise CheckpointCorruptError(
+            f"{fn}: shape {list(arr.shape)} != manifest {meta['shape']}")
+    if arr.dtype.kind == "V":
+        # non-native fp dtypes (bfloat16, fp8) round-trip through .npy
+        # as raw void bytes; the manifest dtype reinterprets them
+        arr = arr.view(jax.numpy.dtype(meta["dtype"]))
+    return arr
+
+
+def _fill_for(key: str, fill_missing) -> Optional[np.ndarray]:
+    """Back-compat fill for a leaf ABSENT from the manifest: matched by
+    key-substring (``{"lr_demote": np.ones(())}`` fills
+    ``.control.lr_demote``). Distinguishes schema evolution — a field added
+    after the checkpoint was written — from corruption: any missing key
+    WITHOUT a fill is corruption and falls back a generation."""
+    if not fill_missing:
+        return None
+    for frag, val in fill_missing.items():
+        if frag in key:
+            return np.asarray(val)
+    return None
+
+
+def _restore_step(directory: str, step: int, template: Any,
+                  sh_leaves, fill_missing) -> Any:
     d = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)["leaves"]
+    manifest = _read_manifest(directory, step)
     paths_leaves = jax.tree_util.tree_leaves_with_path(template)
     treedef = jax.tree_util.tree_structure(template)
-    sh_leaves = None
-    if shardings is not None:
-        sh_leaves = jax.tree_util.tree_leaves(
-            shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
-        if len(sh_leaves) == 1:
-            sh_leaves = sh_leaves * len(paths_leaves)
     out = []
     for i, (path, leaf) in enumerate(paths_leaves):
-        meta = manifest[_keystr(path)]
-        arr = np.load(os.path.join(d, meta["file"]))
-        if arr.dtype.kind == "V":
-            # non-native fp dtypes (bfloat16, fp8) round-trip through .npy
-            # as raw void bytes; the manifest dtype reinterprets them
-            arr = arr.view(jax.numpy.dtype(meta["dtype"]))
+        key = _keystr(path)
+        meta = manifest.get(key)
+        if meta is None:
+            arr = _fill_for(key, fill_missing)
+            if arr is None:
+                # corruption vs schema evolution: a DAMAGED manifest leaves
+                # leaf files on disk it no longer references; an OLDER
+                # schema is internally consistent (files == entries). The
+                # former falls back a generation, the latter raises
+                # KeyError for the caller's schema fallback.
+                listed = {m.get("file") for m in manifest.values()}
+                on_disk = {fn for fn in os.listdir(d) if fn.endswith(".npy")}
+                if on_disk - listed:
+                    raise CheckpointCorruptError(
+                        f"manifest missing entry for {key} while "
+                        f"unreferenced leaf files exist")
+                raise KeyError(key)
+        else:
+            arr = _load_leaf(d, meta)
         if sh_leaves is not None:
             out.append(jax.device_put(arr, sh_leaves[i]))
         else:
@@ -135,13 +256,65 @@ def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None,
+                       shardings: Any = None, fill_missing=None) -> Any:
+    """Restore into ``template``'s tree structure. ``shardings`` (optional,
+    same structure or a single sharding) re-shards each leaf on load —
+    checkpoints written on any mesh restore onto any other (elastic).
+
+    Every leaf is CRC-verified against the manifest. With ``step=None`` a
+    generation that fails verification is skipped (with a warning) and the
+    newest older generation that verifies is restored — a torn write under
+    a committed marker costs one checkpoint interval, not the run. An
+    explicit ``step`` raises ``CheckpointCorruptError`` instead: the caller
+    asked for that generation specifically.
+
+    ``fill_missing`` maps key-substrings to fill values for leaves the
+    template has but the manifest predates (schema evolution, e.g.
+    ``ControlState.lr_demote``); missing keys WITHOUT a fill still raise
+    KeyError (explicit step) / fall back a generation (step=None)."""
+    sh_leaves = None
+    if shardings is not None:
+        n = len(jax.tree_util.tree_leaves_with_path(template))
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+        if len(sh_leaves) == 1:
+            sh_leaves = sh_leaves * n
+    if step is not None:
+        return _restore_step(directory, step, template, sh_leaves,
+                             fill_missing)
+    steps = sorted(_committed_steps(directory), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    last_err: Optional[Exception] = None
+    for s in steps:
+        try:
+            return _restore_step(directory, s, template, sh_leaves,
+                                 fill_missing)
+        except KeyError:
+            # template/manifest schema mismatch, not storage damage — the
+            # caller's fallback (e.g. the trainer's pre-fused 4-field
+            # path) handles it; older generations have the same schema
+            raise
+        except CheckpointCorruptError as e:
+            warnings.warn(
+                f"checkpoint step {s} failed verification ({e}); "
+                f"falling back to an older generation", RuntimeWarning)
+            last_err = e
+    raise CheckpointCorruptError(
+        f"no committed generation in {directory} verifies") from last_err
+
+
 class AsyncCheckpointer:
-    """Background-thread checkpoint writer with at-most-one in flight."""
+    """Background-thread checkpoint writer with at-most-one in flight.
+    A failed background save is captured and re-raised on the NEXT
+    ``save()``/``wait()`` — the writer never silently drops generations."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_saved: Optional[int] = None
 
     def save(self, step: int, state: Any, block: bool = False):
@@ -150,8 +323,11 @@ class AsyncCheckpointer:
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
 
         def _run():
-            save_checkpoint(self.directory, step, host_state, self.keep)
-            self.last_saved = step
+            try:
+                save_checkpoint(self.directory, step, host_state, self.keep)
+                self.last_saved = step
+            except BaseException as e:       # surfaced by the next call
+                self._error = e
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
@@ -162,3 +338,8 @@ class AsyncCheckpointer:
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
         self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint save to {self.directory} failed"
+            ) from err

@@ -68,6 +68,11 @@ class MemoryModel:
     #: measurement per rung wins; entries are per the CURRENT precision codes
     #: (a code change is folded in through ``calibration`` on re-measure).
     measured: Dict[Any, float] = dataclasses.field(default_factory=dict)
+    #: keys a backend RESOURCE_EXHAUSTED has condemned (BatchScaler.mark_oom):
+    #: their overlay entries are pinned above the device cap and are never
+    #: overwritten by later measurements — memory_analysis() said the
+    #: executable fit, the allocator said otherwise, and the allocator wins.
+    poisoned: set = dataclasses.field(default_factory=set)
 
     @classmethod
     def for_transformer(cls, param_count, d_model, num_layers, opt_slots=2,
@@ -122,8 +127,10 @@ class MemoryModel:
         consistently with what was just measured (the climb guard can never
         disagree with the observation that triggered it). Non-positive
         observations carry no information and are dropped — a 0-byte overlay
-        entry would pin predict() below rho_low forever."""
-        if measured_bytes <= 0:
+        entry would pin predict() below rho_low forever. Poisoned keys
+        (mark_oom) are immutable: the pre-OOM measurement that is being
+        re-reported is exactly the optimistic number that OOM'd."""
+        if measured_bytes <= 0 or self.measured_key(rung) in self.poisoned:
             return
         self.measured[self.measured_key(rung)] = float(measured_bytes)
         self.calibrate(measured_bytes, tokens_per_device, codes, ladder)
@@ -194,6 +201,25 @@ class BatchScaler:
             if r <= rung_cap:
                 idx = i
         return idx
+
+    def mark_oom(self, rung: Optional[int] = None) -> int:
+        """React to a backend RESOURCE_EXHAUSTED on ``rung``'s executable
+        (repro.resilience recovery supervision). The rung is poisoned in the
+        measured overlay at 2x the device cap — above ``rho_high * cap``, so
+        the measured-first climb guard can never re-enter it, and
+        ``record_measured`` never replaces the poison with a stale pre-OOM
+        harvest — and the controller steps ``delta_down`` rungs below it.
+        Returns the new microbatch; unchanged when the OOM'd rung is already
+        the smallest (the caller escalates to checkpoint-and-exit)."""
+        rung = self.microbatch if rung is None else rung
+        key = self.model.measured_key(rung)
+        self.model.poisoned.add(key)
+        self.model.measured[key] = 2.0 * self.cfg.mem_cap_bytes
+        if rung in self.rungs:
+            i = self.rungs.index(rung)
+            if self.idx >= i:
+                self.idx = max(i - self.cfg.delta_down, 0)
+        return self.microbatch
 
     def observe(self, step: int, codes=None,
                 measured_bytes: Optional[float] = None,

@@ -30,6 +30,12 @@ class ControlState(NamedTuple):
     loss_scale: jax.Array    # () dynamic loss scale (fp16 ladder)
     good_steps: jax.Array    # () consecutive finite-grad steps
     ema_init: jax.Array      # () bool-ish: has the EMA been seeded
+    #: () multiplicative LR demotion applied by divergence rollback
+    #: (repro.resilience): 1.0 in healthy runs, halved per rollback. Lives
+    #: in ControlState so the demotion is checkpointed with the step — a
+    #: restart after a rollback resumes at the demoted LR, and the loss
+    #: scale demotion (gpu ladder) composes with the AMP ladder above.
+    lr_demote: Any = 1.0
 
 
 def init_control(num_layers: int, cfg: TriAccelConfig) -> ControlState:
@@ -42,6 +48,7 @@ def init_control(num_layers: int, cfg: TriAccelConfig) -> ControlState:
                                jnp.float32),
         good_steps=jnp.zeros((), jnp.int32),
         ema_init=jnp.zeros((), jnp.int32),
+        lr_demote=jnp.ones((), jnp.float32),
     )
 
 
@@ -71,7 +78,8 @@ def update_control(state: ControlState, moments, cfg: TriAccelConfig,
         ls, good = state.loss_scale, state.good_steps
     return ControlState(step=step, var_ema=var_ema, lam=state.lam,
                         codes=codes, loss_scale=ls, good_steps=good,
-                        ema_init=jnp.ones((), jnp.int32))
+                        ema_init=jnp.ones((), jnp.int32),
+                        lr_demote=state.lr_demote)
 
 
 def with_curvature(state: ControlState, lam: jax.Array) -> ControlState:

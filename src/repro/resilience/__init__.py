@@ -1,0 +1,11 @@
+"""Chaos-hardened elasticity (DESIGN.md §13): deterministic fault
+injection + recovery supervision over the train/serve engines."""
+from repro.resilience.faults import (CORRUPTION_KINDS, FAULT_SITES, Fault,
+                                     FaultPlan, corrupt_checkpoint,
+                                     is_oom_error, simulated_oom)
+from repro.resilience.recovery import (DivergenceError, DivergenceWatchdog,
+                                       RecoveryConfig)
+
+__all__ = ["CORRUPTION_KINDS", "FAULT_SITES", "Fault", "FaultPlan",
+           "corrupt_checkpoint", "is_oom_error", "simulated_oom",
+           "DivergenceError", "DivergenceWatchdog", "RecoveryConfig"]

@@ -1,0 +1,170 @@
+"""Deterministic fault injection (DESIGN.md §13).
+
+A ``FaultPlan`` is a seeded schedule of named faults threaded through the
+existing dispatch seams — the trainer's step loop, the serve session's
+decode/admit/infer paths, and the checkpoint writer. Each fault names a
+SITE (where in the pipeline it fires), a first eligible STEP, and a
+``repeats`` budget; ``FaultPlan.fires`` is the single gate every seam
+calls. A session with no plan armed pays exactly one ``is None`` check per
+seam — zero overhead in production.
+
+Fault sites:
+
+    train.step_oom    simulated backend RESOURCE_EXHAUSTED raised at step
+                      dispatch (the real ``jax.errors.JaxRuntimeError``
+                      type, so recovery code paths are identical for
+                      injected and genuine OOMs)
+    train.nonfinite   non-finite burst: the carried loss scale is forced to
+                      inf for ``repeats`` consecutive steps, so every grad
+                      in the burst overflows through the REAL finite-gate
+                      path (update skipped, grads_finite=0 in metrics)
+    train.sigterm     SIGTERM delivered to the process at step k (spot
+                      reclamation; exercises the preemption handler chain)
+    ckpt.corrupt      storage damage applied to the newest COMMITTED
+                      generation right after its save (torn leaf, dropped
+                      manifest entry, or stale marker over a deleted dir)
+    serve.step_oom    simulated RESOURCE_EXHAUSTED at a serve dispatch
+                      (decode / admit / chunk / infer)
+    serve.latency     decode-step latency spike: ``seconds`` is added to
+                      the wall time recorded into the LatencyTable, so the
+                      latency ceiling reacts as if the step really stalled
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_SITES = ("train.step_oom", "train.nonfinite", "train.sigterm",
+               "ckpt.corrupt", "serve.step_oom", "serve.latency")
+
+CORRUPTION_KINDS = ("truncate_leaf", "drop_manifest", "stale_marker")
+
+
+def simulated_oom(site: str, step: int, detail: Any = None) -> Exception:
+    """A constructed backend OOM — the SAME exception type a real
+    allocator failure raises (``jaxlib``'s XlaRuntimeError, surfaced as
+    ``jax.errors.JaxRuntimeError``), so every recovery path tested against
+    injections handles the genuine article identically."""
+    from jax.errors import JaxRuntimeError
+    return JaxRuntimeError(
+        f"RESOURCE_EXHAUSTED: Out of memory (injected: site={site} "
+        f"step={step} detail={detail})")
+
+
+def is_oom_error(e: BaseException) -> bool:
+    """Backend memory exhaustion, injected or real. XLA spells it
+    RESOURCE_EXHAUSTED; some backends say 'out of memory' in prose."""
+    msg = str(e)
+    return "RESOURCE_EXHAUSTED" in msg or "out of memory" in msg.lower()
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault. ``repeats`` bounds how many times it fires
+    (None = unlimited — e.g. a persistently-too-big rung); ``rung``/``tier``
+    restrict OOM sites to one executable; ``kind`` picks the ckpt.corrupt
+    flavor; ``seconds`` sizes a serve.latency spike."""
+
+    site: str
+    step: int = 0
+    repeats: Optional[int] = 1
+    rung: Optional[int] = None
+    tier: Optional[int] = None
+    kind: str = "truncate_leaf"
+    seconds: float = 0.0
+    fired: int = 0               # mutable: firings so far
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(expected one of {FAULT_SITES})")
+        if self.site == "ckpt.corrupt" and self.kind not in CORRUPTION_KINDS:
+            raise ValueError(f"unknown corruption kind {self.kind!r} "
+                             f"(expected one of {CORRUPTION_KINDS})")
+
+
+class FaultPlan:
+    """A seeded, deterministic fault schedule. Two plans built with the
+    same faults and seed fire identically — the chaos soak's schedule is a
+    reproducible artifact, and every recovery trajectory it provokes can
+    be compared bit-for-bit against an oracle."""
+
+    def __init__(self, faults, seed: int = 0):
+        self.faults: List[Fault] = list(faults)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        #: audit trail of every firing: (site, step, detail)
+        self.log: List[Tuple[str, int, Any]] = []
+
+    def fires(self, site: str, step: int, rung: Optional[int] = None,
+              tier: Optional[int] = None) -> Optional[Fault]:
+        """The fault scheduled at ``site`` for ``step`` (consuming one
+        firing from its budget), or None. ``rung``/``tier`` must match the
+        fault's restriction when both sides specify one."""
+        for f in self.faults:
+            if f.site != site:
+                continue
+            if f.repeats is not None and f.fired >= f.repeats:
+                continue
+            if step < f.step:
+                continue
+            if f.rung is not None and rung is not None and f.rung != rung:
+                continue
+            if f.tier is not None and tier is not None and f.tier != tier:
+                continue
+            f.fired += 1
+            self.log.append((site, int(step),
+                             {"rung": rung, "tier": tier, "kind": f.kind}))
+            return f
+        return None
+
+
+def corrupt_checkpoint(directory: str, kind: str = "truncate_leaf",
+                       rng: Optional[np.random.Generator] = None,
+                       step: Optional[int] = None) -> str:
+    """Deterministically damage a COMMITTED generation (the newest by
+    default) — the ckpt.corrupt fault's storage model:
+
+        truncate_leaf   a leaf .npy loses its second half (torn write that
+                        an fsync-less writer would leave behind)
+        drop_manifest   one manifest entry vanishes (partial manifest
+                        rewrite) while its leaf file stays on disk
+        stale_marker    the generation directory is deleted under its
+                        .COMMITTED marker (marker durable, data lost)
+
+    Returns a human-readable description of what was damaged."""
+    from repro.checkpoint.checkpoint import latest_step
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:012d}")
+    if kind == "stale_marker":
+        import shutil
+        shutil.rmtree(d)
+        return f"step {step}: directory deleted under its COMMITTED marker"
+    if kind == "truncate_leaf":
+        files = sorted(fn for fn in os.listdir(d) if fn.endswith(".npy"))
+        fn = files[int(rng.integers(len(files)))] if rng is not None \
+            else files[0]
+        p = os.path.join(d, fn)
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return f"step {step}: {fn} truncated {size} -> {max(size // 2, 1)}B"
+    if kind == "drop_manifest":
+        import json
+        mp = os.path.join(d, "manifest.json")
+        with open(mp) as f:
+            doc = json.load(f)
+        keys = sorted(doc["leaves"].keys())
+        victim = keys[int(rng.integers(len(keys)))] if rng is not None \
+            else keys[0]
+        del doc["leaves"][victim]
+        with open(mp, "w") as f:
+            json.dump(doc, f, indent=1)
+        return f"step {step}: manifest entry {victim!r} dropped"
+    raise ValueError(f"unknown corruption kind {kind!r}")

@@ -148,6 +148,14 @@ class Scheduler:
     def __len__(self) -> int:
         return len(self._q)
 
+    def requeue(self, req: Request) -> None:
+        """Re-enter a request evicted by OOM recovery (repro.resilience).
+        Ordering needs no special-casing: ``rank`` keys on the ORIGINAL
+        ``submitted_step``, so the accumulated aging credit persists and
+        the request re-sorts ahead of younger peers of its class."""
+        req.status = "queued"
+        self._q.append(req)
+
     def depth_by_class(self) -> Dict[int, int]:
         """Queue depth per priority class — the control loop's view of the
         backlog (nominal class, not the aged effective class)."""

@@ -53,6 +53,7 @@ from repro.nn.module import split_params
 from repro.serve.batching import Request, RequestQueue, pick_rung
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import LatencyTable, Scheduler, SchedulerConfig
+from repro.resilience.faults import FaultPlan, is_oom_error, simulated_oom
 from repro.train.serve import as_task
 
 
@@ -84,6 +85,11 @@ class ServeConfig:
     # per-priority-class p99 DECODE-STEP budget (ms); the latency ceiling
     # stops the rung climbing past the tightest budget of any class present
     latency_slo_ms: Optional[Dict[int, float]] = None
+    # --- recovery (DESIGN.md §13) ---------------------------------------
+    # OOM-recovery evictions per request before it is failed instead of
+    # requeued — a bounded retry turns a crashed session into per-request
+    # status="failed"
+    max_request_retries: int = 2
 
 
 class ServeSession:
@@ -91,7 +97,8 @@ class ServeSession:
     ``repro.models.registry.list_tasks()`` serves through)."""
 
     def __init__(self, task, cfg: Optional[ServeConfig] = None, params=None,
-                 aux_state=None, tac: Optional[TriAccelConfig] = None):
+                 aux_state=None, tac: Optional[TriAccelConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         self.task = as_task(task)
         cfg = cfg if cfg is not None else ServeConfig()
         self.cfg = cfg
@@ -136,6 +143,9 @@ class ServeSession:
         self.lat_rung: Optional[int] = None   # latency ceiling (None = off)
         self.rung_history: List[Tuple[int, int]] = [(0, self.rung)]
         self.tier_history: List[Tuple[int, int]] = [(0, self.tier)]
+        # --- recovery (DESIGN.md §13) -----------------------------------
+        self.fault_plan = fault_plan
+        self.oom_events: List[Tuple[int, int, int, str]] = []
 
     # ------------------------------------------------------------- public --
     @property
@@ -164,6 +174,10 @@ class ServeSession:
         on first dispatch — still closes the loop."""
         for rung in self.engine.rungs:
             for tier in self.engine.tiers:
+                # a poisoned (rung, tier) keeps its above-cap sentinel: the
+                # engine's table still holds the optimistic pre-OOM harvest
+                if (rung, tier) in self.mm.poisoned:
+                    continue
                 mb = self.engine.measured_bytes(rung, tier)
                 if mb is not None:
                     self.mm.measured[(rung, tier)] = mb
@@ -263,6 +277,7 @@ class ServeSession:
             "ttft_s_p50": _pct(ttft, 50),
             "ttft_s_p99": _pct(ttft, 99),
             "rejected": sum(r.status == "rejected" for r in reqs),
+            "failed": sum(r.status == "failed" for r in reqs),
         }
 
     def results(self) -> Dict[int, Request]:
@@ -309,12 +324,16 @@ class ServeSession:
             return
         cap = self.tac.rho_high * self.tac.mem_cap_bytes
         tokens = self.rung * self.task.tokens_per_sample(self.cfg.total_len)
-        chosen = self.engine.tiers[0]
-        for tier in sorted(self.engine.tiers, reverse=True):
+        usable = [t for t in sorted(self.engine.tiers, reverse=True)
+                  if (self.rung, t) not in self.mm.poisoned]
+        chosen = None
+        for tier in usable:
             self.mm.weight_tier = tier
             if self.mm.predict(self.rung, tokens) <= cap:
                 chosen = tier
                 break
+        if chosen is None:    # nothing fits cleanly: lowest unpoisoned tier
+            chosen = usable[-1] if usable else self.tier
         self.mm.weight_tier = chosen
         if chosen != self.tier:
             self.tier = chosen
@@ -347,6 +366,95 @@ class ServeSession:
             self.slots[req.slot] = None
             req.slot = None
 
+    # --------------------------------------- OOM recovery (DESIGN.md §13) --
+    def _fail(self, req: Request):
+        """Terminal per-request failure — the bounded-retry endpoint. The
+        session keeps serving; the caller reads status='failed'."""
+        req.status = "failed"
+        req.finished_step = self.steps
+        req.finish_time = time.time()
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+
+    def _shed(self, req: Request):
+        """Evict ``req`` for OOM recovery: free its slot and requeue it for
+        a from-scratch admission (prefill replays; the retry is
+        deterministic — same prompt, same weights). The retry budget
+        (``cfg.max_request_retries``) bounds this; exhaustion fails the
+        request instead of looping."""
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+        self.decoded_tokens -= len(req.tokens)   # replay will re-count
+        req.tokens = []
+        req.index = 0
+        req.prefill_pos = 0
+        req.admitted_step = -1
+        req.first_token_step = -1
+        req.first_token_time = 0.0
+        req.retries += 1
+        if req.retries > self.cfg.max_request_retries:
+            self._fail(req)
+        else:
+            self.queue.requeue(req)
+
+    def _caches_alive(self) -> bool:
+        if self.caches is None:
+            return True
+        return all(not getattr(l, "is_deleted", lambda: False)()
+                   for l in jax.tree.leaves(self.caches))
+
+    def _handle_oom(self, where: str):
+        """Serve-side OOM recovery: poison the (rung, tier) in the measured
+        overlay (never re-entered — ``BatchScaler.mark_oom``), then free
+        capacity in-place: emergency step-down to the largest smaller rung
+        (shedding the most recently admitted requests until the survivors
+        fit, cache rows moved through the bit-exact repack gather), or —
+        already at the smallest rung — demote the decode tier, or shed the
+        youngest request outright. The failed dispatch is simply retried on
+        the NEXT step(): positions and caches are unchanged, so the retry
+        is bit-identical at the new (rung, tier)."""
+        self.oom_events.append((self.steps, self.rung, self.tier, where))
+        self.mm.weight_tier = self.tier
+        self.scaler.mark_oom(self.rung)
+        if not self._caches_alive():
+            # a REAL dispatch OOM can consume the donated cache buffers —
+            # rebuild empty rows and replay every in-flight request
+            self.caches = self.engine.init_caches(self.rung)
+            for req in [r for r in self.slots if r is not None]:
+                self._shed(req)
+        active = self._active()
+        smaller = [r for r in self.engine.rungs if r < self.rung]
+        if smaller:
+            target = max(smaller)
+            while len(active) > target:
+                victim = max(active,
+                             key=lambda r: (r.admitted_step, r.slot or 0))
+                self._shed(victim)
+                active.remove(victim)
+            if self.task.serves_tokens and self.caches is not None:
+                src = np.zeros((target,), np.int32)
+                valid = np.zeros((target,), bool)
+                for j, req in enumerate(active):
+                    src[j], valid[j] = req.slot, True
+                self.caches = self.engine.repack(self.rung, target,
+                                                 self.caches, src, valid)
+            self.slots = list(active) + [None] * (target - len(active))
+            for j, req in enumerate(active):
+                req.slot = j
+            self.rung = target
+            self.rung_history.append((self.steps, target))
+            return
+        lower = [t for t in self.engine.tiers if t < self.tier
+                 and (self.rung, t) not in self.mm.poisoned]
+        if lower:
+            self.set_tier(max(lower), lock=self._tier_locked)
+            return
+        if active:    # smallest rung, lowest tier: shed the youngest
+            victim = max(active, key=lambda r: (r.admitted_step, r.slot or 0))
+            self._shed(victim)
+
     def _first_token(self, req: Request, tok0: int):
         req.tokens = [int(tok0)]
         req.first_token_step = self.steps
@@ -375,7 +483,8 @@ class ServeSession:
         if self.chunked:
             for req in list(self.slots):
                 if req is not None and req.status == "prefilling":
-                    self._chunk_step(req)
+                    if not self._chunk_step(req):
+                        return               # OOM: recovery ran this step
         for s in range(self.rung):
             if self.slots[s] is not None or not len(self.queue):
                 continue
@@ -387,32 +496,59 @@ class ServeSession:
             self.slots[s] = req
             if self.chunked:
                 req.status = "prefilling"
-                self._chunk_step(req)        # first chunk lands this step
+                if not self._chunk_step(req):   # first chunk lands this step
+                    return                      # OOM: recovery ran, stop admitting
             else:
-                batch1 = {k: v[None] for k, v in req.inputs.items()}
-                tok0, self.caches = self.engine.admit(
-                    self.rung, self.tier, self.caches, s, batch1)
+                try:
+                    if self.fault_plan is not None and self.fault_plan.fires(
+                            "serve.step_oom", self.steps, rung=self.rung,
+                            tier=self.tier):
+                        raise simulated_oom("serve.admit", self.steps)
+                    batch1 = {k: v[None] for k, v in req.inputs.items()}
+                    tok0, self.caches = self.engine.admit(
+                        self.rung, self.tier, self.caches, s, batch1)
+                except Exception as e:   # noqa: BLE001 — filtered below
+                    if not is_oom_error(e):
+                        raise
+                    self._shed(req)
+                    self._handle_oom("admit")
+                    return
                 req.status = "active"
                 req.index = self.cfg.prompt_len
                 self._first_token(req, int(tok0))
 
-    def _chunk_step(self, req: Request):
+    def _chunk_step(self, req: Request) -> bool:
         """Feed the next prefill chunk of ``req`` (pad-to-chunk; pad lanes
         masked inside the executable). The final chunk yields the request's
-        first token and flips it to active at index = prompt length."""
+        first token and flips it to active at index = prompt length.
+        Returns False when the dispatch OOM'd (the request was shed and
+        recovery ran — the caller stops admitting this step)."""
         C = self.cfg.prefill_chunk
         P = req.prompt_len
         f = req.prefill_pos
         n = min(C, P - f)
         chunk = np.zeros((C,), np.int32)
         chunk[:n] = np.asarray(req.inputs["tokens"][f:f + n], np.int32)
-        tok0, self.caches = self.engine.chunk_admit(
-            self.rung, self.tier, self.caches, req.slot, chunk, f, n, f == 0)
+        try:
+            if self.fault_plan is not None and self.fault_plan.fires(
+                    "serve.step_oom", self.steps, rung=self.rung,
+                    tier=self.tier):
+                raise simulated_oom("serve.chunk", self.steps)
+            tok0, self.caches = self.engine.chunk_admit(
+                self.rung, self.tier, self.caches, req.slot, chunk, f, n,
+                f == 0)
+        except Exception as e:   # noqa: BLE001 — filtered below
+            if not is_oom_error(e):
+                raise
+            self._shed(req)
+            self._handle_oom("chunk")
+            return False
         req.prefill_pos = f + n
         if req.prefill_pos >= P:
             req.status = "active"
             req.index = P
             self._first_token(req, int(tok0))
+        return True
 
     def _decode(self):
         live = [r for r in self.slots if r is not None and r.status == "active"]
@@ -425,11 +561,30 @@ class ServeSession:
             if req is not None and req.status == "active":
                 tokens[s], index[s], valid[s] = req.tokens[-1], req.index, True
         t0 = time.time()
-        out, self.caches = self.engine.decode(self.rung, self.tier,
-                                              self.caches, tokens, index,
-                                              valid)
-        out = np.asarray(out)      # blocks: the step's real wall time
-        self.lat.record(self.rung, self.tier, time.time() - t0)
+        try:
+            if self.fault_plan is not None and self.fault_plan.fires(
+                    "serve.step_oom", self.steps, rung=self.rung,
+                    tier=self.tier):
+                raise simulated_oom("serve.decode", self.steps)
+            out, self.caches = self.engine.decode(self.rung, self.tier,
+                                                  self.caches, tokens, index,
+                                                  valid)
+            out = np.asarray(out)  # blocks: the step's real wall time
+        except Exception as e:     # noqa: BLE001 — filtered below
+            if not is_oom_error(e):
+                raise
+            # no token landed: positions/caches are unchanged, so the NEXT
+            # step() retries this decode bit-identically at the stepped-down
+            # (rung, tier)
+            self._handle_oom("decode")
+            return
+        dt = time.time() - t0
+        if self.fault_plan is not None:
+            spike = self.fault_plan.fires("serve.latency", self.steps,
+                                          rung=self.rung, tier=self.tier)
+            if spike is not None:
+                dt += spike.seconds    # as if the step really stalled
+        self.lat.record(self.rung, self.tier, dt)
         for s, req in enumerate(list(self.slots)):
             if req is None or req.status != "active":
                 continue
@@ -455,9 +610,27 @@ class ServeSession:
         for j, req in enumerate(batch_reqs):
             images[j] = np.asarray(req.inputs[key], np.float32)
         t0 = time.time()
-        preds, _ = self.engine.infer(self.rung, self.tier, {key: images})
-        preds = np.asarray(preds)
-        self.lat.record(self.rung, self.tier, time.time() - t0)
+        try:
+            if self.fault_plan is not None and self.fault_plan.fires(
+                    "serve.step_oom", self.steps, rung=self.rung,
+                    tier=self.tier):
+                raise simulated_oom("serve.infer", self.steps)
+            preds, _ = self.engine.infer(self.rung, self.tier, {key: images})
+            preds = np.asarray(preds)
+        except Exception as e:     # noqa: BLE001 — filtered below
+            if not is_oom_error(e):
+                raise
+            for req in batch_reqs:     # vision reqs hold no slot/cache rows
+                self._shed(req)
+            self._handle_oom("infer")
+            return
+        dt = time.time() - t0
+        if self.fault_plan is not None:
+            spike = self.fault_plan.fires("serve.latency", self.steps,
+                                          rung=self.rung, tier=self.tier)
+            if spike is not None:
+                dt += spike.seconds
+        self.lat.record(self.rung, self.tier, dt)
         for j, req in enumerate(batch_reqs):
             req.status = "active"
             req.admitted_step = self.steps

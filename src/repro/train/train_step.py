@@ -339,7 +339,9 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
         moments = grouping.moments(grads)
         control2 = update_control(control, moments, tac, finite)
         scales = lr_scales(control2, tac)                       # (L,)
-        lr = schedule(control2.step)
+        # rollback demotion (repro.resilience): a scalar carried in
+        # ControlState, 1.0 unless a divergence rollback demoted it
+        lr = schedule(control2.step) * control2.lr_demote
         lr_tree = grouping.broadcast(scales * lr, params32)
 
         updates, opt_state2 = opt.update(grads, opt_state, params32, lr_tree)
@@ -388,7 +390,9 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
             clip = jnp.float32(1.0)
         moments = (s_l * clip, ss_l * jnp.square(clip), grouping.counts)
         control2 = update_control(control, moments, tac, finite)
-        lr = schedule(control2.step)
+        # rollback demotion (repro.resilience): a scalar carried in
+        # ControlState, 1.0 unless a divergence rollback demoted it
+        lr = schedule(control2.step) * control2.lr_demote
         lr_l = (lr_scales(control2, tac) * lr).astype(jnp.float32)
 
         if opt.spec.kind == "adamw":
@@ -529,7 +533,9 @@ def make_train_step(task, tac: TriAccelConfig, opt: Optimizer,
             clip = jnp.float32(1.0)
         moments = (s_l * clip, ss_l * jnp.square(clip), grouping.counts)
         control2 = update_control(control, moments, tac, finite)
-        lr = schedule(control2.step)
+        # rollback demotion (repro.resilience): a scalar carried in
+        # ControlState, 1.0 unless a divergence rollback demoted it
+        lr = schedule(control2.step) * control2.lr_demote
         lr_l = (lr_scales(control2, tac) * lr).astype(jnp.float32)
 
         if opt.spec.kind == "adamw":

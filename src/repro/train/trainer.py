@@ -16,12 +16,14 @@ XLA.
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
                                          manifest_keys, restore_checkpoint)
@@ -33,6 +35,10 @@ from repro.launch.mesh import make_dev_mesh
 from repro.launch import sharding as shd
 from repro.nn.module import split_params
 from repro.optim.optimizers import adamw, sgdm
+from repro.resilience.faults import (FaultPlan, corrupt_checkpoint,
+                                     is_oom_error, simulated_oom)
+from repro.resilience.recovery import (DivergenceError, DivergenceWatchdog,
+                                       RecoveryConfig)
 from repro.train.schedules import warmup_cosine
 from repro.train.task import TrainTask, task_for_config
 from repro.train.train_step import (TrainState, init_compute,
@@ -63,6 +69,10 @@ class TrainerConfig:
     #: fused Pallas update phase (DESIGN.md §9); None = auto (on whenever
     #: the optimizer carries a kernel spec), False = jnp reference oracle
     fused_update: Optional[bool] = None
+    #: recovery supervision (DESIGN.md §13): OOM retry budget, divergence
+    #: watchdog, rollback demotions
+    recovery: RecoveryConfig = dataclasses.field(
+        default_factory=RecoveryConfig)
 
 
 class Trainer:
@@ -70,7 +80,7 @@ class Trainer:
     model config, wrapped via ``task_for_config``)."""
 
     def __init__(self, task, tac: TriAccelConfig, tcfg: TrainerConfig,
-                 mesh=None):
+                 mesh=None, fault_plan: Optional[FaultPlan] = None):
         if not isinstance(task, TrainTask):
             task = task_for_config(task)
         self.task = task
@@ -151,6 +161,12 @@ class Trainer:
                      if tcfg.ckpt_dir else None)
         self._preempted = False
         self.metrics_log = []
+        # --- recovery supervision (DESIGN.md §13) -------------------------
+        self.fault_plan = fault_plan
+        self._watchdog = (DivergenceWatchdog(tcfg.recovery)
+                          if tcfg.recovery.watchdog else None)
+        self.oom_events: list = []       # (step, rung) per caught OOM
+        self.rollback_events: list = []  # (diverged_step, restored_step)
 
     # ------------------------------------------------------------- utils --
     def _global_batch(self) -> int:
@@ -284,9 +300,33 @@ class Trainer:
 
     # ------------------------------------------------- fault tolerance ----
     def install_preemption_handler(self):
-        def _handler(signum, frame):
-            self._preempted = True
-        signal.signal(signal.SIGTERM, _handler)
+        """Checkpoint-and-exit on SIGTERM (spot reclamation) AND SIGINT
+        (Ctrl-C). Prior handlers are CHAINED, not clobbered — a launcher's
+        own SIGTERM hook (metrics flush, lease release) still runs."""
+        def _make(prev):
+            # SIG_DFL/SIG_IGN aren't callable; Python's default SIGINT
+            # handler raises KeyboardInterrupt, which would defeat the
+            # graceful checkpoint-and-exit — chain real handlers only
+            chain = prev if (callable(prev)
+                             and prev is not signal.default_int_handler) \
+                else None
+
+            def _handler(signum, frame):
+                self._preempted = True
+                if chain is not None:
+                    chain(signum, frame)
+            return _handler
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            prev = signal.getsignal(sig)
+            signal.signal(sig, _make(prev))
+
+    @staticmethod
+    def _fill_missing():
+        """Schema-evolution fills for leaves newer than the checkpoint on
+        disk (repro.checkpoint fill_missing contract): checkpoints written
+        before the rollback demotion existed restore at the neutral 1.0."""
+        return {"lr_demote": np.ones((), np.float32)}
 
     def maybe_restore(self) -> int:
         if not (self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None):
@@ -298,7 +338,8 @@ class Trainer:
         # LIVE state's sharding, so AOT executables warmed before the
         # restore stay dispatchable.
         try:
-            host = restore_checkpoint(self.tcfg.ckpt_dir, self.state)
+            host = restore_checkpoint(self.tcfg.ckpt_dir, self.state,
+                                      fill_missing=self._fill_missing())
             self.state = jax.tree.map(
                 lambda h, cur: jax.device_put(h, cur.sharding), host,
                 self.state)
@@ -309,7 +350,8 @@ class Trainer:
             # reference-path run): restore the 4-field state and re-seed
             # TrainState.compute from the restored masters
             base = self.state._replace(compute=())
-            host = restore_checkpoint(self.tcfg.ckpt_dir, base)
+            host = restore_checkpoint(self.tcfg.ckpt_dir, base,
+                                      fill_missing=self._fill_missing())
             new = jax.tree.map(
                 lambda h, cur: jax.device_put(h, cur.sharding), host, base)
             compute = init_compute(self.task, new.params, self.grouping,
@@ -336,7 +378,8 @@ class Trainer:
         tmpl = self._tree_template()
         if not has_compute:
             tmpl = tmpl._replace(compute=())
-        host = restore_checkpoint(self.tcfg.ckpt_dir, tmpl)
+        host = restore_checkpoint(self.tcfg.ckpt_dir, tmpl,
+                                  fill_missing=self._fill_missing())
         if not has_compute:
             host = host._replace(compute=init_compute(
                 self.task, host.params, self.grouping, host.control,
@@ -350,16 +393,21 @@ class Trainer:
     def run(self, steps: Optional[int] = None):
         steps = steps if steps is not None else self.tcfg.total_steps
         start = int(self.state.control.step)
+        end = start + steps
         t0 = time.time()
-        for step in range(start, start + steps):
+        step = start
+        while step < end:
+            if self.fault_plan is not None and \
+                    self.fault_plan.fires("train.sigterm", step):
+                self._deliver_sigterm()
             if self._preempted:
                 if self.ckpt:
                     self.ckpt.save(step, self._save_state(), block=True)
+                    self._maybe_corrupt(step)
                 raise SystemExit(143)
-            rung = self.scaler.microbatch
-            batch = self._batch_for_rung(rung, step)
-            step_fn = self._get_step(rung)
-            self.state, metrics = step_fn(self.state, batch)
+            if self.fault_plan is not None:
+                self._inject_nonfinite(step)
+            self.state, metrics, rung = self._dispatch(step)
 
             # §3.2 curvature cadence (host side, tiny batch)
             if self.tac.enable_curvature and step > 0 and \
@@ -374,17 +422,150 @@ class Trainer:
                 codes = jax.device_get(self.state.control.codes)
                 self.scaler.observe(step, codes=list(codes),
                                     measured_bytes=self._rung_measured(rung))
-            if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0:
+            # checkpoint cadence — suppressed while the watchdog has
+            # suspect steps in flight: a mid-burst state (control carries
+            # the overflow) must never displace the clean generation a
+            # rollback needs
+            if self.ckpt and step > 0 and step % self.tcfg.ckpt_every == 0 \
+                    and (self._watchdog is None or self._watchdog.healthy):
                 self.ckpt.save(step, self._save_state())
+                self._maybe_corrupt(step)
             if step % self.tcfg.log_every == 0:
                 m = {k: float(v) for k, v in jax.device_get(metrics).items()}
                 m.update(step=step, rung=rung,
                          mem_gb=self.scaler._mem(self.scaler.idx) / 1e9,
                          wall_s=round(time.time() - t0, 2))
                 self.metrics_log.append(m)
+            if self._watchdog is not None:
+                host = jax.device_get({"loss": metrics.get("loss", 0.0),
+                                       "finite": metrics.get("grads_finite",
+                                                             True)})
+                if self._watchdog.observe(float(host["loss"]),
+                                          bool(host["finite"])):
+                    step = self._rollback(step)
+                    continue
+            step += 1
         if self.ckpt:
-            self.ckpt.save(start + steps, self._save_state(), block=True)
+            self.ckpt.save(end, self._save_state(), block=True)
+            self._maybe_corrupt(end)
         return self.metrics_log
+
+    # ------------------------------------------- recovery (DESIGN.md §13) -
+    def _dispatch(self, step: int):
+        """One train step with OOM-reactive recovery: a backend
+        RESOURCE_EXHAUSTED poisons the rung (``BatchScaler.mark_oom``),
+        steps down, and re-dispatches the SAME batch — bit-identical by
+        construction, the batch is a pure function of (seed, step, host) —
+        into the already-warmed smaller executable (zero new compiles).
+        Bounded by ``recovery.max_oom_retries``; exhaustion (or an OOM on
+        the smallest rung) escalates to checkpoint-and-exit by re-raising
+        after a blocking save."""
+        rec = self.tcfg.recovery
+        err: Optional[BaseException] = None
+        for _ in range(rec.max_oom_retries + 1):
+            rung = self.scaler.microbatch
+            try:
+                if self.fault_plan is not None and self.fault_plan.fires(
+                        "train.step_oom", step, rung=rung):
+                    raise simulated_oom("train.step_oom", step, rung)
+                step_fn = self._get_step(rung)
+                batch = self._batch_for_rung(rung, step)
+                state, metrics = step_fn(self.state, batch)
+                return state, metrics, rung
+            except Exception as e:          # noqa: BLE001 — filtered below
+                if not is_oom_error(e):
+                    raise
+                err = e
+                self.oom_events.append((step, rung))
+                if not self._state_alive():
+                    # a REAL dispatch OOM can consume the donated state
+                    # buffers — nothing host-side to retry with; the
+                    # process must restart from the last checkpoint
+                    raise
+                if self.scaler.mark_oom(rung) == rung:
+                    break                   # smallest rung OOM'd: escalate
+        if self.ckpt and self._state_alive():
+            self.ckpt.save(step, self._save_state(), block=True)
+        raise err if err is not None else RuntimeError("unreachable")
+
+    def _state_alive(self) -> bool:
+        """False when any live-state buffer was consumed (donated) by a
+        failed dispatch — retry needs intact inputs."""
+        return all(not getattr(l, "is_deleted", lambda: False)()
+                   for l in jax.tree.leaves(self.state))
+
+    def _rollback(self, step: int) -> int:
+        """Divergence rollback: restore the last committed checkpoint and
+        apply the deterministic demotion — loss scale down (gpu ladder
+        floors at 1.0) and ``ControlState.lr_demote`` down — so the replay
+        is NOT a bit-identical rerun into the same blow-up. Returns the
+        restored step (the loop resumes there); bounded by
+        ``recovery.max_rollbacks``."""
+        rec = self.tcfg.recovery
+        if self.ckpt:
+            self.ckpt.wait()    # never race an in-flight save
+        if not (self.tcfg.ckpt_dir
+                and latest_step(self.tcfg.ckpt_dir) is not None):
+            raise DivergenceError(
+                f"diverged at step {step} with no committed checkpoint "
+                f"to roll back to")
+        if len(self.rollback_events) >= rec.max_rollbacks:
+            raise DivergenceError(
+                f"diverged at step {step}: rollback budget "
+                f"({rec.max_rollbacks}) exhausted")
+        restored = self.maybe_restore()
+        ctrl = self.state.control
+        ls = ctrl.loss_scale * rec.loss_scale_demotion
+        if self.tac.ladder == "gpu":
+            ls = jnp.maximum(ls, 1.0)
+        new_ls = jax.device_put(ls.astype(jnp.float32),
+                                ctrl.loss_scale.sharding)
+        new_demote = jax.device_put(
+            (ctrl.lr_demote * rec.lr_demotion).astype(jnp.float32),
+            ctrl.lr_demote.sharding)
+        self.state = self.state._replace(control=ctrl._replace(
+            loss_scale=new_ls, lr_demote=new_demote))
+        self._watchdog.reset()
+        self.rollback_events.append((step, restored))
+        return restored
+
+    def _inject_nonfinite(self, step: int):
+        """train.nonfinite fault: force the carried loss scale to inf so
+        this step's grads overflow through the REAL finite-gate path (the
+        update is skipped in-graph, grads_finite=0 lands in metrics). The
+        poisoned scale persists in the carry — recovery is the watchdog's
+        rollback, exactly as for an organic divergence."""
+        if self.fault_plan.fires("train.nonfinite", step) is None:
+            return
+        ctrl = self.state.control
+        bad = jax.device_put(jnp.asarray(jnp.inf, jnp.float32),
+                             ctrl.loss_scale.sharding)
+        self.state = self.state._replace(
+            control=ctrl._replace(loss_scale=bad))
+
+    def _deliver_sigterm(self):
+        """train.sigterm fault: deliver a REAL signal through the process
+        so the chained preemption handlers run, then wait for the flag
+        (CPython runs handlers at the next bytecode boundary)."""
+        signal.raise_signal(signal.SIGTERM)
+        for _ in range(1000):
+            if self._preempted:
+                return
+            time.sleep(0.001)
+        self._preempted = True    # handler not installed: honor the fault
+
+    def _maybe_corrupt(self, step: int):
+        """ckpt.corrupt fault: damage the generation just committed (waits
+        out the async writer first — the fault models storage tearing a
+        COMPLETED commit, which is exactly what CRC verification + restore
+        fallback must survive)."""
+        if self.fault_plan is None:
+            return
+        f = self.fault_plan.fires("ckpt.corrupt", step)
+        if f is None:
+            return
+        self.ckpt.wait()
+        corrupt_checkpoint(self.tcfg.ckpt_dir, f.kind, self.fault_plan.rng)
 
     def _curvature(self, step: int):
         mb = self.stream.batch(step)

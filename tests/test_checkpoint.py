@@ -1,16 +1,21 @@
 """Checkpoint semantics: atomicity (COMMITTED marker), keep-N GC, async
-writer, re-shard on restore, and residency-agnostic round-trips (resident
+writer, re-shard on restore, residency-agnostic round-trips (resident
 trainers write TREE-form checkpoints, so every on-disk generation restores
-in both directions)."""
+in both directions), and integrity under storage damage (CRC verification
++ generation fallback, DESIGN.md §13)."""
+import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+from repro.checkpoint.checkpoint import (AsyncCheckpointer,
+                                         CheckpointCorruptError, latest_step,
                                          manifest_keys, restore_checkpoint,
                                          save_checkpoint)
+from repro.resilience.faults import CORRUPTION_KINDS, corrupt_checkpoint
 
 
 def _state(x=1.0):
@@ -147,3 +152,146 @@ def test_pre_residency_checkpoint_restores_into_resident(tmp_path):
     tr.ckpt = None
     tr.run(2)
     assert np.isfinite(float(tr.state.control.loss_scale))
+
+
+# ----------------------------------------------- integrity (DESIGN.md §13) -
+
+def _two_generations(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state(1.0))
+    save_checkpoint(str(tmp_path), 2, _state(2.0))
+
+
+@pytest.mark.parametrize("kind", CORRUPTION_KINDS)
+def test_corrupt_newest_generation_falls_back(tmp_path, kind):
+    """Each storage-damage flavor (torn leaf, dropped manifest entry, stale
+    marker over a deleted directory) must cost one generation, not the
+    restart: restore warns and answers from the older verified one."""
+    _two_generations(tmp_path)
+    corrupt_checkpoint(str(tmp_path), kind)
+    with pytest.warns(RuntimeWarning, match="failed verification"):
+        out = restore_checkpoint(str(tmp_path), _state())
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+def test_explicit_step_corruption_raises(tmp_path):
+    """An explicitly requested generation never silently substitutes an
+    older one — the caller asked for THAT step."""
+    _two_generations(tmp_path)
+    corrupt_checkpoint(str(tmp_path), "truncate_leaf", step=2)
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(str(tmp_path), _state(), step=2)
+    # the older generation is still individually addressable
+    out = restore_checkpoint(str(tmp_path), _state(), step=1)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+def test_crc_detects_single_bitflip(tmp_path):
+    """Same-length corruption (no truncation, valid npy header) is caught
+    by the manifest CRC32, not by np.load."""
+    _two_generations(tmp_path)
+    d = tmp_path / "step_000000000002"
+    leaf = sorted(fn for fn in os.listdir(d) if fn.endswith(".npy"))[0]
+    with open(d / leaf, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.warns(RuntimeWarning, match="CRC32 mismatch"):
+        out = restore_checkpoint(str(tmp_path), _state())
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+def test_every_generation_corrupt_raises(tmp_path):
+    _two_generations(tmp_path)
+    corrupt_checkpoint(str(tmp_path), "truncate_leaf", step=1)
+    corrupt_checkpoint(str(tmp_path), "truncate_leaf", step=2)
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(CheckpointCorruptError, match="verifies"):
+            restore_checkpoint(str(tmp_path), _state())
+
+
+def test_legacy_manifest_without_crc_restores(tmp_path):
+    """Checkpoints written before CRC recording (no ``crc32`` field) must
+    keep restoring — verification is skipped, not failed."""
+    save_checkpoint(str(tmp_path), 1, _state(4.0))
+    mp = tmp_path / "step_000000000001" / "manifest.json"
+    doc = json.loads(mp.read_text())
+    for meta in doc["leaves"].values():
+        del meta["crc32"]
+    mp.write_text(json.dumps(doc))
+    out = restore_checkpoint(str(tmp_path), _state())
+    np.testing.assert_allclose(np.asarray(out["a"]), 4.0)
+
+
+def test_fill_missing_distinguishes_schema_from_corruption(tmp_path):
+    """A leaf the manifest predates (schema evolution) is filled via
+    ``fill_missing``; without a fill, an internally CONSISTENT manifest
+    raises KeyError (the caller's schema fallback), it does not fall back
+    a generation."""
+    save_checkpoint(str(tmp_path), 1, _state(1.0))
+    template = dict(_state(1.0), extra=jnp.zeros((2,)))
+    out = restore_checkpoint(str(tmp_path), template,
+                             fill_missing={"extra": np.full((2,), 9.0)})
+    np.testing.assert_allclose(np.asarray(out["extra"]), 9.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), template)
+
+
+def test_no_tmp_remnants_after_save(tmp_path):
+    """tmp-dir and tmp-marker staging files never outlive the commit."""
+    _two_generations(tmp_path)
+    left = [fn for fn in os.listdir(tmp_path) if ".tmp" in fn]
+    assert left == []
+
+
+def test_async_checkpointer_surfaces_background_error(tmp_path):
+    """A background-thread save failure re-raises at the next wait() (or
+    save()) call instead of silently dropping the generation."""
+    blocker = tmp_path / "notadir"
+    blocker.write_text("occupied")          # makedirs will fail on this
+    ck = AsyncCheckpointer(str(blocker))
+    ck.save(1, _state())
+    with pytest.raises(RuntimeError, match="background checkpoint save"):
+        ck.wait()
+    ck.wait()                               # error is consumed, not sticky
+
+
+@pytest.mark.parametrize("fused,kind", [(True, "truncate_leaf"),
+                                        (False, "stale_marker")])
+def test_trainer_restore_falls_back_after_corruption(tmp_path, fused, kind):
+    """maybe_restore survives a torn newest generation for BOTH trainer
+    residencies: the resident (slab) trainer and the tree-form reference
+    path restart from the older verified generation and keep training."""
+    tr = _tiny_trainer(tmp_path, fused_update=fused)
+    tr.run(2)                               # end-save commits step 2
+    tr.ckpt.wait()
+    tr.run(2)                               # second generation, step 4
+    tr.ckpt.wait()
+    assert latest_step(str(tmp_path)) == 4
+    corrupt_checkpoint(str(tmp_path), kind)
+    tr2 = _tiny_trainer(tmp_path, fused_update=fused)
+    with pytest.warns(RuntimeWarning, match="failed verification"):
+        assert tr2.maybe_restore() == 2
+    tr2.ckpt = None
+    tr2.run(2)
+    assert int(tr2.state.control.step) == 4
+
+
+def test_lr_demote_backcompat_fill(tmp_path):
+    """Checkpoints written before ControlState.lr_demote existed restore
+    with the neutral demotion (1.0) via the trainer's fill_missing map."""
+    tr = _tiny_trainer(tmp_path)
+    tr.run(2)
+    tr.ckpt.wait()
+    d = tmp_path / "step_000000000002"
+    doc = json.loads((d / "manifest.json").read_text())
+    victims = [k for k in doc["leaves"] if "lr_demote" in k]
+    assert victims, "expected an lr_demote leaf in the manifest"
+    for k in victims:
+        (d / doc["leaves"][k]["file"]).unlink()
+        del doc["leaves"][k]
+    (d / "manifest.json").write_text(json.dumps(doc))
+    tr2 = _tiny_trainer(tmp_path)
+    assert tr2.maybe_restore() == 2
+    assert float(np.asarray(tr2.state.control.lr_demote)) == 1.0

@@ -1,0 +1,315 @@
+"""Chaos-hardened elasticity (DESIGN.md §13): deterministic fault plans,
+OOM-reactive rung recovery (bit-identical to the fault-free oracle
+restricted to the surviving rung), divergence rollback with deterministic
+demotion, preemption handler chaining, and the serve-side twin. The
+end-to-end chaos soak (>= 4 fault classes through one seeded plan) runs in
+the slow leg."""
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import latest_step
+from repro.resilience.faults import (Fault, FaultPlan, is_oom_error,
+                                     simulated_oom)
+from repro.resilience.recovery import (DivergenceError, DivergenceWatchdog,
+                                       RecoveryConfig)
+
+
+# ------------------------------------------------------------- faults -----
+
+def test_fault_plan_is_deterministic_and_bounded():
+    def replay(plan):
+        fired = []
+        for step in range(6):
+            for rung in (2, 4):
+                if plan.fires("train.step_oom", step, rung=rung):
+                    fired.append((step, rung))
+        return fired
+
+    def faults():
+        return [Fault("train.step_oom", step=2, rung=4, repeats=2)]
+
+    a = replay(FaultPlan(faults(), seed=7))
+    b = replay(FaultPlan(faults(), seed=7))
+    # rung-restricted, first eligible step 2, budget of exactly 2 firings
+    assert a == b == [(2, 4), (3, 4)]
+
+
+def test_fault_plan_unlimited_repeats_and_log():
+    plan = FaultPlan([Fault("serve.step_oom", step=1, repeats=None)])
+    fired = [s for s in range(5) if plan.fires("serve.step_oom", s)]
+    assert fired == [1, 2, 3, 4]
+    assert [(s, st) for s, st, _ in plan.log] == \
+        [("serve.step_oom", s) for s in fired]
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        Fault("train.meteor_strike")
+    with pytest.raises(ValueError, match="unknown corruption kind"):
+        Fault("ckpt.corrupt", kind="gamma_ray")
+
+
+def test_simulated_oom_is_the_real_exception_type():
+    """Injected OOMs are the SAME type a real allocator failure raises, so
+    recovery code tested against injections handles the genuine article."""
+    err = simulated_oom("train.step_oom", 3)
+    assert isinstance(err, jax.errors.JaxRuntimeError)
+    assert is_oom_error(err)
+    assert is_oom_error(RuntimeError("CUDA error: out of memory"))
+    assert not is_oom_error(ValueError("shape mismatch"))
+
+
+# ----------------------------------------------------------- watchdog -----
+
+def test_watchdog_nonfinite_run_trigger():
+    wd = DivergenceWatchdog(RecoveryConfig(watchdog=True, max_nonfinite=3))
+    assert not wd.observe(1.0, True) and wd.healthy
+    assert not wd.observe(float("nan"), False) and not wd.healthy
+    assert not wd.observe(1.0, False)
+    # a finite step in between resets the consecutive-run counter
+    assert not wd.observe(0.9, True) and wd.healthy
+    assert not wd.observe(1.0, False)
+    assert not wd.observe(1.0, False)
+    assert wd.observe(1.0, False)          # third consecutive: trigger
+    wd.reset()
+    assert wd.healthy and not wd.observe(1.0, False)
+
+
+def test_watchdog_loss_spike_trigger():
+    wd = DivergenceWatchdog(RecoveryConfig(watchdog=True,
+                                           loss_spike_factor=3.0,
+                                           loss_window=8))
+    for _ in range(4):
+        assert not wd.observe(1.0, True)
+    assert wd.observe(10.0, True)          # > 3x windowed median
+    # the spiked sample never enters the window: the detector does not
+    # acclimate to its own trigger
+    assert not wd.observe(1.1, True)
+
+
+# -------------------------------------------------- rung poison (§3.3) -----
+
+def test_mark_oom_poisons_rung_permanently():
+    from repro.core.batch_scaler import BatchScaler, MemoryModel
+    from repro.core.precision import TriAccelConfig
+    tac = TriAccelConfig(mem_cap_bytes=1e9)
+    mm = MemoryModel.for_transformer(param_count=1e6, d_model=64,
+                                     num_layers=2)
+    sc = BatchScaler((2, 4, 8), seq_len=16, model=mm, cfg=tac, start_rung=8)
+    assert sc.microbatch == 8
+    assert sc.mark_oom(8) < 8
+    key = mm.measured_key(8)
+    assert key in mm.poisoned
+    # poison sits ABOVE rho_high * cap, so the climb guard prices the rung
+    # as never fitting
+    assert mm.measured[key] > tac.rho_high * tac.mem_cap_bytes
+    # a stale pre-OOM harvest must not replace the poison
+    mm.record_measured(8, 123.0, 8 * 16)
+    assert mm.measured[key] == 2.0 * tac.mem_cap_bytes
+    # the hysteresis law never re-enters the poisoned rung
+    for step in range(1, 64):
+        assert sc.observe(step) < 8
+
+
+# ------------------------------------------------------ trainer (§13) ------
+
+def _trainer(tmp_path=None, rungs=(4,), total=6, plan=None, recovery=None,
+             ladder="tpu", **kw):
+    from repro.core.precision import TriAccelConfig
+    from repro.train.task import LMTask
+    from repro.train.trainer import Trainer, TrainerConfig
+    from test_fused_update import _tiny_lm
+    task = LMTask(_tiny_lm(jnp.bfloat16))
+    tac = TriAccelConfig(ladder=ladder, t_ctrl=4, enable_curvature=False,
+                         mem_cap_bytes=64e9)
+    if recovery is None:
+        recovery = RecoveryConfig()
+    kw.setdefault("ckpt_every", 100)
+    tcfg = TrainerConfig(total_steps=total, seq_len=16, rungs=rungs,
+                         ckpt_dir=str(tmp_path) if tmp_path else None,
+                         log_every=1000, base_lr=1e-2,
+                         recovery=recovery, **kw)
+    return Trainer(task, tac, tcfg, fault_plan=plan)
+
+
+def test_oom_recovery_matches_fault_free_oracle():
+    """Acceptance criterion: with a persistent OOM on the big rung, the
+    recovered trajectory (step down + re-dispatch the SAME batch) is
+    bit-identical to an oracle trained fault-free on the surviving rung —
+    the batch is a pure function of (seed, step, rung), so recovery changes
+    WHERE the step runs, never WHAT it computes."""
+    plan = FaultPlan([Fault("train.step_oom", step=0, rung=4, repeats=None)])
+    faulted = _trainer(rungs=(2, 4), start_rung=4, plan=plan)
+    oracle = _trainer(rungs=(2,))
+    for tr in (faulted, oracle):
+        tr.warm_rungs()
+    warm = faulted.compile_count
+    faulted.run()
+    oracle.run()
+    assert faulted.oom_events == [(0, 4)]
+    assert faulted.scaler.microbatch == 2
+    assert faulted.compile_count == warm       # zero compiles in recovery
+    for a, b in zip(jax.tree.leaves(faulted.params_tree()),
+                    jax.tree.leaves(oracle.params_tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(faulted.state.control.step) == int(oracle.state.control.step)
+
+
+def test_oom_on_smallest_rung_escalates(tmp_path):
+    """An OOM that survives every rung checkpoints and re-raises — the
+    bounded-retry ladder never spins forever."""
+    plan = FaultPlan([Fault("train.step_oom", step=0, repeats=None)])
+    tr = _trainer(tmp_path, rungs=(2, 4), start_rung=4, plan=plan,
+                  recovery=RecoveryConfig(max_oom_retries=3))
+    tr.warm_rungs()
+    with pytest.raises(jax.errors.JaxRuntimeError) as ei:
+        tr.run()
+    assert is_oom_error(ei.value)
+    assert len(tr.oom_events) >= 2             # big rung, then smallest
+    # escalation left a committed rescue checkpoint at the failing step
+    assert latest_step(str(tmp_path)) == 0
+
+
+def test_divergence_rollback_restores_and_demotes(tmp_path):
+    """A non-finite burst rolls back to the last committed generation with
+    the deterministic demotion applied: loss scale halved (gpu floor 1.0)
+    and ControlState.lr_demote halved — the replay is not a bit-identical
+    rerun into the same blow-up."""
+    plan = FaultPlan([Fault("train.nonfinite", step=5, repeats=3)])
+    rec = RecoveryConfig(watchdog=True, max_nonfinite=3, max_rollbacks=2)
+    tr = _trainer(tmp_path, total=10, ladder="gpu", plan=plan, recovery=rec,
+                  ckpt_every=2)
+    tr.warm_rungs()
+    warm = tr.compile_count
+    tr.run()
+    assert len(tr.rollback_events) == 1
+    diverged, restored = tr.rollback_events[0]
+    assert restored <= diverged
+    assert tr.compile_count == warm
+    assert int(tr.state.control.step) == 10    # the run still completes
+    assert float(np.asarray(tr.state.control.lr_demote)) == 0.5
+    assert np.isfinite(float(np.asarray(tr.state.control.loss_scale)))
+
+
+def test_rollback_without_checkpoint_raises():
+    plan = FaultPlan([Fault("train.nonfinite", step=2, repeats=3)])
+    rec = RecoveryConfig(watchdog=True, max_nonfinite=3)
+    tr = _trainer(None, total=8, ladder="gpu", plan=plan, recovery=rec)
+    with pytest.raises(DivergenceError, match="no committed checkpoint"):
+        tr.run()
+
+
+def test_rollback_budget_exhausted_raises(tmp_path):
+    """A divergence that reproduces after every rollback must eventually
+    surface instead of thrashing restore forever."""
+    plan = FaultPlan([Fault("train.nonfinite", step=3, repeats=None)])
+    rec = RecoveryConfig(watchdog=True, max_nonfinite=2, max_rollbacks=1)
+    tr = _trainer(tmp_path, total=12, ladder="gpu", plan=plan, recovery=rec,
+                  ckpt_every=2)
+    with pytest.raises(DivergenceError, match="budget"):
+        tr.run()
+    assert len(tr.rollback_events) == 1
+
+
+def test_preemption_handler_chains_prior_and_registers_sigint(tmp_path):
+    """install_preemption_handler must CHAIN a previously installed SIGTERM
+    handler (cluster agents hook it too) and register SIGINT — but never
+    chain Python's default SIGINT handler, whose KeyboardInterrupt would
+    defeat the graceful checkpoint-and-exit."""
+    seen = []
+    prev_term = signal.signal(signal.SIGTERM, lambda s, f: seen.append(s))
+    prev_int = signal.getsignal(signal.SIGINT)
+    try:
+        tr = _trainer(tmp_path)
+        tr.install_preemption_handler()
+        signal.raise_signal(signal.SIGTERM)
+        for _ in range(1000):
+            if tr._preempted:
+                break
+            time.sleep(0.001)
+        assert tr._preempted
+        assert seen == [signal.SIGTERM]        # prior handler still ran
+        tr._preempted = False
+        signal.raise_signal(signal.SIGINT)     # must not KeyboardInterrupt
+        for _ in range(1000):
+            if tr._preempted:
+                break
+            time.sleep(0.001)
+        assert tr._preempted
+    finally:
+        signal.signal(signal.SIGTERM, prev_term)
+        signal.signal(signal.SIGINT, prev_int)
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    """The sigterm fault drives the real handler path: blocking save, exit
+    code 143, restart resumes at the preempted step."""
+    plan = FaultPlan([Fault("train.sigterm", step=3, repeats=1)])
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    tr = _trainer(tmp_path, total=6, plan=plan)
+    tr.install_preemption_handler()
+    try:
+        with pytest.raises(SystemExit) as ei:
+            tr.run()
+        assert ei.value.code == 143
+        tr2 = _trainer(tmp_path, total=6)
+        assert tr2.maybe_restore() == 3
+        tr2.ckpt = None
+        tr2.run(3)
+        assert int(tr2.state.control.step) == 6
+    finally:
+        signal.signal(signal.SIGTERM, prev_term)
+        signal.signal(signal.SIGINT, prev_int)
+
+
+# ------------------------------------------------------- serve twin --------
+
+@pytest.mark.slow
+def test_serve_oom_steps_down_and_completes():
+    """Persistent OOM on the big serving rung: emergency step-down through
+    the bit-exact repack gather, (rung, tier) poisoned, zero new compiles,
+    every request still terminal."""
+    from repro.resilience import soak
+    rep = soak.serve_soak()
+    assert rep["ok"], rep
+    # the step-down is visible in the rung history and the poison set
+    assert any(r == 1 for _, r in rep["rung_history"][1:])
+    assert rep["compiles_during_run"] == 0
+
+
+@pytest.mark.slow
+def test_serve_unrecoverable_oom_fails_requests_bounded():
+    """With a single rung and tier there is nowhere to step down: each
+    admission OOM sheds the request, and the bounded per-request retry
+    budget turns a crashed session into status='failed'."""
+    from repro.resilience import soak
+    from repro.serve.session import ServeConfig, ServeSession
+    plan = FaultPlan([Fault("serve.step_oom", step=0, repeats=None)])
+    cfg = ServeConfig(prompt_len=4, total_len=12, rungs=(1,), tiers=(1,),
+                      max_new_tokens=4, t_ctrl=4, auto_tier=False,
+                      max_request_retries=1, mem_cap_bytes=64e9)
+    sess = ServeSession(soak.tiny_lm_task(), cfg, fault_plan=plan)
+    sess.warm()
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        sess.submit({"tokens": rng.integers(0, 64, size=4).astype(np.int32)})
+    sess.run(max_steps=60)
+    statuses = [r.status for r in sess.results().values()]
+    assert statuses and all(s == "failed" for s in statuses)
+    assert sess.oom_events
+
+
+@pytest.mark.slow
+def test_chaos_soak_train_leg():
+    """>= 4 fault classes (OOM, non-finite burst, SIGTERM, checkpoint
+    corruption) through one seeded plan: zero crashes, zero recompiles,
+    rollback + corrupted-generation fallback + completed restart."""
+    from repro.resilience import soak
+    rep = soak.train_soak()
+    assert rep["ok"], rep
