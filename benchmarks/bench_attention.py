@@ -1,0 +1,299 @@
+"""BENCH_attention.json — the persisted attention-phase perf trajectory.
+
+Times flash vs the chunked-jnp fallback (fwd and fwd+bwd through the
+custom_vjp backward kernels) per seqlen, plus the three workloads the
+segment/MLA/ragged kernels brought onto the kernel path this PR:
+
+  * packed   — multi-document rows with segment ids: the kernel skips
+               cross-document blocks; the chunked oracle masks but computes
+               every block (the fwd+bwd pair is the training-step seam).
+  * mla      — split head dims (Dq=192 from qk_nope+qk_rope, Dv=128): the
+               Dv BlockSpec decoupling that dropped the ops.py v-dim gate.
+  * ragged   — per-slot-length decode against a fixed-capacity cache over
+               live-length patterns: modeled HBM bytes scale with the MEAN
+               slot length, not the cache capacity.
+
+Each row carries wall us/call and the analytic byte model next to XLA's
+measured ``cost_analysis()['bytes accessed']``. CPU interpret-mode wall
+numbers are NOT TPU perf — the artifact exists so the *trajectory* (and
+modeled-vs-measured, where block skipping shows up as modeled bytes) is
+diffable across PRs.
+
+The artifact is validated against SCHEMA before it is written; CI's slow
+leg re-validates the emitted file.
+
+    PYTHONPATH=src python -m benchmarks.bench_attention [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "BENCH_attention.json")
+
+BF16 = 2.0  # bench tensors are f32 but the byte MODEL prices the bf16 path
+F32 = 4.0
+
+SCHEMA = {
+    "type": "object",
+    "fields": {
+        "schema_version": {"type": "number"},
+        "area": {"type": "string"},
+        "generated_unix": {"type": "number"},
+        "backend": {"type": "string"},
+        "interpret_mode": {"type": "boolean"},
+        "seq_sweep": {"type": "list", "items": {"type": "number"}},
+        "rows": {"type": "list", "items": {
+            "type": "object",
+            "fields": {
+                "workload": {"type": "string"},     # dense|packed|mla
+                "impl": {"type": "string"},         # flash|chunked
+                "seqlen": {"type": "number"},
+                "fwd_us": {"type": "number"},
+                "fwdbwd_us": {"type": "number"},
+                "modeled_mb": {"type": "number"},
+                "measured_mb": {"type": "number", "nullable": True},
+            }}},
+        "speedups": {"type": "list", "items": {
+            "type": "object",
+            "fields": {
+                "workload": {"type": "string"},
+                "seqlen": {"type": "number"},
+                "fwdbwd_flash_vs_chunked": {"type": "number"},
+                "modeled_mb_flash_vs_chunked": {"type": "number"},
+            }}},
+        "ragged_decode": {"type": "list", "items": {
+            "type": "object",
+            "fields": {
+                "pattern": {"type": "string"},
+                "cache_len": {"type": "number"},
+                "mean_len": {"type": "number"},
+                "decode_us": {"type": "number"},
+                "modeled_kv_mb": {"type": "number"},
+                "dense_kv_mb": {"type": "number"},
+                "measured_mb": {"type": "number", "nullable": True},
+            }}},
+    },
+}
+
+
+def validate(doc, schema=SCHEMA, path="$"):
+    from repro.analysis.report import validate_schema
+    return validate_schema(doc, schema, path)
+
+
+# -------------------------------------------------------------- bench ------
+def _measured_mb(fn, args):
+    c = fn.lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else None
+    ba = c.get("bytes accessed") if c else None
+    return None if ba is None else float(ba) / 1e6
+
+
+def _attn_model_mb(B, S, H, K, Dq, Dv, seg_factor=1.0, skip=True):
+    """Analytic fwd+bwd HBM bytes of one attention op (flash-style: no
+    (S, S) score tensor in HBM; backward re-reads q/k/v/o/do and writes
+    dq/dk/dv — 4x the forward q/k/v/out traffic is the repo's train
+    factor). ``skip`` applies the causal (ctx = S/2) and segment block
+    skipping the kernel executes; the chunked fallback computes every
+    block, so its executed context stays the full S."""
+    from repro.roofline import costmodel as cm
+    T = B * S
+    ctx = cm._exec_ctx(float(S), 0, skip, skip, seg_factor)
+    core = cm.attn_core(T, ctx, H, Dq, Dv, K)
+    # block skipping scales the streamed k/v traffic with executed ctx
+    kv_frac = ctx / float(S)
+    b = (T * H * Dq + T * K * (Dq + Dv) * kv_frac + T * H * Dv) * BF16
+    return 4.0 * b / 1e6
+
+
+def attention_workloads(S, quick=False):
+    """(workload, impl) -> (jitted fwd, jitted fwd+bwd, args, modeled_mb)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.nn.attention import _chunked_attention, packed_positions
+
+    key = jax.random.PRNGKey(0)
+    out = {}
+    B, H, K, D = 1, 4, 2, 64
+
+    def mk(q, k, v, flash_fn, chunked_fn, workload, seg_factor=1.0):
+        for impl, fn in (("flash", flash_fn), ("chunked", chunked_fn)):
+            fwd = jax.jit(fn)
+            bwd = jax.jit(jax.grad(
+                lambda q, k, v, f=fn: jnp.sum(jnp.square(f(q, k, v))),
+                argnums=(0, 1, 2)))
+            mb = _attn_model_mb(B, S, q.shape[2], k.shape[2], q.shape[-1],
+                                v.shape[-1],
+                                seg_factor=seg_factor if impl == "flash" else 1.0,
+                                skip=impl == "flash")
+            out[(workload, impl)] = (fwd, bwd, (q, k, v), mb)
+
+    # dense causal self-attention
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mk(q, k, v,
+       lambda q, k, v: ops.flash_attention(q, k, v, causal=True),
+       lambda q, k, v: _chunked_attention(q, k, v, pos, pos, True, None,
+                                          D ** -0.5, 256, 256),
+       "dense")
+
+    # packed: 4 documents per row, segment block skipping on the kernel
+    n_seg = 4
+    seg = jnp.repeat(jnp.arange(n_seg, dtype=jnp.int32), S // n_seg)[None]
+    seg = jnp.broadcast_to(seg, (B, S))
+    spos = packed_positions(seg)
+    mk(q, k, v,
+       lambda q, k, v: ops.flash_attention(q, k, v, segments=seg, causal=True),
+       lambda q, k, v: _chunked_attention(q, k, v, spos, spos, True, None,
+                                          D ** -0.5, 256, 256,
+                                          q_seg=seg, k_seg=seg),
+       "packed", seg_factor=1.0 / n_seg)
+
+    # MLA: Dq = 192 (nope 128 + rope 64) vs Dv = 128, MHA (K == H)
+    Dq, Dv = 192, 128
+    Hm = 2 if quick else 4
+    qm = jax.random.normal(key, (B, S, Hm, Dq))
+    km = jax.random.normal(jax.random.fold_in(key, 3), (B, S, Hm, Dq))
+    vm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, Hm, Dv))
+    mk(qm, km, vm,
+       lambda q, k, v: ops.flash_attention(q, k, v, causal=True,
+                                           scale=Dq ** -0.5),
+       lambda q, k, v: _chunked_attention(q, k, v, pos, pos, True, None,
+                                          Dq ** -0.5, 256, 256),
+       "mla")
+    return out
+
+
+#: live slot-length patterns for the ragged decode sweep; all-full and the
+#: freshly-admitted (length-1) edge bracket the range.
+RAGGED_PATTERNS = {
+    "all_full": lambda L, B: [L] * B,
+    "half": lambda L, B: [L // 2] * B,
+    "mixed": lambda L, B: [1 + (i * L) // B for i in range(B)],
+    "all_one": lambda L, B: [1] * B,
+}
+
+
+def ragged_rows(cache_len=1024, B=8, iters=5):
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.kernels_bench import _time
+    from repro.kernels import ops
+    from repro.kernels.flash_attention import decode_block
+
+    key = jax.random.PRNGKey(1)
+    H, K, D = 4, 2, 64
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, cache_len, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, cache_len, K, D))
+    bd = decode_block(cache_len)
+    fn = jax.jit(lambda q, k, v, l: ops.flash_decode(q, k, v, l))
+    dense_mb = B * cache_len * K * D * 2 * BF16 / 1e6
+    rows = []
+    for name, make in RAGGED_PATTERNS.items():
+        lens = make(cache_len, B)
+        lengths = jnp.asarray(lens, jnp.int32)
+        # the kernel reads ceil(len/bd) k-blocks per row
+        blocks = sum(-(-l // bd) for l in lens)
+        model_mb = blocks * bd * K * D * 2 * BF16 / 1e6
+        rows.append({
+            "pattern": name,
+            "cache_len": cache_len,
+            "mean_len": sum(lens) / len(lens),
+            "decode_us": round(_time(fn, q, k, v, lengths, iters=iters), 1),
+            "modeled_kv_mb": round(model_mb, 4),
+            "dense_kv_mb": round(dense_mb, 4),
+            "measured_mb": _measured_mb(fn, (q, k, v, lengths)),
+        })
+    return rows
+
+
+def collect(seq_sweep=None, iters=5, quick=False) -> dict:
+    import jax
+
+    from benchmarks.kernels_bench import ATTN_SEQ_SWEEP, _time
+    sweep = tuple(seq_sweep) if seq_sweep is not None else ATTN_SEQ_SWEEP
+    rows, speedups = [], []
+    for S in sweep:
+        wl = attention_workloads(S, quick=quick)
+        t = {}
+        for (workload, impl), (fwd, bwd, args, mb) in wl.items():
+            tf = _time(fwd, *args, iters=iters)
+            tb = _time(bwd, *args, iters=iters)
+            t[(workload, impl)] = tb
+            rows.append({
+                "workload": workload,
+                "impl": impl,
+                "seqlen": int(S),
+                "fwd_us": round(tf, 1),
+                "fwdbwd_us": round(tb, 1),
+                "modeled_mb": round(mb, 4),
+                "measured_mb": _measured_mb(fwd, args),
+            })
+        for workload in ("dense", "packed", "mla"):
+            mb_f = next(r["modeled_mb"] for r in rows
+                        if r["workload"] == workload and r["impl"] == "flash"
+                        and r["seqlen"] == S)
+            mb_c = next(r["modeled_mb"] for r in rows
+                        if r["workload"] == workload and r["impl"] == "chunked"
+                        and r["seqlen"] == S)
+            speedups.append({
+                "workload": workload,
+                "seqlen": int(S),
+                "fwdbwd_flash_vs_chunked": round(
+                    t[(workload, "chunked")] /
+                    max(t[(workload, "flash")], 1e-9), 3),
+                "modeled_mb_flash_vs_chunked": round(mb_f / mb_c, 4),
+            })
+    return {
+        "schema_version": 1,
+        "area": "attention",
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "seq_sweep": [int(s) for s in sweep],
+        "rows": rows,
+        "speedups": speedups,
+        "ragged_decode": ragged_rows(cache_len=256 if quick else 1024,
+                                     B=4 if quick else 8, iters=iters),
+    }
+
+
+def main(quick: bool = False, out: str = ARTIFACT) -> dict:
+    sweep = (256,) if quick else None
+    doc = collect(seq_sweep=sweep, iters=2 if quick else 5, quick=quick)
+    errs = validate(doc)
+    if errs:
+        raise SystemExit("BENCH_attention schema violation:\n"
+                         + "\n".join(errs))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    for s in doc["speedups"]:
+        print(f"bench_attention:{s['workload']}_S{s['seqlen']},"
+              f"x{s['fwdbwd_flash_vs_chunked']:.2f}_wall,"
+              f"x{s['modeled_mb_flash_vs_chunked']:.2f}_modeled_bytes")
+    for r in doc["ragged_decode"]:
+        print(f"bench_attention:ragged_{r['pattern']},"
+              f"mean_len={r['mean_len']:.0f},"
+              f"kv_mb={r['modeled_kv_mb']}_of_{r['dense_kv_mb']}")
+    print(f"bench_attention:# wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT)
+    a = ap.parse_args()
+    main(quick=a.quick, out=a.out)

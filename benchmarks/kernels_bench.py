@@ -80,6 +80,45 @@ def _attn_rows(key, causal=True, window=0):
     return rows
 
 
+def _attn_variant_rows(key, S=256):
+    """The workloads the segment/MLA/ragged kernels brought on-path, one
+    compact CSV row each (benchmarks.bench_attention sweeps them fully and
+    persists BENCH_attention.json)."""
+    from repro.kernels.flash_attention import decode_block
+    rows = []
+    B, H, K, D = 1, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    seg = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(4, dtype=jnp.int32), S // 4)[None], (B, S))
+    packed = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(jnp.square(
+            ops.flash_attention(q, k, v, segments=seg, causal=True))),
+        argnums=(0, 1, 2)))
+    rows.append((f"attn_flash_packed_fwdbwd_S{S}", _time(packed, q, k, v),
+                 "segment block skipping, 4 docs/row"))
+    qm = jax.random.normal(key, (B, S, H, 192))
+    km = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, 192))
+    vm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, H, 128))
+    mla = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(jnp.square(ops.flash_attention(
+            q, k, v, causal=True, scale=192 ** -0.5))),
+        argnums=(0, 1, 2)))
+    rows.append((f"attn_flash_mla_fwdbwd_S{S}", _time(mla, qm, km, vm),
+                 "independent Dv tiling (Dq=192, Dv=128)"))
+    L = 4 * S
+    kc = jax.random.normal(jax.random.fold_in(key, 5), (B * 4, L, K, D))
+    vc = jax.random.normal(jax.random.fold_in(key, 6), (B * 4, L, K, D))
+    qd = jax.random.normal(jax.random.fold_in(key, 7), (B * 4, 1, H, D))
+    lengths = jnp.asarray([1, L // 4, L // 2, L], jnp.int32)
+    dec = jax.jit(lambda q, k, v, l: ops.flash_decode(q, k, v, l))
+    rows.append((f"attn_flash_decode_ragged_L{L}",
+                 _time(dec, qd, kc, vc, lengths),
+                 f"per-slot lengths, block {decode_block(L)}"))
+    return rows
+
+
 def update_variants(n, key=None, leaves: int = 8):
     """Jitted (fn, args) update-phase variants for ``n`` params: resident
     (slabs stay slabs), packed (pack-per-step around the same sweep), ref
@@ -190,6 +229,7 @@ def main():
     rows.append(("grad_stats_ref_1M",
                  _time(jax.jit(ref.grad_stats_ref), x), "jnp oracle"))
     rows.extend(_attn_rows(key))
+    rows.extend(_attn_variant_rows(key))
     rows.extend(_update_rows(key))
     for name, us, derived in rows:
         print(f"kernels:{name},{us:.1f},{derived}")

@@ -44,6 +44,12 @@ def main() -> None:
     bench_update.main(quick=args.quick)
     sys.stdout.flush()
 
+    from benchmarks import bench_attention
+    print("# attention trajectory artifact (BENCH_attention.json): flash vs"
+          " chunked per seqlen + packed/MLA/ragged-decode workloads")
+    bench_attention.main(quick=args.quick)
+    sys.stdout.flush()
+
     print("# roofline table (from dry-run artifacts; run "
           "`python -m repro.launch.dryrun --all --mesh both` to refresh)")
     roofline_table.main()

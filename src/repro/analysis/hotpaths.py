@@ -234,6 +234,45 @@ def kernel_paths() -> List[HotPath]:
 
         return jax.make_jaxpr(fwd_bwd)(q, kv, kv)
 
+    def flash_packed_jx():
+        # packed multi-document batch: segment masking active in forward
+        # AND all three backward kernels
+        q = SDS((2, 512, 4, 64), jnp.float32)
+        kv = SDS((2, 512, 2, 64), jnp.float32)
+        seg = SDS((2, 512), jnp.int32)
+
+        def fwd_bwd(q_, k_, v_, seg_):
+            def loss(q_, k_, v_):
+                return jnp.sum(ops.flash_attention(
+                    q_, k_, v_, segments=seg_, causal=True))
+            return jax.value_and_grad(loss, argnums=(0, 1, 2))(q_, k_, v_)
+
+        return jax.make_jaxpr(fwd_bwd)(q, kv, kv, seg)
+
+    def flash_mla_jx():
+        # MLA geometry: qk head dim (nope+rope=192) != v head dim (128),
+        # tiled with the independent Dv BlockSpec
+        q = SDS((2, 512, 4, 192), jnp.float32)
+        kk = SDS((2, 512, 4, 192), jnp.float32)
+        v = SDS((2, 512, 4, 128), jnp.float32)
+
+        def fwd_bwd(q_, k_, v_):
+            def loss(q_, k_, v_):
+                return jnp.sum(ops.flash_attention(
+                    q_, k_, v_, causal=True, scale=192 ** -0.5))
+            return jax.value_and_grad(loss, argnums=(0, 1, 2))(q_, k_, v_)
+
+        return jax.make_jaxpr(fwd_bwd)(q, kk, v)
+
+    def flash_decode_ragged_jx():
+        # per-slot-length decode: (B,) length vector is a runtime operand
+        q = SDS((4, 1, 4, 64), jnp.float32)
+        kv = SDS((4, 256, 2, 64), jnp.float32)
+        lengths = SDS((4,), jnp.int32)
+        return jax.make_jaxpr(
+            lambda q_, k_, v_, l_: ops.flash_decode(q_, k_, v_, l_))(
+                q, kv, kv, lengths)
+
     def qdq_jx():
         x = SDS((1024, 512), jnp.float32)
         return jax.make_jaxpr(
@@ -244,6 +283,9 @@ def kernel_paths() -> List[HotPath]:
         return jax.make_jaxpr(ops.grad_stats)(x)
 
     mk = [("kernel/flash_attention", flash_jx),
+          ("kernel/flash_attention_packed", flash_packed_jx),
+          ("kernel/flash_attention_mla", flash_mla_jx),
+          ("kernel/flash_decode_ragged", flash_decode_ragged_jx),
           ("kernel/qdq_cast", qdq_jx),
           ("kernel/grad_stats", stats_jx)]
     return [HotPath(name=n, kind="kernel", config="<kernels>", jaxpr_fn=f,

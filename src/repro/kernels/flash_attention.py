@@ -1,16 +1,32 @@
 """Block-tiled flash attention: Pallas forward AND backward kernels with
-causal + sliding-window block skipping.
+causal + sliding-window + per-row segment block skipping, plus a ragged
+per-slot-length decode kernel.
 
 TPU-native tiling of the online-softmax algorithm: (BQ, D) query tiles and
 (BK, D) key/value tiles resident in VMEM, fp32 accumulators in VMEM scratch
 persisted across the innermost (sequential) k-block grid dimension. Blocks
-that are fully masked — above the causal diagonal or outside the sliding
-window — are SKIPPED (``pl.when``), so executed FLOPs are ~S^2/2 for causal
-and ~S*W for windowed attention, unlike the chunked-jnp path which computes
-every pair and masks. GQA is handled in the k/v index_map (q head h reads
-kv head h // rep) so k/v are never materialized per q-head.
+that are fully masked — above the causal diagonal, outside the sliding
+window, or (packed batches) entirely cross-segment — are SKIPPED
+(``pl.when``), so executed FLOPs are ~S^2/2 for causal, ~S*W for windowed,
+and ~sum_doc(len_doc^2)/2 for packed attention, unlike the chunked-jnp path
+which computes every pair and masks. GQA is handled in the k/v index_map
+(q head h reads kv head h // rep) so k/v are never materialized per q-head.
 
-Training runs four kernels (FlashAttention-2 style; DESIGN.md §8):
+Segment masking (packed multi-document rows): ``segments`` is a (B, S)
+int32 array of NON-DECREASING per-row document ids; attention never crosses
+a segment boundary. Positions are the within-segment arange, so within a
+segment the global index difference EQUALS the positional difference — the
+kernels keep masking on the global iota (causal/window) and add one
+equality term (q_seg == k_seg). Because ids are sorted per row, a tile is
+skippable exactly when its q/k segment-id ranges do not overlap — a
+runtime predicate folded into the same ``pl.when`` as the causal/window
+skip, so forward and all three backward kernels skip identical blocks.
+
+The value head dim (Dv) is tiled independently of the q/k head dim (D):
+MLA training (qk = nope+rope dim, v = v_head_dim) runs these kernels with
+q/k (…, D) and v/o (…, Dv) BlockSpecs.
+
+Training runs four kernels (FlashAttention-2 style; DESIGN.md §8, §14):
 
   * forward (``flash_attention_fwd``) — the inference forward plus one
     (B, H, S) fp32 logsumexp residual, the ONLY extra tensor the backward
@@ -26,9 +42,19 @@ All four share ``_block_needed``/``_tile_mask``, so forward and backward
 skip exactly the same blocks. ``kernels.ops`` binds fwd+bwd into one
 differentiable op with ``jax.custom_vjp`` behind the dispatch gate.
 
-Shapes: q (B, S, H, D); k, v (B, S, K, D); H % K == 0; S % BQ == S % BK == 0.
-VMEM at defaults (BQ=BK=256, D<=256 fp32): ~1.5 MiB tiles + 0.5 MiB scratch
-(backward: ~2 MiB tiles + 1 MiB dk/dv scratch).
+``flash_decode`` is the serving-side ragged kernel: one query row per
+(b, h) against a (B, L, K, D) cache plus a (B,) int32 length vector
+prefetched as a scalar operand (``pltpu.PrefetchScalarGridSpec``), so the
+k-block loop stops at ceil(len/BD) per row — the k/v index_map CLAMPS the
+block index to the last needed block (skipped steps re-address the same
+tile, so no new DMA is issued) and ``pl.when`` skips their compute. Decode
+HBM reads therefore scale with the actual sequence length, not the cache
+capacity. Lengths are a traced runtime operand: one compiled executable
+serves every slot-length pattern (zero recompiles after serve warm()).
+
+Shapes: q (B, S, H, D); k (B, S, K, D); v (B, S, K, Dv); H % K == 0;
+S % BQ == S % BK == 0. VMEM at defaults (BQ=BK=256, D<=256 fp32): ~1.5 MiB
+tiles + 0.5 MiB scratch (backward: ~2 MiB tiles + 1 MiB dk/dv scratch).
 """
 from __future__ import annotations
 
@@ -42,21 +68,33 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0e38
 BQ = 256
 BK = 256
+#: candidate k-block sizes for the ragged decode kernel (largest dividing
+#: the cache length wins; < 8 would break TPU sublane tiling -> no kernel)
+DECODE_BLOCKS = (256, 128, 64, 32, 16, 8)
 
 
-def _block_needed(q_start, k_start, causal: bool, window: int):
+def _block_needed(q_start, k_start, causal: bool, window: int,
+                  sq=None, sk=None):
     """Does tile (q_start, k_start) contain ANY unmasked (q, k) pair? Shared
-    by forward and both backward kernels so all skip identical blocks."""
+    by forward and both backward kernels so all skip identical blocks.
+    ``sq``/``sk`` are the tile's (BQ,)/(BK,) segment-id rows (non-decreasing
+    within a row), making the predicate runtime-valued for packed batches:
+    a tile whose segment ranges do not overlap is fully cross-document."""
     needed = jnp.asarray(True)
     if causal:
         needed = needed & (k_start <= q_start + BQ - 1)
     if window and window > 0:
         needed = needed & (k_start + BK - 1 >= q_start - (window - 1))
+    if sq is not None:
+        needed = needed & (sq[-1] >= sk[0]) & (sq[0] <= sk[-1])
     return needed
 
 
-def _tile_mask(q_start, k_start, causal: bool, window: int):
-    """(BQ, BK) bool mask of valid pairs inside one tile."""
+def _tile_mask(q_start, k_start, causal: bool, window: int, sq=None, sk=None):
+    """(BQ, BK) bool mask of valid pairs inside one tile. With segments,
+    positions are the within-segment arange, so the global-iota causal and
+    window terms are exact inside a segment and the segment equality term
+    kills every cross-document pair."""
     qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
     kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
     d = qp - kp
@@ -65,12 +103,15 @@ def _tile_mask(q_start, k_start, causal: bool, window: int):
         ok = ok & (d >= 0)
     if window and window > 0:
         ok = ok & (d < window)
+    if sq is not None:
+        ok = ok & (sq[:, None] == sk[None, :])
     return ok
 
 
 # ================================================================ forward ==
-def _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
-              causal: bool, window: int, scale: float, nk: int):
+def _fwd_body(q_ref, k_ref, v_ref, sq_ref, sk_ref, o_ref, lse_ref, acc_ref,
+              m_ref, l_ref, *, causal: bool, window: int, scale: float,
+              nk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -82,14 +123,17 @@ def _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
 
     q_start = qi * BQ
     k_start = ki * BK
+    sq = None if sq_ref is None else sq_ref[0, :]
+    sk = None if sk_ref is None else sk_ref[0, :]
 
-    @pl.when(_block_needed(q_start, k_start, causal, window))
+    @pl.when(_block_needed(q_start, k_start, causal, window, sq, sk))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (BQ, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)              # (BK, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)              # (BK, Dv)
         s = q @ k.T                                            # (BQ, BK)
-        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window, sq, sk),
+                      s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
@@ -109,17 +153,40 @@ def _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, **kw):
-    _fwd_body(q_ref, k_ref, v_ref, o_ref, None, acc_ref, m_ref, l_ref, **kw)
+    _fwd_body(q_ref, k_ref, v_ref, None, None, o_ref, None, acc_ref, m_ref,
+              l_ref, **kw)
 
 
 def _flash_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
                       l_ref, **kw):
-    _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, **kw)
+    _fwd_body(q_ref, k_ref, v_ref, None, None, o_ref, lse_ref, acc_ref,
+              m_ref, l_ref, **kw)
 
 
-def _fwd_call(q, k, v, *, causal, window, scale, interpret, with_lse):
+def _flash_kernel_seg(q_ref, k_ref, v_ref, sq_ref, sk_ref, o_ref, acc_ref,
+                      m_ref, l_ref, **kw):
+    _fwd_body(q_ref, k_ref, v_ref, sq_ref, sk_ref, o_ref, None, acc_ref,
+              m_ref, l_ref, **kw)
+
+
+def _flash_kernel_seg_lse(q_ref, k_ref, v_ref, sq_ref, sk_ref, o_ref,
+                          lse_ref, acc_ref, m_ref, l_ref, **kw):
+    _fwd_body(q_ref, k_ref, v_ref, sq_ref, sk_ref, o_ref, lse_ref, acc_ref,
+              m_ref, l_ref, **kw)
+
+
+def _seg_specs():
+    """BlockSpecs of the (B, S) int32 segment-id array on the fwd/dq grid
+    (b, h, qi, ki): one (1, BQ) q row tile and one (1, BK) k row tile."""
+    return [pl.BlockSpec((1, BQ), lambda b, h, qi, ki: (b, qi)),
+            pl.BlockSpec((1, BK), lambda b, h, qi, ki: (b, ki))]
+
+
+def _fwd_call(q, k, v, segments, *, causal, window, scale, interpret,
+              with_lse):
     B, S, H, D = q.shape
     K = k.shape[2]
+    Dv = v.shape[-1]
     rep = H // K
     assert S % BQ == 0 and S % BK == 0, (S, BQ, BK)
     if scale is None:
@@ -128,10 +195,26 @@ def _fwd_call(q, k, v, *, causal, window, scale, interpret, with_lse):
     grid = (B, H, nq, nk)
     kw = dict(causal=causal, window=int(window or 0), scale=float(scale),
               nk=nk)
-    kern = functools.partial(
-        _flash_kernel_lse if with_lse else _flash_kernel, **kw)
-    out_shape = [jax.ShapeDtypeStruct((B, S, H, D), q.dtype)]
-    out_specs = [pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0))]
+    if segments is None:
+        kern = _flash_kernel_lse if with_lse else _flash_kernel
+    else:
+        kern = _flash_kernel_seg_lse if with_lse else _flash_kernel_seg
+    kern = functools.partial(kern, **kw)
+    in_specs = [
+        pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        pl.BlockSpec((1, BK, 1, D),
+                     lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+        pl.BlockSpec((1, BK, 1, Dv),
+                     lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+    ]
+    args = [q, k, v]
+    if segments is not None:
+        in_specs += _seg_specs()
+        args.append(segments.astype(jnp.int32))
+        args.append(args[-1])
+    out_shape = [jax.ShapeDtypeStruct((B, S, H, Dv), q.dtype)]
+    out_specs = [pl.BlockSpec((1, BQ, 1, Dv),
+                              lambda b, h, qi, ki: (b, qi, h, 0))]
     if with_lse:
         out_shape.append(jax.ShapeDtypeStruct((B, H, S), jnp.float32))
         out_specs.append(pl.BlockSpec((1, 1, BQ),
@@ -139,41 +222,37 @@ def _fwd_call(q, k, v, *, causal, window, scale, interpret, with_lse):
     res = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((BQ, D), jnp.float32),
+            pltpu.VMEM((BQ, Dv), jnp.float32),
             pltpu.VMEM((BQ,), jnp.float32),
             pltpu.VMEM((BQ,), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
     return tuple(res) if with_lse else (res[0],)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    scale: float = None, interpret: bool = False):
+def flash_attention(q, k, v, segments=None, *, causal: bool = True,
+                    window: int = 0, scale: float = None,
+                    interpret: bool = False):
     """Inference/primal forward: no residual write."""
-    return _fwd_call(q, k, v, causal=causal, window=window, scale=scale,
-                     interpret=interpret, with_lse=False)[0]
+    return _fwd_call(q, k, v, segments, causal=causal, window=window,
+                     scale=scale, interpret=interpret, with_lse=False)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "interpret"))
-def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                        scale: float = None, interpret: bool = False):
+def flash_attention_fwd(q, k, v, segments=None, *, causal: bool = True,
+                        window: int = 0, scale: float = None,
+                        interpret: bool = False):
     """Training forward: returns (o, lse) with lse (B, H, S) fp32."""
-    return _fwd_call(q, k, v, causal=causal, window=window, scale=scale,
-                     interpret=interpret, with_lse=True)
+    return _fwd_call(q, k, v, segments, causal=causal, window=window,
+                     scale=scale, interpret=interpret, with_lse=True)
 
 
 # =============================================================== backward ==
@@ -183,8 +262,9 @@ def _delta_kernel(o_ref, do_ref, delta_ref):
     delta_ref[0, 0, :] = jnp.sum(o * do, axis=1)
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               acc_ref, *, causal: bool, window: int, scale: float, nk: int):
+def _dq_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref, sk_ref,
+             dq_ref, acc_ref, *, causal: bool, window: int, scale: float,
+             nk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -194,15 +274,18 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
     q_start = qi * BQ
     k_start = ki * BK
+    sq = None if sq_ref is None else sq_ref[0, :]
+    sk = None if sk_ref is None else sk_ref[0, :]
 
-    @pl.when(_block_needed(q_start, k_start, causal, window))
+    @pl.when(_block_needed(q_start, k_start, causal, window, sq, sk))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
         s = q @ k.T
-        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window, sq, sk),
+                      s, NEG_INF)
         p = jnp.exp(s - lse_ref[0, 0, :][:, None])     # masked pairs -> 0
         dp = do @ v.T
         ds = p * (dp - delta_ref[0, 0, :][:, None])
@@ -214,9 +297,21 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dq_ref[0, :, 0, :] = (acc_ref[...] * scale).astype(dq_ref.dtype)
 
 
-def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
-                dv_ref, dk_acc, dv_acc, *, causal: bool, window: int,
-                scale: float, rep: int, nq: int):
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, **kw):
+    _dq_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, None, None,
+             dq_ref, acc_ref, **kw)
+
+
+def _dq_kernel_seg(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref,
+                   sk_ref, dq_ref, acc_ref, **kw):
+    _dq_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref, sk_ref,
+             dq_ref, acc_ref, **kw)
+
+
+def _dkv_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref,
+              sk_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, causal: bool,
+              window: int, scale: float, rep: int, nq: int):
     ki = pl.program_id(2)
     r = pl.program_id(3)       # q head within the GQA group of this kv head
     qi = pl.program_id(4)
@@ -228,15 +323,18 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
 
     q_start = qi * BQ
     k_start = ki * BK
+    sq = None if sq_ref is None else sq_ref[0, :]
+    sk = None if sk_ref is None else sk_ref[0, :]
 
-    @pl.when(_block_needed(q_start, k_start, causal, window))
+    @pl.when(_block_needed(q_start, k_start, causal, window, sq, sk))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
         s = q @ k.T                                    # (BQ, BK)
-        s = jnp.where(_tile_mask(q_start, k_start, causal, window), s, NEG_INF)
+        s = jnp.where(_tile_mask(q_start, k_start, causal, window, sq, sk),
+                      s, NEG_INF)
         p = jnp.exp(s - lse_ref[0, 0, :][:, None])
         dv_acc[...] += p.T @ do
         dp = do @ v.T
@@ -249,87 +347,222 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
         dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
 
 
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, dk_acc, dv_acc, **kw):
+    _dkv_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, None, None,
+              dk_ref, dv_ref, dk_acc, dv_acc, **kw)
+
+
+def _dkv_kernel_seg(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref,
+                    sk_ref, dk_ref, dv_ref, dk_acc, dv_acc, **kw):
+    _dkv_body(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, sq_ref,
+              sk_ref, dk_ref, dv_ref, dk_acc, dv_acc, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "interpret"))
-def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
-                        window: int = 0, scale: float = None,
-                        interpret: bool = False):
+def flash_attention_bwd(q, k, v, o, lse, do, segments=None, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float = None, interpret: bool = False):
     """(dq, dk, dv) from the saved (q, k, v, o, lse) residuals."""
     B, S, H, D = q.shape
     K = k.shape[2]
+    Dv = v.shape[-1]
     rep = H // K
     assert S % BQ == 0 and S % BK == 0, (S, BQ, BK)
     if scale is None:
         scale = D ** -0.5
     nq, nk = S // BQ, S // BK
     kw = dict(causal=causal, window=int(window or 0), scale=float(scale))
+    seg = None if segments is None else segments.astype(jnp.int32)
 
     delta = pl.pallas_call(
         _delta_kernel,
         grid=(B, H, nq),
         in_specs=[
-            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi: (b, qi, h, 0)),
-            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi: (b, qi, h, 0)),
+            pl.BlockSpec((1, BQ, 1, Dv), lambda b, h, qi: (b, qi, h, 0)),
+            pl.BlockSpec((1, BQ, 1, Dv), lambda b, h, qi: (b, qi, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, BQ), lambda b, h, qi: (b, h, qi)),
         out_shape=jax.ShapeDtypeStruct((B, H, S), jnp.float32),
         interpret=interpret,
     )(o, do)
 
+    dq_in_specs = [
+        pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        pl.BlockSpec((1, BK, 1, D),
+                     lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+        pl.BlockSpec((1, BK, 1, Dv),
+                     lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+        pl.BlockSpec((1, BQ, 1, Dv), lambda b, h, qi, ki: (b, qi, h, 0)),
+        pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
+        pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
+    ]
+    dq_args = [q, k, v, do, lse, delta]
+    if seg is not None:
+        dq_in_specs += _seg_specs()
+        dq_args += [seg, seg]
     dq = pl.pallas_call(
-        functools.partial(_dq_kernel, nk=nk, **kw),
+        functools.partial(_dq_kernel if seg is None else _dq_kernel_seg,
+                          nk=nk, **kw),
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, h, qi, ki: (b, ki, h // rep, 0)),
-            pl.BlockSpec((1, BQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
-            pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
-            pl.BlockSpec((1, 1, BQ), lambda b, h, qi, ki: (b, h, qi)),
-        ],
+        in_specs=dq_in_specs,
         out_specs=pl.BlockSpec((1, BQ, 1, D),
                                lambda b, h, qi, ki: (b, qi, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
         scratch_shapes=[pltpu.VMEM((BQ, D), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(*dq_args)
 
     # dk/dv: one (BK, D) accumulator pair per kv head, swept over the GQA
     # head group (r) and all q-blocks (qi) — grouped q-heads reduce into the
     # shared kv head inside VMEM, never through HBM
+    dkv_in_specs = [
+        pl.BlockSpec((1, BQ, 1, D),
+                     lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
+        pl.BlockSpec((1, BK, 1, D),
+                     lambda b, g, ki, r, qi: (b, ki, g, 0)),
+        pl.BlockSpec((1, BK, 1, Dv),
+                     lambda b, g, ki, r, qi: (b, ki, g, 0)),
+        pl.BlockSpec((1, BQ, 1, Dv),
+                     lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
+        pl.BlockSpec((1, 1, BQ),
+                     lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
+        pl.BlockSpec((1, 1, BQ),
+                     lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
+    ]
+    dkv_args = [q, k, v, do, lse, delta]
+    if seg is not None:
+        dkv_in_specs += [
+            pl.BlockSpec((1, BQ), lambda b, g, ki, r, qi: (b, qi)),
+            pl.BlockSpec((1, BK), lambda b, g, ki, r, qi: (b, ki)),
+        ]
+        dkv_args += [seg, seg]
     dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, rep=rep, nq=nq, **kw),
+        functools.partial(_dkv_kernel if seg is None else _dkv_kernel_seg,
+                          rep=rep, nq=nq, **kw),
         grid=(B, K, nk, rep, nq),
-        in_specs=[
-            pl.BlockSpec((1, BQ, 1, D),
-                         lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
-            pl.BlockSpec((1, BK, 1, D),
-                         lambda b, g, ki, r, qi: (b, ki, g, 0)),
-            pl.BlockSpec((1, BQ, 1, D),
-                         lambda b, g, ki, r, qi: (b, qi, g * rep + r, 0)),
-            pl.BlockSpec((1, 1, BQ),
-                         lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
-            pl.BlockSpec((1, 1, BQ),
-                         lambda b, g, ki, r, qi: (b, g * rep + r, qi)),
-        ],
+        in_specs=dkv_in_specs,
         out_specs=[
             pl.BlockSpec((1, BK, 1, D),
                          lambda b, g, ki, r, qi: (b, ki, g, 0)),
-            pl.BlockSpec((1, BK, 1, D),
+            pl.BlockSpec((1, BK, 1, Dv),
                          lambda b, g, ki, r, qi: (b, ki, g, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, S, K, D), k.dtype),
-            jax.ShapeDtypeStruct((B, S, K, D), v.dtype),
+            jax.ShapeDtypeStruct((B, S, K, Dv), v.dtype),
         ],
         scratch_shapes=[
             pltpu.VMEM((BK, D), jnp.float32),
-            pltpu.VMEM((BK, D), jnp.float32),
+            pltpu.VMEM((BK, Dv), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(*dkv_args)
     return dq, dk, dv
+
+
+# ========================================================== ragged decode ==
+def decode_block(L: int):
+    """k-block size for a cache of length ``L`` (None -> no ragged kernel
+    for this geometry; callers fall back). Prefers the largest supported
+    block that still gives the ragged loop >= 4 steps — a single whole-cache
+    block would read capacity bytes regardless of the live length, defeating
+    the per-slot-length skipping — falling back to the largest divisor for
+    short caches."""
+    largest = None
+    for bd in DECODE_BLOCKS:
+        if L % bd == 0:
+            if largest is None:
+                largest = bd
+            if 4 * bd <= L:
+                return bd
+    return largest
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, bd: int, nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    # blocks at/after ceil(len/bd) are fully masked: their index_map clamps
+    # to the last needed tile (no new DMA) and compute is skipped entirely
+    @pl.when(ki * bd < length)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (1, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bd, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)              # (bd, Dv)
+        s = q @ k.T                                            # (1, bd)
+        slot = ki * bd + jax.lax.broadcasted_iota(jnp.int32, (1, bd), 1)
+        s = jnp.where(slot < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def flash_decode(q, k, v, lengths, *, scale: float = None,
+                 interpret: bool = False):
+    """Ragged single-token decode: q (B, 1, H, D) against a (B, L, K, D)
+    k / (B, L, K, Dv) v cache; row b attends slots [0, lengths[b]).
+
+    ``lengths`` is a (B,) int32 RUNTIME vector (scalar-prefetched), so the
+    executable is shape-stable across slot-length patterns; the per-row
+    k-block loop stops at ceil(lengths[b] / BD). Requires the cache to hold
+    positions contiguously from slot 0 (full-length caches — no ring wrap),
+    which ``nn.attention.gqa_decode`` guarantees for unwindowed blocks."""
+    B, Sq, H, D = q.shape
+    assert Sq == 1, q.shape
+    L, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // K
+    bd = decode_block(L)
+    assert bd is not None, (L, DECODE_BLOCKS)
+    nk = L // bd
+    if scale is None:
+        scale = D ** -0.5
+
+    def kv_map(b, h, ki, len_ref):
+        last = jnp.maximum((len_ref[b] + bd - 1) // bd - 1, 0)
+        return (b, jnp.minimum(ki, last), h // rep, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=float(scale), bd=bd, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, ki, len_ref: (b, 0, h, 0)),
+                pl.BlockSpec((1, bd, 1, D), kv_map),
+                pl.BlockSpec((1, bd, 1, Dv), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, Dv),
+                                   lambda b, h, ki, len_ref: (b, 0, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, Dv), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, Dv), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)
+    return out

@@ -21,6 +21,7 @@ import contextlib
 import functools
 import operator
 import threading
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -116,11 +117,53 @@ def _is_std_arange(pos, batch: int, seqlen: int) -> bool:
 def kernel_shape_gate(q_shape, k_shape, v_shape) -> bool:
     """Static part of the dispatch gate, shared with the roofline cost model
     (roofline.costmodel.flash_skip_flags): self-attention with Sq == Sk
-    divisible by both block sizes, and matching q/k/v head dims (the kernels
-    tile one D; MLA training, whose qk dim != v dim, falls back)."""
+    divisible by both block sizes and matching q/k head dims. The value head
+    dim is tiled INDEPENDENTLY (its own Dv BlockSpecs/accumulators), so MLA
+    training — qk dim (nope+rope) != v_head_dim — runs the real kernel."""
     Sq, Sk = q_shape[1], k_shape[1]
     return (Sq == Sk and Sq % _fa.BQ == 0 and Sq % _fa.BK == 0
-            and q_shape[-1] == k_shape[-1] == v_shape[-1])
+            and q_shape[-1] == k_shape[-1])
+
+
+def kernel_fallback_reason(q_shape, k_shape, v_shape, q_pos, k_pos,
+                           window, segments=None) -> str:
+    """Why the differentiable kernel op cannot take this call — "" when it
+    can. Mirrors the dispatch in ``flash_attention`` below; the cost model
+    surfaces the same taxonomy (flash_skip_flags' ``reason`` field) so
+    dryrun cells say why a config priced the chunked path."""
+    B, Sq = q_shape[0], q_shape[1]
+    Sk = k_shape[1]
+    if _static_window(window) is None:
+        return "traced window (kernel specializes on a static window)"
+    if Sq != Sk:
+        return f"cross-length attention Sq={Sq} != Sk={Sk}"
+    if Sq % _fa.BQ or Sq % _fa.BK:
+        return (f"seq len {Sq} not divisible by kernel blocks "
+                f"({_fa.BQ}/{_fa.BK})")
+    if q_shape[-1] != k_shape[-1]:
+        return f"q/k head dims differ ({q_shape[-1]} vs {k_shape[-1]})"
+    if segments is not None:
+        if q_pos is not None or k_pos is not None:
+            return ("packed segments with undeclared positions (wrap the "
+                    "constructor in nn.attention.segment_positions)")
+        return ""
+    if not (_is_std_arange(q_pos, B, Sq) and _is_std_arange(k_pos, B, Sk)):
+        return ("positions not provably the standard arange (packed/offset "
+                "batch without segment ids)")
+    return ""
+
+
+_WARNED_FALLBACKS = set()
+
+
+def _note_fallback(reason: str) -> None:
+    """Warn ONCE per fallback reason category: the jnp paths are correct
+    but silently pay full-window FLOPs — a perf cliff worth surfacing."""
+    if reason and reason not in _WARNED_FALLBACKS:
+        _WARNED_FALLBACKS.add(reason)
+        warnings.warn(
+            f"flash_attention: kernel gate failed ({reason}); running the "
+            "chunked/naive jnp fallback", stacklevel=3)
 
 
 # ----------------------------------------------- differentiable kernel op --
@@ -147,26 +190,64 @@ def _flash_diff_bwd(causal, window, scale, interpret, res, do):
 _flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
 
 
-def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
-                    window=None, scale=None):
+# Segment-masked variant: ``segments`` is a traced int32 operand on the
+# differentiable path, so it rides as a primal arg whose cotangent is the
+# mandatory float0 zero (int inputs carry no tangent space).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_diff_seg(q, k, v, segments, causal, window, scale, interpret):
+    return _fa.flash_attention(q, k, v, segments, causal=causal,
+                               window=window, scale=scale,
+                               interpret=interpret)
+
+
+def _flash_diff_seg_fwd(q, k, v, segments, causal, window, scale, interpret):
+    o, lse = _fa.flash_attention_fwd(q, k, v, segments, causal=causal,
+                                     window=window, scale=scale,
+                                     interpret=interpret)
+    return o, (q, k, v, o, lse, segments)
+
+
+def _flash_diff_seg_bwd(causal, window, scale, interpret, res, do):
+    q, k, v, o, lse, segments = res
+    dq, dk, dv = _fa.flash_attention_bwd(q, k, v, o, lse, do, segments,
+                                         causal=causal, window=window,
+                                         scale=scale, interpret=interpret)
+    return dq, dk, dv, np.zeros(segments.shape, jax.dtypes.float0)
+
+
+_flash_diff_seg.defvjp(_flash_diff_seg_fwd, _flash_diff_seg_bwd)
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, segments=None,
+                    causal=True, window=None, scale=None):
     """Drop-in for repro.nn.attention.attention that dispatches the Pallas
     kernel ONLY for configurations it computes correctly: self-attention
-    (Sq == Sk) divisible by the block sizes, matching head dims, a static
-    integral window, and positions statically equal to the standard arange
-    (train/prefill). Everything else — ragged/offset/packed positions,
-    traced windows, tiny sequences — runs the chunked or naive jnp path with
-    positions honored. BOTH paths are differentiable: the kernel through its
-    custom_vjp backward kernels, the fallbacks through JAX AD."""
+    (Sq == Sk) divisible by the block sizes, matching q/k head dims (Dv is
+    free — MLA runs the kernel), a static integral window, and EITHER
+    positions statically equal to the standard arange (train/prefill) OR
+    ``segments`` with positions declared segment-standard (packed batches:
+    q_pos/k_pos passed as None under nn.attention.segment_positions, the
+    within-segment arange contract the segment kernels assume). Everything
+    else — ragged/offset positions, traced windows, tiny sequences — runs
+    the chunked or naive jnp path with positions AND segments honored. BOTH
+    paths are differentiable: the kernel through its custom_vjp backward
+    kernels, the fallbacks through JAX AD."""
     B, Sq = q.shape[0], q.shape[1]
     Sk = k.shape[1]
     win = _static_window(window)
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    if (win is not None and not getattr(_FALLBACK, "flag", False)
-            and kernel_shape_gate(q.shape, k.shape, v.shape)
-            and _is_std_arange(q_pos, B, Sq) and _is_std_arange(k_pos, B, Sk)):
+    forced = getattr(_FALLBACK, "flag", False)
+    reason = kernel_fallback_reason(q.shape, k.shape, v.shape, q_pos, k_pos,
+                                    window, segments)
+    if not forced and not reason:
+        if segments is not None:
+            return _flash_diff_seg(q, k, v, segments, bool(causal), win,
+                                   float(scale), _interpret())
         return _flash_diff(q, k, v, bool(causal), win, float(scale),
                            _interpret())
+    if not forced:
+        _note_fallback(reason)
     from repro.nn.attention import _chunked_attention, _naive_attention
     if win is not None:                 # normalized static window (int or off)
         window = win if win > 0 else None
@@ -176,5 +257,28 @@ def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
         k_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
     if Sq % _fa.BQ == 0 and Sk % _fa.BK == 0:
         return _chunked_attention(q, k, v, q_pos, k_pos, causal, window,
-                                  scale, _fa.BQ, _fa.BK)
-    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale)
+                                  scale, _fa.BQ, _fa.BK,
+                                  q_seg=segments, k_seg=segments)
+    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                            q_seg=segments, k_seg=segments)
+
+
+# --------------------------------------------------------- ragged decode --
+def flash_decode_gate(q_shape, k_shape, window) -> bool:
+    """Static gate for the ragged decode kernel: single-token query, an
+    unwindowed full-length cache (ring-wrapped windowed caches are not a
+    contiguous [0, len) prefix), matching q/k head dims, and a cache length
+    the decode blocks tile. ``flash_fallback()`` pins decode to the naive
+    path too (trace-time flag, so the branch is resolved at trace time)."""
+    return (window is None and q_shape[1] == 1
+            and q_shape[-1] == k_shape[-1]
+            and _fa.decode_block(k_shape[1]) is not None
+            and not getattr(_FALLBACK, "flag", False))
+
+
+def flash_decode(q, k, v, lengths, *, scale=None):
+    """Ragged per-slot-length decode kernel (see kernels.flash_attention
+    .flash_decode): row b of the (B, 1, H, D) query attends cache slots
+    [0, lengths[b]) only. Callers gate with ``flash_decode_gate``."""
+    return _fa.flash_decode(q, k, v, lengths, scale=scale,
+                            interpret=_interpret())

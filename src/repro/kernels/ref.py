@@ -27,10 +27,13 @@ def grad_stats_ref(x: jax.Array):
     return (jnp.sum(xf), jnp.sum(jnp.square(xf)), jnp.max(jnp.abs(xf)))
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
-    """q: (B,S,H,D), k/v: (B,S,K,D) -> (B,S,H,D). Full softmax reference."""
+def flash_attention_ref(q, k, v, segments=None, *, causal=True, window=0,
+                        scale=None):
+    """q: (B,S,H,D), k: (B,S,K,D), v: (B,S,K,Dv) -> (B,S,H,Dv). Full softmax
+    reference; ``segments`` (B,S) int32 masks cross-document pairs."""
     B, S, H, D = q.shape
     K = k.shape[2]
+    Dv = v.shape[-1]
     rep = H // K
     if scale is None:
         scale = D ** -0.5
@@ -38,12 +41,31 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     s = jnp.einsum("bqkrd,bskd->bqkrs", qr, k.astype(jnp.float32))
     idx = jnp.arange(S)
     d = idx[:, None] - idx[None, :]
-    ok = jnp.ones((S, S), bool)
+    ok = jnp.ones((B, S, S), bool)
     if causal:
-        ok &= d >= 0
+        ok &= (d >= 0)[None]
     if window and window > 0:
-        ok &= d < window
-    s = jnp.where(ok[None, :, None, None, :], s, -2.0e38)
+        ok &= (d < window)[None]
+    if segments is not None:
+        ok &= segments[:, :, None] == segments[:, None, :]
+    s = jnp.where(ok[:, :, None, None, :], s, -2.0e38)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqkrs,bskd->bqkrd", p, v.astype(jnp.float32))
-    return out.reshape(B, S, H, D).astype(q.dtype)
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, lengths, *, scale=None):
+    """Ragged decode oracle. q: (B,1,H,D); k: (B,L,K,D); v: (B,L,K,Dv);
+    lengths: (B,) int32 — row b attends slots [0, lengths[b])."""
+    B, _, H, D = q.shape
+    L, K = k.shape[1], k.shape[2]
+    rep = H // K
+    if scale is None:
+        scale = D ** -0.5
+    qr = q.reshape(B, 1, K, rep, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkrd,bskd->bqkrs", qr, k.astype(jnp.float32))
+    ok = jnp.arange(L)[None, :] < lengths[:, None]          # (B, L)
+    s = jnp.where(ok[:, None, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, v.shape[-1]).astype(q.dtype)

@@ -182,10 +182,11 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
         # fully-masked blocks in forward AND backward when the gate holds;
         # the update phase prices the fused slab sweep's 2-read model
         # (resident cells drop the pack/unpack assembly term to metadata)
-        ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len,
-                            **cm.flash_skip_flags(cfg, shape.seq_len))
+        flags = cm.flash_skip_flags(cfg, shape.seq_len)
+        ec = cm.train_costs(cfg, shape.global_batch, shape.seq_len, **flags)
         ec += cm.opt_traffic(n_total, slots=1, fused=fused, resident=resident)
         info["exec_costs"] = ec
+        info["flash_fallback_reason"] = flags["reason"]
         info["update_phase_bytes"] = cm.update_phase_bytes(
             n_total, 1, fused, resident=resident)
         info["update_assembly_bytes"] = (
@@ -210,9 +211,10 @@ def build_lowered(arch: str, shape_name: str, mesh, accum: int = 1,
             lowered = jitted.lower(pvals_bf16, specs)
         tokens = shape.global_batch * shape.seq_len
         info["model_flops"] = model_flops(n_active, tokens, "serve")
+        flags = cm.flash_skip_flags(cfg, shape.seq_len)
         info["exec_costs"] = cm.prefill_costs(
-            cfg, shape.global_batch, shape.seq_len,
-            **cm.flash_skip_flags(cfg, shape.seq_len))
+            cfg, shape.global_batch, shape.seq_len, **flags)
+        info["flash_fallback_reason"] = flags["reason"]
         info["hbm_per_device"] = cm.hbm_estimate(
             cfg, "prefill", shape.global_batch, shape.seq_len, chips, 1,
             n_total)

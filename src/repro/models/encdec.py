@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.lm import chunked_xent
-from repro.nn.attention import std_positions
+from repro.nn.attention import packed_positions, segment_positions, std_positions
 from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
 from repro.nn.layers import dense, dense_init, embedding_init, rmsnorm, rmsnorm_init
 
@@ -73,11 +73,17 @@ def encdec_loss(params, batch, cfg: EncDecConfig, codes=None, qdq_fn=None):
     enc_out = encode(params, batch["frontend_embeds"], cfg, enc_codes, qdq_fn)
     B, St = batch["tokens"].shape
     x = params["embed"]["table"].astype(cfg.compute_dtype)[batch["tokens"]]
-    pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
-    with std_positions():              # built above -> provably standard
+    seg = batch.get("segment_ids")     # packed multi-utterance target rows
+    if seg is not None:
+        pos = packed_positions(seg)
+        posctx = segment_positions     # built above -> provably seg-standard
+    else:
+        pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
+        posctx = std_positions         # built above -> provably standard
+    with posctx():
         x, _, aux = stack_fwd(params["decoder"], x, pos, cfg.dec_stack,
                               mode="train", codes=dec_codes, qdq_fn=qdq_fn,
-                              enc_out=enc_out)
+                              enc_out=enc_out, segments=seg)
     x = rmsnorm(params["final_norm"], x, cfg.dec_stack.norm_eps)
     nll, cnt = chunked_xent(x, params["embed"]["table"], batch["labels"],
                             cfg.loss_chunk)

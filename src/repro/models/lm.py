@@ -14,7 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.attention import std_positions
+from repro.nn.attention import packed_positions, segment_positions, std_positions
 from repro.nn.blocks import StackConfig, stack_fwd, stack_init, stack_init_cache
 from repro.nn.layers import embedding_init, rmsnorm, rmsnorm_init
 from repro.nn.module import split_params
@@ -80,18 +80,37 @@ def _readout_table(params, cfg: LMConfig):
     return t  # (V, d)
 
 
-def lm_hidden(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
-    """Forward to final hidden states (B, S, d)."""
+def _positions_and_segments(batch):
+    """Resolve (pos, segments, std, segstd) from a batch.
+
+    ``segment_ids`` (B, S) int32 marks a packed multi-document batch; when the
+    batch carries no explicit positions they are rebuilt as the within-segment
+    arange (packed_positions), which is what declares them provably
+    segment-standard so the Pallas segment kernel is reachable under jit.
+    """
     B, S = batch["tokens"].shape
     pos = batch.get("positions")
-    std = pos is None                  # built below -> provably standard
+    seg = batch.get("segment_ids")
+    std = segstd = False
     if pos is None:
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if seg is not None:
+            pos = packed_positions(seg)
+            segstd = True              # built below -> provably seg-standard
+        else:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            std = True                 # built below -> provably standard
+    return pos, seg, std, segstd
+
+
+def lm_hidden(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
+    """Forward to final hidden states (B, S, d)."""
+    pos, seg, std, segstd = _positions_and_segments(batch)
     mrope = batch.get("mrope_positions") if cfg.mrope else None
     x = _embed_inputs(params, batch, cfg)
-    with std_positions(std):
+    with std_positions(std), segment_positions(segstd):
         x, _, aux = stack_fwd(params["stack"], x, pos, cfg.stack, mode="train",
-                              codes=codes, qdq_fn=qdq_fn, mrope=mrope)
+                              codes=codes, qdq_fn=qdq_fn, mrope=mrope,
+                              segments=seg)
     x = rmsnorm(params["final_norm"], x, cfg.stack.norm_eps)
     return x, aux
 
@@ -142,16 +161,12 @@ def lm_loss(params, batch, cfg: LMConfig, codes=None, qdq_fn=None):
 # ------------------------------------------------------------- serving -----
 def lm_prefill(params, batch, cfg: LMConfig):
     """Prefill: full-sequence forward returning last-position logits + caches."""
-    B, S = batch["tokens"].shape
-    pos = batch.get("positions")
-    std = pos is None                  # built below -> provably standard
-    if pos is None:
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pos, seg, std, segstd = _positions_and_segments(batch)
     mrope = batch.get("mrope_positions") if cfg.mrope else None
     x = _embed_inputs(params, batch, cfg)
-    with std_positions(std):
+    with std_positions(std), segment_positions(segstd):
         x, caches, _ = stack_fwd(params["stack"], x, pos, cfg.stack,
-                                 mode="prefill", mrope=mrope)
+                                 mode="prefill", mrope=mrope, segments=seg)
     x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.stack.norm_eps)
     logits = (x @ _readout_table(params, cfg).astype(x.dtype).T)
     return logits[:, 0, :], caches

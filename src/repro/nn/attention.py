@@ -11,12 +11,20 @@ Three execution paths:
     end-to-end: kernels.ops binds the Pallas backward kernels with
     jax.custom_vjp, so training runs the kernel in BOTH directions with
     only the (B, H, S) logsumexp residual saved — no O(S*S/chunk)
-    score residuals. Configurations outside the dispatch gate (packed
-    positions, ragged lengths, MLA's split qk/v dims, traced windows)
-    fall back to chunked/naive, which JAX differentiates natively.
+    score residuals. Packed multi-document batches run the kernel too:
+    ``segments`` (per-row non-decreasing int32 document ids) feed the
+    kernels' segment block masking when the constructor declares the
+    positions segment-standard (``segment_positions`` below), and MLA's
+    split qk/v dims use the kernels' independent Dv tiling. The remaining
+    out-of-gate configurations (ragged offsets without segment ids, traced
+    windows, non-block-divisible lengths) fall back to chunked/naive —
+    which also honor ``segments`` — and JAX differentiates them natively.
 
 Decode paths use full or ring (sliding-window) KV caches; MLA decode uses the
 compressed-cache *absorbed* formulation (cache holds only (c_kv, k_rope)).
+GQA decode over unwindowed full-length caches dispatches the ragged
+per-slot-length Pallas kernel (kernels.flash_attention.flash_decode): HBM
+reads scale with each row's actual length, not the cache capacity.
 """
 from __future__ import annotations
 
@@ -54,6 +62,39 @@ def std_positions(flag: bool = True):
         yield
     finally:
         _STD_POS.flag = prev
+
+
+# Packed-batch analog of std_positions: the kernels' segment masking keeps
+# causal/window terms on the global iota, which is only exact when positions
+# restart from 0 at every segment boundary (the within-segment arange). The
+# constructor that BUILDS positions from segment ids (packed_positions
+# below, used by models.lm/encdec) declares that contract here.
+_SEG_POS = threading.local()
+
+
+@contextlib.contextmanager
+def segment_positions(flag: bool = True):
+    """Declare that positions flowing into ``attention()`` below are the
+    within-segment arange of the ``segments`` array passed alongside them
+    (packed multi-document batch built by ``packed_positions``)."""
+    prev = getattr(_SEG_POS, "flag", False)
+    _SEG_POS.flag = bool(flag)
+    try:
+        yield
+    finally:
+        _SEG_POS.flag = prev
+
+
+def packed_positions(segments: jax.Array) -> jax.Array:
+    """Within-segment arange for a packed batch: segments (B, S) int32 with
+    NON-DECREASING per-row document ids -> positions restarting at 0 on
+    every document boundary ([0,0,1,1,1] -> [0,1,0,1,2])."""
+    B, S = segments.shape
+    idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), segments[:, 1:] != segments[:, :-1]], axis=1)
+    start = jax.lax.cummax(jnp.where(is_start, idx, 0), axis=1)
+    return idx - start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,11 +148,14 @@ def decode_index(index, batch: int) -> jax.Array:
 
 
 
-def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window) -> jax.Array:
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window,
+               q_seg=None, k_seg=None) -> jax.Array:
     """Additive bias (0 / NEG_INF). q_pos: (B, Sq), k_pos: (B, Sk) -> (B, Sq, Sk).
 
     ``window`` may be a traced int32 scalar; <= 0 means global attention.
     Cache slots with position < 0 are treated as empty (always masked).
+    ``q_seg``/``k_seg`` (packed batches) additionally mask every
+    cross-document pair: attention never crosses a segment boundary.
     """
     d = q_pos[:, :, None] - k_pos[:, None, :]
     ok = k_pos[:, None, :] >= 0
@@ -120,18 +164,21 @@ def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window) -> jax.
     if window is not None:
         w = jnp.asarray(window, jnp.int32)
         ok = ok & jnp.where(w > 0, d < w, True)
+    if q_seg is not None:
+        ok = ok & (q_seg[:, :, None] == k_seg[:, None, :])
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 # ======================================================= core attention ====
-def _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+def _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                     q_seg=None, k_seg=None):
     """q: (B, Sq, H, D); k: (B, Sk, K, D); v: (B, Sk, K, Dv) -> (B, Sq, H, Dv)."""
     B, Sq, H, D = q.shape
     K = k.shape[2]
     rep = H // K
     qr = q.reshape(B, Sq, K, rep, D).astype(jnp.float32) * scale
     scores = jnp.einsum("bqkrd,bskd->bqkrs", qr, k.astype(jnp.float32))
-    bias = _mask_bias(q_pos, k_pos, causal, window)  # (B, Sq, Sk)
+    bias = _mask_bias(q_pos, k_pos, causal, window, q_seg, k_seg)  # (B,Sq,Sk)
     scores = scores + bias[:, :, None, None, :]
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bqkrs,bskd->bqkrd", p, v.astype(jnp.float32))
@@ -139,7 +186,7 @@ def _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale):
 
 
 def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
-                       q_chunk, k_chunk):
+                       q_chunk, k_chunk, q_seg=None, k_seg=None):
     """Flash-style online softmax; outer scan over q chunks, inner over k.
 
     Sliding-window optimization: when ``window`` is a STATIC python int and
@@ -147,7 +194,9 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
     reads a static-size band of k/v ending at its own diagonal — executed
     FLOPs drop from O(S^2) to O(S * (window + q_chunk)) on every backend
     (the masked-but-computed chunks are not even loaded). Traced windows
-    fall back to the full masked sweep.
+    fall back to the full masked sweep. Segment ids (packed batches) ride
+    along with the positions; the band optimization stays sound because
+    segment masking only ever REMOVES pairs from the causal/window band.
     """
     B, Sq, H, D = q.shape
     Sk, K = k.shape[1], k.shape[2]
@@ -155,6 +204,7 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
     rep = H // K
     assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
     nq, nk = Sq // q_chunk, Sk // k_chunk
+    seg = q_seg is not None
 
     band = None
     if (isinstance(window, int) and window > 0 and causal and Sq == Sk):
@@ -166,13 +216,16 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     qpr = q_pos.reshape(B, nq, q_chunk)
+    qsr = q_seg.reshape(B, nq, q_chunk) if seg else None
 
-    def inner(qc, qp, ks, vs, kps, n_chunks):
+    def inner(qc, qp, qs, ks, vs, kps, kss, n_chunks):
         def k_step(carry, ki):
             acc, m, l = carry
-            kc, vc, kp = ki
+            kc, vc, kp = ki[0], ki[1], ki[2]
+            ksg = ki[3] if seg else None
             s = jnp.einsum("bqkrd,bskd->bqkrs", qc, kc)  # (B,qc,K,rep,kc)
-            s = s + _mask_bias(qp, kp, causal, window)[:, :, None, None, :]
+            s = s + _mask_bias(qp, kp, causal, window,
+                               qs, ksg)[:, :, None, None, :]
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -186,54 +239,68 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
         kr = ks.reshape(B, n_chunks, k_chunk, K, D)
         vr = vs.reshape(B, n_chunks, k_chunk, K, Dv)
         kpr = kps.reshape(B, n_chunks, k_chunk)
-        (acc, m, l), _ = jax.lax.scan(
-            k_step, (acc0, m0, l0),
-            (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpr.swapaxes(0, 1)))
+        xs = [kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpr.swapaxes(0, 1)]
+        if seg:
+            xs.append(kss.reshape(B, n_chunks, k_chunk).swapaxes(0, 1))
+        (acc, m, l), _ = jax.lax.scan(k_step, (acc0, m0, l0), tuple(xs))
         return acc / jnp.maximum(l, 1e-30)[..., None]
 
     if band is None:
         def q_step(_, xs):
-            qc, qp = xs
-            return None, inner(qc, qp, kf, vf, k_pos, nk)
+            qc, qp = xs[0], xs[1]
+            qs = xs[2] if seg else None
+            return None, inner(qc, qp, qs, kf, vf, k_pos, k_seg, nk)
 
-        _, outs = jax.lax.scan(q_step, None,
-                               (qr.swapaxes(0, 1), qpr.swapaxes(0, 1)))
+        qxs = [qr.swapaxes(0, 1), qpr.swapaxes(0, 1)]
+        if seg:
+            qxs.append(qsr.swapaxes(0, 1))
+        _, outs = jax.lax.scan(q_step, None, tuple(qxs))
     else:
         def q_step(_, xs):
-            qc, qp, qi = xs
+            qc, qp, qi = xs[0], xs[1], xs[2]
+            qs = xs[3] if seg else None
             start = jnp.clip(qi * q_chunk + q_chunk - band, 0, Sk - band)
             ks = jax.lax.dynamic_slice(kf, (0, start, 0, 0), (B, band, K, D))
             vs = jax.lax.dynamic_slice(vf, (0, start, 0, 0), (B, band, K, Dv))
             kps = jax.lax.dynamic_slice(k_pos, (0, start), (B, band))
-            return None, inner(qc, qp, ks, vs, kps, band // k_chunk)
+            kss = (jax.lax.dynamic_slice(k_seg, (0, start), (B, band))
+                   if seg else None)
+            return None, inner(qc, qp, qs, ks, vs, kps, kss, band // k_chunk)
 
-        _, outs = jax.lax.scan(
-            q_step, None,
-            (qr.swapaxes(0, 1), qpr.swapaxes(0, 1),
-             jnp.arange(nq, dtype=jnp.int32)))
+        qxs = [qr.swapaxes(0, 1), qpr.swapaxes(0, 1),
+               jnp.arange(nq, dtype=jnp.int32)]
+        if seg:
+            qxs.append(qsr.swapaxes(0, 1))
+        _, outs = jax.lax.scan(q_step, None, tuple(qxs))
     # outs: (nq, B, q_chunk, K, rep, Dv)
     out = outs.swapaxes(0, 1).reshape(B, Sq, H, Dv)
     return out.astype(q.dtype)
 
 
 def attention(q, k, v, q_pos, k_pos, *, causal, window, scale,
-              impl="chunked", q_chunk=512, k_chunk=512):
+              impl="chunked", q_chunk=512, k_chunk=512, segments=None):
     if impl == "flash":
         # TPU Pallas kernel path (repro.kernels.ops); falls back to chunked/
         # naive when the kernel does not support the configuration. Dropping
         # the position arrays is only sound for self-attention positions the
-        # constructor DECLARED standard (see std_positions above).
+        # constructor DECLARED standard (std_positions above) or declared the
+        # within-segment arange of ``segments`` (segment_positions above).
         from repro.kernels import ops as kops
-        std = getattr(_STD_POS, "flag", False) and q_pos is k_pos
+        hinted = q_pos is k_pos and (
+            getattr(_SEG_POS, "flag", False) if segments is not None
+            else getattr(_STD_POS, "flag", False))
         return kops.flash_attention(q, k, v,
-                                    None if std else q_pos,
-                                    None if std else k_pos,
+                                    None if hinted else q_pos,
+                                    None if hinted else k_pos,
+                                    segments=segments,
                                     causal=causal, window=window, scale=scale)
     if impl == "chunked" and q.shape[1] % q_chunk == 0 and k.shape[1] % k_chunk == 0 \
             and q.shape[1] >= q_chunk and k.shape[1] >= k_chunk:
         return _chunked_attention(q, k, v, q_pos, k_pos, causal, window,
-                                  scale, q_chunk, k_chunk)
-    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale)
+                                  scale, q_chunk, k_chunk,
+                                  q_seg=segments, k_seg=segments)
+    return _naive_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                            q_seg=segments, k_seg=segments)
 
 
 # ================================================================= GQA ======
@@ -299,17 +366,19 @@ def _gqa_qkv(p, x, q_pos, cfg: AttnConfig, mrope_positions=None):
 
 
 def gqa_fwd(p, x, q_pos, cfg: AttnConfig, window=None, mrope_positions=None,
-            return_cache=False):
+            return_cache=False, segments=None):
     """Self-attention over a full sequence (train / prefill).
 
     x: (B, S, d_model); q_pos: (B, S) int32. Returns y (and KV cache when
     ``return_cache``: rope-applied keys, values, and slot positions).
+    ``segments`` (B, S) int32 marks packed multi-document rows; attention
+    never crosses a document boundary.
     """
     B, S, _ = x.shape
     q, k, v = _gqa_qkv(p, x, q_pos, cfg, mrope_positions)
     out = attention(q, k, v, q_pos, q_pos, causal=cfg.causal, window=window,
                     scale=cfg.scale, impl=cfg.impl, q_chunk=cfg.q_chunk,
-                    k_chunk=cfg.k_chunk)
+                    k_chunk=cfg.k_chunk, segments=segments)
     y = out_proj(p["wo"], out)
     if return_cache:
         return y, {"k": k, "v": v, "pos": q_pos}
@@ -342,8 +411,17 @@ def gqa_decode(p, x, cache, index, cfg: AttnConfig, window=None,
     k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
     v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     cpos = cache["pos"].at[rows, slot].set(pos[:, 0])
-    out = _naive_attention(q, k, v, pos, cpos, causal=True, window=window,
-                           scale=cfg.scale)
+    from repro.kernels import ops as kops
+    if cfg.impl == "flash" and kops.flash_decode_gate(q.shape, k.shape, window):
+        # Ragged per-slot-length kernel: a full-length unwindowed cache has
+        # contiguous valid slots [0, idx], so the per-row length vector is
+        # idx + 1 and the kernel's k loop stops at ceil(len/BLK) — HBM reads
+        # scale with the row's actual length, not the cache capacity L.
+        lengths = jnp.minimum(idx + 1, L)
+        out = kops.flash_decode(q, k, v, lengths, scale=cfg.scale)
+    else:
+        out = _naive_attention(q, k, v, pos, cpos, causal=True, window=window,
+                               scale=cfg.scale)
     y = out_proj(p["wo"], out)
     return y, {"k": k, "v": v, "pos": cpos}
 
@@ -387,8 +465,13 @@ def _mla_ckv(p, x, pos, cfg: MLAConfig):
     return ckv, kr
 
 
-def mla_fwd(p, x, q_pos, cfg: MLAConfig, window=None, return_cache=False):
-    """Training / prefill MLA: expand compressed kv into per-head k/v."""
+def mla_fwd(p, x, q_pos, cfg: MLAConfig, window=None, return_cache=False,
+            segments=None):
+    """Training / prefill MLA: expand compressed kv into per-head k/v.
+
+    Dispatches the Pallas kernel with the SPLIT head dims — q/k carry
+    qk_nope+qk_rope, v carries v_head_dim — via the kernels' independent
+    Dv tiling (no concat/pad of v up to the qk dim)."""
     B, S, _ = x.shape
     H = cfg.num_heads
     q_nope, q_rope = _mla_q(p, x, q_pos, cfg)
@@ -401,7 +484,7 @@ def mla_fwd(p, x, q_pos, cfg: MLAConfig, window=None, return_cache=False):
                         axis=-1)
     out = attention(q, k, v, q_pos, q_pos, causal=True, window=window,
                     scale=cfg.scale, impl=cfg.impl, q_chunk=cfg.q_chunk,
-                    k_chunk=cfg.k_chunk)
+                    k_chunk=cfg.k_chunk, segments=segments)
     y = out_proj(p["wo"], out)
     if return_cache:
         return y, {"ckv": ckv, "kr": kr, "pos": q_pos}

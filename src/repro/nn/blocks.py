@@ -128,7 +128,8 @@ def block_init_cache(bd: BlockDef, sc: StackConfig, batch: int, length: int,
 
 
 def _block_fwd(p, x, pos, bd: BlockDef, sc: StackConfig, mode: str,
-               cache=None, index=None, mrope=None, enc_out=None):
+               cache=None, index=None, mrope=None, enc_out=None,
+               segments=None):
     """Returns (x, new_cache, aux) for one block in {train, prefill, decode}."""
     aux = {"moe_load_balance": jnp.zeros((), jnp.float32),
            "moe_z_loss": jnp.zeros((), jnp.float32)}
@@ -144,21 +145,23 @@ def _block_fwd(p, x, pos, bd: BlockDef, sc: StackConfig, mode: str,
         elif mode == "prefill":
             y, c = attn_lib.gqa_fwd(p["mix"], h, pos, sc.attn,
                                     window=bd.window or None,
-                                    mrope_positions=mrope, return_cache=True)
+                                    mrope_positions=mrope, return_cache=True,
+                                    segments=segments)
             new_cache["mix"] = c
         else:
             y = attn_lib.gqa_fwd(p["mix"], h, pos, sc.attn,
                                  window=bd.window or None,
-                                 mrope_positions=mrope)
+                                 mrope_positions=mrope, segments=segments)
     elif bd.kind == "mla":
         if mode == "decode":
             y, c = attn_lib.mla_decode(p["mix"], h, cache["mix"], index, sc.mla)
             new_cache["mix"] = c
         elif mode == "prefill":
-            y, c = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla, return_cache=True)
+            y, c = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla, return_cache=True,
+                                    segments=segments)
             new_cache["mix"] = c
         else:
-            y = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla)
+            y = attn_lib.mla_fwd(p["mix"], h, pos, sc.mla, segments=segments)
     elif bd.kind == "ssd":
         if mode == "decode":
             y, c = ssm_lib.ssm_decode(p["mix"], h, cache["mix"], sc.ssm)
@@ -242,11 +245,12 @@ def _apply_qdq(gp, codes, qdq_fn, defs):
 
 def stack_fwd(params, x, pos, sc: StackConfig, mode: str = "train",
               caches=None, index=None, codes=None, qdq_fn=None, mrope=None,
-              enc_out=None):
+              enc_out=None, segments=None):
     """Run the full stack.
 
     Returns (x, new_caches, aux) — caches is None for mode="train".
     codes: (num_layers,) int32 Tri-Accel precision codes (train mode only).
+    segments: (B, S) int32 packed-document ids (train/prefill attention).
     """
     aux = {"moe_load_balance": jnp.zeros((), jnp.float32),
            "moe_z_loss": jnp.zeros((), jnp.float32)}
@@ -269,7 +273,8 @@ def stack_fwd(params, x, pos, sc: StackConfig, mode: str = "train",
                 gpi = _apply_qdq(gpi, ci, qdq_fn, defs)
                 for i, bd in enumerate(defs):
                     xc, _, ai = _block_fwd(gpi[f"b{i}"], xc, pos, bd, sc,
-                                           "train", mrope=mrope, enc_out=enc_out)
+                                           "train", mrope=mrope, enc_out=enc_out,
+                                           segments=segments)
                     lb = lb + ai["moe_load_balance"]
                     zl = zl + ai["moe_z_loss"]
                 return (xc, lb, zl), None
@@ -284,7 +289,8 @@ def stack_fwd(params, x, pos, sc: StackConfig, mode: str = "train",
                 cs = {}
                 for i, bd in enumerate(defs):
                     xc, ci, _ = _block_fwd(gpi[f"b{i}"], xc, pos, bd, sc,
-                                           "prefill", mrope=mrope, enc_out=enc_out)
+                                           "prefill", mrope=mrope, enc_out=enc_out,
+                                           segments=segments)
                     cs[f"b{i}"] = ci
                 return xc, cs
 

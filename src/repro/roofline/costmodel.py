@@ -65,18 +65,25 @@ def attn_core(T: float, ctx: float, H: int, k_dim: int, v_dim: int,
 
 
 def _exec_ctx(S: float, window: int, causal_skip: bool,
-              window_skip: bool) -> float:
+              window_skip: bool, seg_factor: float = 1.0) -> float:
+    """``seg_factor`` = mean segment length / S for packed batches: the
+    segment-aware kernel also skips cross-document blocks, shrinking the
+    executed context by the same fraction. Only applies when block skipping
+    is active at all (the chunked fallback masks, it doesn't skip)."""
     ctx = S
     if window_skip and window and window > 0:
         ctx = min(float(window), S)
     elif causal_skip:
         ctx = S / 2.0
+    if (causal_skip or window_skip) and seg_factor < 1.0:
+        ctx *= seg_factor
     return ctx
 
 
 def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
               causal_skip=False, window_skip=False, enc_len: float = 0.0,
-              decode_ctx: Optional[float] = None) -> Costs:
+              decode_ctx: Optional[float] = None,
+              seg_factor: float = 1.0) -> Costs:
     c = Costs()
     dm = sc.d_model
     if bd.kind == "gqa":
@@ -91,7 +98,8 @@ def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
                 ctx = min(float(bd.window), ctx)
         elif bd.window and window_skip:
             # flash kernel: masked blocks are skipped, executed ctx ~ window
-            ctx = min(float(bd.window), S)
+            # (packed rows clip further: segments shorter than the window)
+            ctx = min(float(bd.window), S) * min(seg_factor, 1.0)
         elif bd.window:
             # the chunked path executes a static band for static windows
             band = -(-(bd.window - 1 + a.q_chunk) // a.k_chunk) * a.k_chunk
@@ -99,7 +107,8 @@ def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
         else:
             # causal block skipping only halves genuinely causal attention
             # (enc-dec encoders are bidirectional even under the kernel)
-            ctx = _exec_ctx(S, 0, causal_skip and a.causal, window_skip)
+            ctx = _exec_ctx(S, 0, causal_skip and a.causal, window_skip,
+                            seg_factor)
         c += attn_core(T, ctx, H, D, D, K)
     elif bd.kind == "mla":
         m = sc.mla
@@ -113,7 +122,7 @@ def block_fwd(bd: BlockDef, sc: StackConfig, T: float, S: float,
         c += gemm(T, dm, m.kv_lora_rank)           # down kv
         c += gemm(T, dm, m.qk_rope_dim)            # k_rope
         ctx = decode_ctx if decode_ctx is not None else \
-            _exec_ctx(S, 0, causal_skip, window_skip)
+            _exec_ctx(S, 0, causal_skip, window_skip, seg_factor)
         if decode_ctx is None:
             # training/prefill: expand per-head k/v from c_kv
             c += gemm(T, m.kv_lora_rank, H * m.qk_nope_dim)
@@ -209,12 +218,16 @@ def encdec_fwd_costs(cfg: EncDecConfig, B: float, S_enc: float, S_dec: float,
     return c
 
 
-def flash_skip_flags(cfg, seq_len: int) -> dict:
+def flash_skip_flags(cfg, seq_len: int, segments_per_row: int = 1) -> dict:
     """Block-skip flags matching the kernels.ops dispatch gate: train and
     prefill self-attention run the Pallas flash kernel — which SKIPS fully
     masked blocks in forward AND backward — when the config selects
-    impl='flash' and the static gate holds (block-divisible S, matching
-    qk/v head dims; MLA training splits them, so it stays on chunked).
+    impl='flash' and the static gate holds (block-divisible S; MLA's split
+    qk/v head dims use the kernel's independent Dv tiling). The ``reason``
+    field says WHY a config priced the chunked path (empty = kernel path),
+    mirroring kernels.ops.kernel_fallback_reason; dryrun records it.
+    ``segments_per_row`` > 1 (packed batches) adds the segment block-skip
+    term: executed context shrinks by seg_factor = 1/segments_per_row.
     Feed the result to train_costs/prefill_costs so the roofline reflects
     the kernel path's executed FLOPs."""
     from repro.kernels.flash_attention import BK, BQ
@@ -222,34 +235,38 @@ def flash_skip_flags(cfg, seq_len: int) -> dict:
         sc, S = cfg.dec_stack, seq_len // 2     # per-stack length
     else:
         sc, S = getattr(cfg, "stack", None), seq_len
+    seg_f = 1.0 / max(int(segments_per_row), 1)
     if sc is None:                              # stackless (vision) configs
-        return {"causal_skip": False, "window_skip": False}
-    if sc.attn is not None:
-        eligible = sc.attn.impl == "flash"
-    elif sc.mla is not None:
-        m = sc.mla
-        eligible = (m.impl == "flash"
-                    and m.qk_nope_dim + m.qk_rope_dim == m.v_head_dim)
+        return {"causal_skip": False, "window_skip": False,
+                "seg_factor": 1.0, "reason": "no attention stack"}
+    if sc.attn is not None or sc.mla is not None:
+        impl = (sc.attn or sc.mla).impl
+        reason = "" if impl == "flash" else f"impl={impl!r} is not 'flash'"
     else:
-        eligible = False
-    eligible = eligible and S >= max(BQ, BK) and S % BQ == 0 and S % BK == 0
-    return {"causal_skip": eligible, "window_skip": eligible}
+        reason = "no attention blocks (ssm/rglru stack)"
+    if not reason and not (S >= max(BQ, BK) and S % BQ == 0 and S % BK == 0):
+        reason = f"seq len {S} not divisible by kernel blocks ({BQ}, {BK})"
+    eligible = not reason
+    return {"causal_skip": eligible, "window_skip": eligible,
+            "seg_factor": seg_f if eligible else 1.0, "reason": reason}
 
 
 # ------------------------------------------------------------- top level ---
 def train_costs(cfg, global_batch: int, seq_len: int,
-                causal_skip=False, window_skip=False) -> Costs:
+                causal_skip=False, window_skip=False, seg_factor=1.0,
+                reason=None) -> Costs:
+    del reason                       # flash_skip_flags diagnostic, not a cost
     remat = (cfg.dec_stack.remat if isinstance(cfg, EncDecConfig)
              else cfg.stack.remat)
     factor = 4.0 if remat else 3.0
     if isinstance(cfg, EncDecConfig):
         fwd = encdec_fwd_costs(cfg, global_batch, seq_len // 2, seq_len // 2,
                                causal_skip=causal_skip,
-                               window_skip=window_skip)
+                               window_skip=window_skip, seg_factor=seg_factor)
     else:
         T = global_batch * seq_len
         fwd = lm_fwd_costs(cfg, T, float(seq_len), causal_skip=causal_skip,
-                           window_skip=window_skip)
+                           window_skip=window_skip, seg_factor=seg_factor)
     # optimizer + control update traffic: master/momentum fp32 read+write
     n_params = None
     return Costs(fwd.flops * factor, fwd.bytes * factor)
@@ -323,6 +340,7 @@ def opt_traffic(n_params: float, slots: int = 1, fused: bool = False,
 
 
 def prefill_costs(cfg, global_batch: int, seq_len: int, **kw) -> Costs:
+    kw.pop("reason", None)           # flash_skip_flags diagnostic, not a cost
     if isinstance(cfg, EncDecConfig):
         return encdec_fwd_costs(cfg, global_batch, seq_len // 2,
                                 seq_len // 2, **kw)
@@ -330,23 +348,29 @@ def prefill_costs(cfg, global_batch: int, seq_len: int, **kw) -> Costs:
 
 
 def decode_costs(cfg, global_batch: int, cache_len: int,
-                 enc_len: float = 1536.0) -> Costs:
+                 enc_len: float = 1536.0,
+                 mean_len: Optional[float] = None) -> Costs:
+    """One decode step. ``mean_len`` (ragged term): the serve engine's mean
+    LIVE slot length — the per-slot-length Pallas decode kernel reads
+    ceil(len/BLK) k blocks per row, so cache-read bytes and attention FLOPs
+    scale with mean_len, not the cache capacity ``cache_len``."""
     T = float(global_batch)
+    ctx = float(cache_len if mean_len is None else mean_len)
     if isinstance(cfg, EncDecConfig):
         c = stack_fwd_costs(cfg.dec_stack, T, float(cache_len),
-                            decode_ctx=float(cache_len), enc_len=enc_len,
+                            decode_ctx=ctx, enc_len=enc_len,
                             window_skip=True)
         c += gemm(T, cfg.d_model, cfg.vocab_size)
         # cache reads dominate traffic: charged in attn_core k/v term? No —
         # decode reads the whole cache per step:
         a = cfg.dec_stack.attn
-        c += Costs(0, cache_len * T * a.num_kv_heads * a.head_dim * 2 * BF16
+        c += Costs(0, ctx * T * a.num_kv_heads * a.head_dim * 2 * BF16
                    * cfg.dec_stack.num_layers)
         return c
     c = stack_fwd_costs(cfg.stack, T, float(cache_len),
-                        decode_ctx=float(cache_len), window_skip=True)
+                        decode_ctx=ctx, window_skip=True)
     c += gemm(T, cfg.d_model, cfg.vocab_size)
-    c += Costs(0, _cache_read_bytes(cfg, T, cache_len))
+    c += Costs(0, _cache_read_bytes(cfg, T, ctx))
     return c
 
 

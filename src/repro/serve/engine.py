@@ -200,6 +200,13 @@ class ServeEngine:
         dec = make_decode_fn(self.task)
 
         def decode(params, caches, token, index, valid):
+            # ``index`` is the (rung,) vector of live slot positions — each
+            # slot's current length minus one. It is a RUNTIME operand of the
+            # ("decode", rung, tier) executable (no recompiles as slots
+            # advance), and downstream nn.attention.gqa_decode turns it into
+            # the per-row length vector feeding the ragged flash_decode
+            # kernel: the k-block loop stops at ceil(len/BLK) per row, so
+            # decode HBM reads scale with actual slot lengths, not capacity.
             # ``valid`` masks the per-row cache WRITE: empty and
             # mid-chunked-prefill slots keep their rows bit-identical (a
             # decode step must not advance another request's state — SSM/

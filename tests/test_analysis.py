@@ -181,6 +181,39 @@ def test_r5_wellformed_tiling_is_clean():
     assert call.grid == (4,) and call.grid_size == 4
 
 
+def test_r5_covers_new_attention_variant_paths():
+    """The segment/MLA/ragged kernel traces are registered hot paths, R5
+    walks ALL their pallas_calls (fwd + the three backward kernels for the
+    attention variants), and the production geometry lints clean."""
+    from repro.analysis import hotpaths
+    by_name = {p.name: p for p in hotpaths.kernel_paths()}
+    for name, ncalls in (("kernel/flash_attention_packed", 4),
+                         ("kernel/flash_attention_mla", 4),
+                         ("kernel/flash_decode_ragged", 1)):
+        assert name in by_name, sorted(by_name)
+        p = by_name[name]
+        assert len(list(pallas_calls(p.jaxpr))) == ncalls
+        assert pallas_findings(p.jaxpr) == []
+
+
+def test_r5_fires_on_seeded_ragged_decode_violation(monkeypatch):
+    """A decode-block pick that does not tile the cache length must be a
+    lint ERROR on the ragged decode trace (the real decode_block only
+    returns divisors; this seeds the violation R5 is there to catch)."""
+    from repro.kernels import flash_attention as fa
+    monkeypatch.setattr(fa, "decode_block", lambda L: 48)
+    # fresh shapes (L=528, 528 % 48 == 0 is false: 528 = 11*48... use 520)
+    q = jax.ShapeDtypeStruct((2, 1, 4, 64), jnp.float32)
+    kv = jax.ShapeDtypeStruct((2, 520, 2, 64), jnp.float32)
+    lengths = jax.ShapeDtypeStruct((2,), jnp.int32)
+    jx = jax.make_jaxpr(
+        lambda a, b, c, l: fa.flash_decode(a, b, c, l, interpret=True))(
+            q, kv, kv, lengths)
+    found = pallas_findings(jx)
+    assert any(sev == "error" and "does not tile" in msg
+               for sev, _, msg in found), found
+
+
 # ------------------------------------------------------------------- R6 --
 _AG_HLO = """\
 HloModule jit_decode

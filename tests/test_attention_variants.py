@@ -1,0 +1,365 @@
+"""Attention-shape variants on the kernel path (ISSUE 10): packed-sequence
+segment masking, MLA split head dims (Dv != Dq), and ragged per-slot-length
+decode — each against its jnp fallback oracle, plus jit reachability and
+zero-recompile probes mirroring test_kernels.py / test_flash_train.py.
+
+Fast leg: one representative point per variant. The full causal x window x
+GQA grid and the BENCH_attention schema gate run under ``-m slow``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _qkv(B, S, H, K, Dq, Dv=None, dtype=jnp.float32):
+    Dv = Dq if Dv is None else Dv
+    q = jax.random.normal(KEY, (B, S, H, Dq)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, Dq)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, Dv)).astype(dtype)
+    return q, k, v
+
+
+def _segments(B, S, docs):
+    """Non-decreasing doc ids, ``docs`` equal docs per row."""
+    return jnp.broadcast_to(
+        jnp.repeat(jnp.arange(docs, dtype=jnp.int32), S // docs)[None], (B, S))
+
+
+def _grad_pair(fn_got, fn_want, q, k, v, atol):
+    loss_g = lambda q, k, v: jnp.sum(jnp.square(fn_got(q, k, v)))
+    loss_w = lambda q, k, v: jnp.sum(jnp.square(fn_want(q, k, v)))
+    got = jax.grad(loss_g, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss_w, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=atol,
+                                   err_msg=name)
+
+
+# ===================================================== packed segments ======
+PACKED_GRID_FAST = [(256, (2, 2), True, 0, 4)]
+PACKED_GRID_FULL = [
+    (256, (4, 2), True, 0, 2), (256, (4, 1), True, 0, 4),
+    (512, (4, 2), True, 0, 4), (512, (4, 2), True, 100, 4),
+    (512, (2, 2), False, 0, 4), (512, (4, 1), False, 300, 8),
+]
+
+
+def _packed_case(S, HK, causal, window, docs):
+    """Kernel (segments arg, no positions) vs chunked oracle with the same
+    segment ids — forward AND all three gradients (dO.O/dQ/dK-dV kernels)."""
+    from repro.nn.attention import _chunked_attention
+    H, K = HK
+    B, D = 1, 16
+    q, k, v = _qkv(B, S, H, K, D)
+    seg = _segments(B, S, docs)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kernel = lambda q, k, v: ops.flash_attention(
+        q, k, v, segments=seg, causal=causal, window=window or None)
+    oracle = lambda q, k, v: _chunked_attention(
+        q, k, v, pos, pos, causal, window or None, D ** -0.5, 256, 256,
+        q_seg=seg, k_seg=seg)
+    np.testing.assert_allclose(np.asarray(kernel(q, k, v)),
+                               np.asarray(oracle(q, k, v)), atol=3e-6)
+    _grad_pair(kernel, oracle, q, k, v, 1e-4)
+    # the segment mask genuinely bites: dense (no segments) must differ
+    dense = ops.flash_attention(q, k, v, causal=causal, window=window or None)
+    assert not np.allclose(np.asarray(kernel(q, k, v)), np.asarray(dense),
+                           atol=1e-3)
+
+
+@pytest.mark.parametrize("S,HK,causal,window,docs", PACKED_GRID_FAST)
+def test_packed_segments_gradcheck(S, HK, causal, window, docs):
+    _packed_case(S, HK, causal, window, docs)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("S,HK,causal,window,docs", PACKED_GRID_FULL)
+def test_packed_segments_gradcheck_full_grid(S, HK, causal, window, docs):
+    """Full segments x causal x window x GQA grid, incl. multi-block S=512
+    (segment block skipping crosses tile boundaries)."""
+    _packed_case(S, HK, causal, window, docs)
+
+
+def test_packed_segments_uneven_docs():
+    """Ragged doc boundaries that do NOT align with the 256-block grid: the
+    range-overlap block skip must keep straddling blocks."""
+    B, S, H, K, D = 1, 512, 2, 2, 16
+    q, k, v = _qkv(B, S, H, K, D)
+    starts = jnp.asarray([0, 100, 301, 450])
+    seg = jnp.sum(jnp.arange(S)[None, :, None] >= starts[None, None, :],
+                  axis=-1).astype(jnp.int32) - 1
+    want = ref.flash_attention_ref(q, k, v, segments=seg, causal=True)
+    got = ops.flash_attention(q, k, v, segments=seg, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+
+def test_packed_kernel_reachable_from_lm_loss_under_jit():
+    """batch["segment_ids"] through models/lm: packed_positions + the
+    segment_positions hint must land on the Pallas kernels under jit, and
+    gradients must match the chunked impl on the same packed batch."""
+    from conftest import count_flash_kernel_calls
+    from repro.models.lm import lm_init, lm_loss
+    from repro.nn.module import split_params
+    from test_flash_train import _flash_lm
+
+    S = 256
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (2, S), 0, 64),
+             "labels": jax.random.randint(key, (2, S), 0, 64),
+             "segment_ids": _segments(2, S, 4)}
+    grads = {}
+    for impl in ("flash", "chunked"):
+        cfg = _flash_lm(impl=impl)
+        params = lm_init(jax.random.PRNGKey(1), cfg)
+        pvals, _ = split_params(params)
+        loss = lambda p: lm_loss(p, batch, cfg)[0]
+        if impl == "flash":
+            with count_flash_kernel_calls() as calls:
+                grads[impl] = jax.jit(jax.grad(loss))(pvals)
+            assert calls["fwd"] >= 1 and calls["bwd"] >= 1, calls
+        else:
+            grads[impl] = jax.jit(jax.grad(loss))(pvals)
+    for a, b in zip(jax.tree.leaves(grads["flash"]),
+                    jax.tree.leaves(grads["chunked"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_packed_without_hint_falls_back_with_reason():
+    """Segments + positions the dispatch cannot prove packed-standard must
+    fall back (segment semantics preserved by the oracle) and surface a
+    once-per-reason warning naming segment_positions."""
+    import warnings
+    B, S, H, K, D = 1, 256, 2, 2, 16
+    q, k, v = _qkv(B, S, H, K, D)
+    seg = _segments(B, S, 4)
+
+    @jax.jit
+    def f(q, k, v, pos):                  # traced positions: no proof
+        return ops.flash_attention(q, k, v, pos, pos, segments=seg,
+                                   causal=True)
+
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ops._WARNED_FALLBACKS.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = f(q, k, v, pos)
+    msgs = [str(w.message) for w in rec
+            if "kernel gate failed" in str(w.message)]
+    assert msgs and "segment_positions" in msgs[0], msgs
+    want = ref.flash_attention_ref(q, k, v, segments=seg, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-6)
+
+
+# ===================================================== MLA: Dv != Dq ========
+@pytest.mark.parametrize("Dq,Dv", [(96, 64), (64, 128)])
+def test_mla_split_head_dims_parity(Dq, Dv):
+    """Value head dim independent of the q/k dim — both narrower (MLA) and
+    wider than Dq — forward + grads vs the jnp oracle."""
+    B, S, H, K = 1, 256, 2, 2
+    q, k, v = _qkv(B, S, H, K, Dq, Dv)
+    kernel = lambda q, k, v: ops.flash_attention(q, k, v, causal=True)
+    oracle = lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True)
+    got = kernel(q, k, v)
+    assert got.shape == (B, S, H, Dv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle(q, k, v)),
+                               atol=3e-6)
+    _grad_pair(kernel, oracle, q, k, v, 1e-4)
+
+
+def _mla_lm(impl):
+    from repro.models.lm import LMConfig
+    from repro.nn.attention import MLAConfig
+    from repro.nn.blocks import BlockDef, StackConfig
+    mla = MLAConfig(d_model=64, num_heads=2, q_lora_rank=None,
+                    kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=32,
+                    v_head_dim=48, impl=impl)
+    stack = StackConfig(segments=(((BlockDef("mla", "dense"),), 2),),
+                        d_model=64, d_ff=128, mla=mla)
+    return LMConfig(name="mla-tiny", family="dense", vocab_size=64,
+                    stack=stack, tie_embeddings=True)
+
+
+def test_mla_train_reaches_kernel_and_matches_chunked():
+    """MLA training (Dq=64, Dv=48) runs the real kernel — the old dispatch
+    gate rejected v_head_dim != qk dim — with grads matching the chunked
+    fallback it used to take."""
+    from conftest import count_flash_kernel_calls
+    from repro.models.lm import lm_init, lm_loss
+    from repro.nn.module import split_params
+
+    S = 256
+    key = jax.random.PRNGKey(2)
+    batch = {"tokens": jax.random.randint(key, (2, S), 0, 64),
+             "labels": jax.random.randint(key, (2, S), 0, 64)}
+    grads = {}
+    for impl in ("flash", "chunked"):
+        cfg = _mla_lm(impl)
+        params = lm_init(jax.random.PRNGKey(3), cfg)
+        pvals, _ = split_params(params)
+        loss = lambda p: lm_loss(p, batch, cfg)[0]
+        if impl == "flash":
+            with count_flash_kernel_calls() as calls:
+                grads[impl] = jax.jit(jax.grad(loss))(pvals)
+            assert calls["fwd"] >= 1 and calls["bwd"] >= 1, calls
+        else:
+            grads[impl] = jax.jit(jax.grad(loss))(pvals)
+    for a, b in zip(jax.tree.leaves(grads["flash"]),
+                    jax.tree.leaves(grads["chunked"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_mla_fallback_reason_no_longer_fires_on_head_dims():
+    """The q/v head-dim mismatch is not a fallback reason any more; a real
+    q/k mismatch still is."""
+    assert ops.kernel_fallback_reason(
+        (1, 256, 2, 96), (1, 256, 2, 96), (1, 256, 2, 64),
+        None, None, None) == ""
+    reason = ops.kernel_fallback_reason(
+        (1, 256, 2, 96), (1, 256, 2, 64), (1, 256, 2, 64),
+        None, None, None)
+    assert "q/k head dims differ" in reason
+
+
+# ===================================================== ragged decode ========
+def _ragged_patterns(B, L):
+    return {"all_full": [L] * B,
+            "half": [L // 2] * B,
+            "mixed": [1 + (i * L) // B for i in range(B)],
+            "all_one": [1] * B}
+
+
+def _decode_qkv(B, L, H, K, D, key=KEY):
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, K, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("pattern", ["all_full", "half", "mixed", "all_one"])
+def test_ragged_decode_parity(pattern):
+    B, L, H, K, D = 4, 256, 4, 2, 16
+    q, k, v = _decode_qkv(B, L, H, K, D)
+    lengths = jnp.asarray(_ragged_patterns(B, L)[pattern], jnp.int32)
+    got = ops.flash_decode(q, k, v, lengths)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    assert got.shape == (B, 1, H, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+
+@pytest.mark.parametrize("pattern", ["all_full", "half", "mixed", "all_one"])
+def test_ragged_decode_bitexact_invariance(pattern):
+    """Slots beyond a row's length are dead: replacing them with garbage
+    cannot change a single bit of the output — the proof the kernel never
+    reads (numerically) past the ragged boundary."""
+    B, L, H, K, D = 4, 256, 4, 2, 16
+    q, k, v = _decode_qkv(B, L, H, K, D)
+    lengths = jnp.asarray(_ragged_patterns(B, L)[pattern], jnp.int32)
+    base = np.asarray(ops.flash_decode(q, k, v, lengths))
+    iota = jnp.arange(L)[None, :, None, None]
+    dead = iota >= lengths[:, None, None, None]
+    k2 = jnp.where(dead, 1e30, k)
+    v2 = jnp.where(dead, -1e30, v)
+    poisoned = np.asarray(ops.flash_decode(q, k2, v2, lengths))
+    np.testing.assert_array_equal(base, poisoned)
+
+
+@pytest.mark.parametrize("pattern", ["all_full", "mixed", "all_one"])
+def test_ragged_decode_rows_independent(pattern):
+    """Each row bit-equals the single-row call with the same capacity — a
+    full-length row IS the dense full-window decode, and batching it next
+    to a length-1 row changes nothing."""
+    B, L, H, K, D = 4, 256, 4, 2, 16
+    q, k, v = _decode_qkv(B, L, H, K, D)
+    lengths = jnp.asarray(_ragged_patterns(B, L)[pattern], jnp.int32)
+    batched = np.asarray(ops.flash_decode(q, k, v, lengths))
+    for b in range(B):
+        solo = np.asarray(ops.flash_decode(q[b:b + 1], k[b:b + 1],
+                                           v[b:b + 1], lengths[b:b + 1]))
+        np.testing.assert_array_equal(batched[b:b + 1], solo,
+                                      err_msg=f"row {b} ({pattern})")
+
+
+def test_ragged_decode_reachable_from_gqa_decode_zero_recompile():
+    """nn.attention.gqa_decode dispatches the ragged kernel for flash-impl
+    full-length caches, the per-row index vector becomes the length vector
+    (parity vs the naive masked path), and changing the lengths does NOT
+    retrace — they are a runtime operand."""
+    from repro.kernels import flash_attention as _fa
+    from repro.nn.attention import AttnConfig, gqa_decode, gqa_init
+    from repro.nn.module import split_params
+
+    B, L, D = 4, 256, 16
+    cfg = AttnConfig(d_model=32, num_heads=2, num_kv_heads=2, head_dim=D,
+                     rope_theta=10000.0, impl="flash")
+    params, _ = split_params(gqa_init(jax.random.PRNGKey(4), cfg))
+    key = jax.random.fold_in(KEY, 9)
+    x = jax.random.normal(key, (B, 1, 32))
+    cache = {"k": jax.random.normal(jax.random.fold_in(key, 1), (B, L, 2, D)),
+             "v": jax.random.normal(jax.random.fold_in(key, 2), (B, L, 2, D)),
+             "pos": jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None],
+                                     (B, L))}
+    traces = []
+    orig = _fa.flash_decode
+    _fa.flash_decode = lambda *a, **kw: traces.append(1) or orig(*a, **kw)
+    try:
+        @jax.jit
+        def step(x, cache, index):
+            return gqa_decode(params, x, cache, index, cfg, window=None)
+
+        idx1 = jnp.asarray([10, 100, 200, 255], jnp.int32)
+        out, _ = step(x, cache, idx1)
+        assert traces, "gqa_decode did not dispatch the ragged kernel"
+        n_traces = len(traces)
+        out2, _ = step(x, cache, jnp.asarray([0, 1, 50, 128], jnp.int32))
+        assert len(traces) == n_traces, "lengths changed -> retrace"
+    finally:
+        _fa.flash_decode = orig
+    # parity vs the naive masked path the fallback takes
+    cfg_c = AttnConfig(d_model=32, num_heads=2, num_kv_heads=2, head_dim=D,
+                       rope_theta=10000.0, impl="chunked")
+    want, _ = gqa_decode(params, x, cache, idx1, cfg_c, window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-6)
+
+
+def test_windowed_cache_stays_on_naive_decode():
+    """A sliding-window decode ring-buffers the cache — slot validity is not
+    a contiguous prefix, so the ragged kernel must NOT engage."""
+    assert not ops.flash_decode_gate((4, 1, 2, 16), (4, 256, 2, 16), 64)
+    assert ops.flash_decode_gate((4, 1, 2, 16), (4, 256, 2, 16), None)
+    # non-tileable cache lengths are also rejected
+    assert not ops.flash_decode_gate((4, 1, 2, 16), (4, 37, 2, 16), None)
+
+
+# ===================================================== bench schema gate ====
+@pytest.mark.slow
+def test_bench_attention_artifact_schema(tmp_path):
+    """benchmarks/bench_attention.py --quick end-to-end: artifact validates
+    against its schema, ragged bytes scale with mean slot length, and the
+    packed row beats (or at minimum prices below) dense modeled bytes."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import bench_attention
+
+    out = tmp_path / "BENCH_attention.json"
+    doc = bench_attention.main(quick=True, out=str(out))
+    assert out.exists()
+    assert bench_attention.validate(doc) == []
+    ragged = {r["pattern"]: r for r in doc["ragged_decode"]}
+    assert set(ragged) == set(bench_attention.RAGGED_PATTERNS)
+    full = ragged["all_full"]
+    assert full["modeled_kv_mb"] == pytest.approx(full["dense_kv_mb"])
+    for pat in ("half", "mixed", "all_one"):
+        r = ragged[pat]
+        assert r["modeled_kv_mb"] < r["dense_kv_mb"], pat
+        assert r["mean_len"] < full["mean_len"], pat
+    workloads = {r["workload"] for r in doc["rows"]}
+    assert {"dense", "packed", "mla"} <= workloads
+    assert any(s["workload"] == "packed" for s in doc["speedups"])

@@ -34,22 +34,35 @@ def test_train_flops_bracket_model_flops(arch):
 
 def test_flash_skip_flags_follow_dispatch_gate():
     """The roofline skip flags mirror kernels.ops: causal block skipping
-    cuts executed train FLOPs for flash-impl attention archs, while MLA
-    (split qk/v dims) and attention-free archs stay on the full-sweep
-    numbers."""
+    cuts executed train FLOPs for flash-impl attention archs — INCLUDING
+    MLA since the kernel's independent Dv tiling took split qk/v dims —
+    while attention-free archs stay on the full-sweep numbers, with the
+    ``reason`` field saying why."""
     s = get_arch_module("smollm-135m").config()
     fl = cm.flash_skip_flags(s, 4096)
-    assert fl["causal_skip"] and fl["window_skip"]
+    assert fl["causal_skip"] and fl["window_skip"] and fl["reason"] == ""
     assert cm.train_costs(s, 8, 4096, **fl).flops < \
         cm.train_costs(s, 8, 4096).flops
-    # non-block-divisible S fails the gate
-    assert not cm.flash_skip_flags(s, 100)["causal_skip"]
-    for arch in ("deepseek-v2-lite-16b", "mamba2-370m"):
-        cfg = get_arch_module(arch).config()
-        fl = cm.flash_skip_flags(cfg, 4096)
-        assert not fl["causal_skip"]
-        assert cm.train_costs(cfg, 8, 4096, **fl).flops == \
-            cm.train_costs(cfg, 8, 4096).flops
+    # non-block-divisible S fails the gate, and says so
+    fl100 = cm.flash_skip_flags(s, 100)
+    assert not fl100["causal_skip"] and "not divisible" in fl100["reason"]
+    # MLA: the Dv != Dq head dims no longer force the chunked price
+    d = get_arch_module("deepseek-v2-lite-16b").config()
+    fld = cm.flash_skip_flags(d, 4096)
+    assert fld["causal_skip"] and fld["reason"] == ""
+    assert cm.train_costs(d, 8, 4096, **fld).flops < \
+        cm.train_costs(d, 8, 4096).flops
+    # attention-free stacks stay ineligible
+    m = get_arch_module("mamba2-370m").config()
+    flm = cm.flash_skip_flags(m, 4096)
+    assert not flm["causal_skip"] and flm["reason"]
+    assert cm.train_costs(m, 8, 4096, **flm).flops == \
+        cm.train_costs(m, 8, 4096).flops
+    # packed batches shrink executed context further (segment block skip)
+    flp = cm.flash_skip_flags(s, 4096, segments_per_row=4)
+    assert flp["seg_factor"] == 0.25
+    assert cm.train_costs(s, 8, 4096, **flp).flops < \
+        cm.train_costs(s, 8, 4096, **fl).flops
     # enc-dec: decoder-causal skipping must NOT halve the bidirectional
     # encoder, so the saving stays below a pure-causal arch's
     e = get_arch_module("seamless-m4t-large-v2").config()
@@ -69,6 +82,19 @@ def test_decode_costs_scale_with_cache():
     a = cm.decode_costs(m, 128, 1024).flops
     b = cm.decode_costs(m, 128, 524288).flops
     assert abs(b - a) / a < 1e-6  # O(1) state: no growth
+
+
+def test_ragged_decode_costs_scale_with_mean_len():
+    """The ragged term: per-slot-length decode prices cache reads and
+    attention FLOPs at the mean LIVE length, not the cache capacity."""
+    cfg = get_arch_module("stablelm-1.6b").config()
+    full = cm.decode_costs(cfg, 128, 32768)
+    short = cm.decode_costs(cfg, 128, 32768, mean_len=1024.0)
+    assert short.flops < full.flops
+    assert short.bytes < full.bytes
+    # mean_len == capacity degenerates to the dense price
+    same = cm.decode_costs(cfg, 128, 32768, mean_len=32768.0)
+    assert abs(same.flops - full.flops) / full.flops < 1e-9
 
 
 def test_window_band_reduces_train_flops():
